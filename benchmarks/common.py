@@ -1,0 +1,75 @@
+"""Shared benchmark utilities: timing, subprocess multi-device runs, and the
+energy model used for the paper's Table 1 / Fig. 6 analogues.
+
+Energy model (documented, since the CPU host has no TPU power rails):
+  P_chip = 170 W            (TPU v5e nameplate, ~compute-bound)
+  P_host = 250 W            (host CPUs amortized across the job)
+  E = T * (P_host + n_chips * P_chip * util),  util from the roofline
+      (dominant-term occupancy; idle chips draw ~0.35 * P_chip)
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import statistics
+import subprocess
+import sys
+import time
+
+P_CHIP = 170.0
+P_HOST = 250.0
+IDLE_FRAC = 0.35
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DRYRUN_DIR = os.path.join(REPO, "experiments", "dryrun")
+OUT_DIR = os.path.join(REPO, "experiments", "bench")
+
+
+def time_fn(fn, *args, repeat: int = 5, warmup: int = 1):
+    """(median_s, std_s) of fn(*args) with block_until_ready."""
+    import jax
+
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    times = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args))
+        times.append(time.perf_counter() - t0)
+    return (statistics.median(times),
+            statistics.stdev(times) if len(times) > 1 else 0.0)
+
+
+def run_subprocess(script: str, *, devices: int = 1, timeout: int = 1200,
+                   x64: bool = True) -> str:
+    """Run a python snippet with N host-platform devices; returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    pre = ("import jax; jax.config.update('jax_enable_x64', True)\n"
+           if x64 else "")
+    res = subprocess.run([sys.executable, "-c", pre + script], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if res.returncode != 0:
+        raise RuntimeError(res.stderr[-2000:])
+    return res.stdout
+
+
+def modeled_energy(t_solution: float, n_chips: int, util: float) -> dict:
+    """Paper Fig. 6 energy model; returns E (J), peak power (W), EDP (J s)."""
+    p_chips = n_chips * P_CHIP * (IDLE_FRAC + (1 - IDLE_FRAC) * util)
+    p_total = P_HOST + p_chips
+    e = t_solution * p_total
+    return {"energy_J": e, "peak_W": p_total, "edp_Js": e * t_solution}
+
+
+def emit(name: str, rows: list, header: list):
+    """Print rows as CSV and persist to experiments/bench/<name>.json."""
+    os.makedirs(OUT_DIR, exist_ok=True)
+    print(f"# --- {name} ---")
+    print(",".join(header))
+    for r in rows:
+        print(",".join(str(r.get(h, "")) for h in header))
+    with open(os.path.join(OUT_DIR, f"{name}.json"), "w") as f:
+        json.dump(rows, f, indent=1)

@@ -1,0 +1,65 @@
+"""Paper Fig. 4 analogue: end-of-run particle-energy distribution of the
+mixed-precision (FP32-kernel) run vs the FP64 golden reference, plus the
+§4.1 accuracy bands (acc <= 0.05 %, jerk <= 0.2 %)."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+
+
+def run(quick: bool = False):
+    import jax
+    jax.config.update("jax_enable_x64", True)
+    import jax.numpy as jnp
+    from repro.core import hermite, nbody
+    from repro.core.evaluate import make_evaluator
+    from repro.kernels import ops, ref
+
+    n = 256 if quick else 1024
+    state = nbody.plummer(n, seed=0)
+
+    # --- accuracy bands (paper §4.1) ---
+    a64, j64, _ = ref.acc_jerk_pot(state.pos, state.vel, state.mass)
+    f32 = jnp.float32
+    a32, j32, _ = ops.acc_jerk_pot(
+        state.pos.astype(f32), state.vel.astype(f32),
+        state.mass.astype(f32), impl="pallas_interpret")
+
+    def band(x, y):
+        scale = jnp.maximum(jnp.abs(y), jnp.abs(y).mean())
+        return float(jnp.max(jnp.abs(x.astype(jnp.float64) - y) / scale))
+
+    acc_dev = band(a32, a64)
+    jerk_dev = band(j32, j64)
+
+    # --- end-of-run energy distribution overlap ---
+    t_end = 0.25 if quick else 1.0
+    golden = make_evaluator(precision="fp64")
+    device = make_evaluator(impl="pallas_interpret")
+    out_g = hermite.evolve(state, golden, t_end=t_end, dt=1 / 256)
+    out_d = hermite.evolve(state, device, t_end=t_end, dt=1 / 256)
+    eg = np.asarray(nbody.particle_energies(out_g))
+    ed = np.asarray(nbody.particle_energies(out_d))
+    lo, hi = min(eg.min(), ed.min()), max(eg.max(), ed.max())
+    hg, edges = np.histogram(eg, bins=30, range=(lo, hi), density=True)
+    hd, _ = np.histogram(ed, bins=30, range=(lo, hi), density=True)
+    width = edges[1] - edges[0]
+    overlap = float(np.minimum(hg, hd).sum() * width)
+
+    rows = [{
+        "N": n,
+        "acc_max_rel_dev": f"{acc_dev:.2e}",
+        "acc_band_0.05pct": acc_dev < 5e-4,
+        "jerk_max_rel_dev": f"{jerk_dev:.2e}",
+        "jerk_band_0.2pct": jerk_dev < 2e-3,
+        "energy_hist_overlap": round(overlap, 4),
+        "energy_mean_rel_diff": f"{abs(eg.mean() - ed.mean()) / abs(eg.mean()):.2e}",
+    }]
+    common.emit("fig4_validation", rows, list(rows[0].keys()))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

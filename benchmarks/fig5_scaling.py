@@ -1,0 +1,55 @@
+"""Paper Fig. 5 analogue: strong scaling of the force evaluation over 1/2/4
+devices for the two leading strategies (time-to-solution, speedup, parallel
+efficiency)."""
+
+from __future__ import annotations
+
+from benchmarks import common
+
+_SNIPPET = """
+import time, jax
+from repro.core import nbody, hermite
+from repro.core.strategies import make_strategy_evaluator
+
+state = nbody.plummer({n}, seed=0)
+ev = make_strategy_evaluator("{strategy}", devices=jax.devices()[:{devices}],
+                             impl="xla", chips_per_card={cpc})
+state0 = hermite.initialize(state, ev)
+jax.block_until_ready(state0.pos)
+t0 = time.perf_counter()
+out = hermite.evolve_scan(state0, ev, n_steps=3, dt=1e-3)
+jax.block_until_ready(out.pos)
+print("TIME", time.perf_counter() - t0)
+"""
+
+
+def run(quick: bool = False):
+    n = 2048 if quick else 4096
+    rows = []
+    for strategy in ("replicated", "two_level"):
+        t1 = None
+        for devices in (1, 2, 4):
+            cpc = 2 if (strategy == "two_level" and devices > 1) else 1
+            out = common.run_subprocess(
+                _SNIPPET.format(strategy=strategy, devices=devices, n=n,
+                                cpc=cpc),
+                devices=devices)
+            t = float(out.strip().split()[-1])
+            if t1 is None:
+                t1 = t
+            speedup = t1 / t
+            rows.append({
+                "strategy": strategy,
+                "devices": devices,
+                "time_s": round(t, 3),
+                "speedup": round(speedup, 3),
+                "efficiency_pct": round(100 * speedup / devices, 1),
+            })
+    common.emit("fig5_scaling", rows,
+                ["strategy", "devices", "time_s", "speedup",
+                 "efficiency_pct"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

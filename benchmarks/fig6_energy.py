@@ -1,0 +1,49 @@
+"""Paper Fig. 6 analogue: energy-to-solution and peak power vs device count,
+from the measured strong-scaling times (fig5) + the documented energy model.
+
+Reproduces the paper's structural result: time-to-solution decreases
+monotonically with devices, while energy-to-solution (and EDP) has a minimum
+at an intermediate device count — because below-ideal parallel efficiency
+burns chip-seconds faster than it saves wall-seconds."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks import common
+from benchmarks import fig5_scaling
+
+
+def run(quick: bool = False):
+    path = os.path.join(common.OUT_DIR, "fig5_scaling.json")
+    if os.path.exists(path):
+        with open(path) as f:
+            scaling = json.load(f)
+    else:
+        scaling = fig5_scaling.run(quick=quick)
+    rows = []
+    for r in scaling:
+        if r["strategy"] != "replicated":
+            continue
+        util = 0.6 * r["efficiency_pct"] / 100.0
+        e = common.modeled_energy(r["time_s"], r["devices"], util)
+        rows.append({
+            "devices": r["devices"],
+            "time_s": r["time_s"],
+            "energy_J": round(e["energy_J"], 1),
+            "peak_W": round(e["peak_W"], 1),
+            "EDP_Js": round(e["edp_Js"], 1),
+        })
+    if len(rows) == 3:
+        emin = min(rows, key=lambda r: r["EDP_Js"])
+        for r in rows:
+            r["edp_minimum"] = r is emin
+    common.emit("fig6_energy", rows,
+                ["devices", "time_s", "energy_J", "peak_W", "EDP_Js",
+                 "edp_minimum"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,54 @@
+"""LM-side microbenchmark: train-step and decode-step wall time for reduced
+configs of every assigned architecture (CPU regression numbers; the full
+configs are characterized by the dry-run roofline)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks import common
+from repro.data import SyntheticLM, batch_spec_for
+from repro.distributed.shardings import MeshRules
+from repro.launch.train import scaled_config
+from repro.models import config as C
+from repro.models import model, params as P
+from repro.optim import AdamW
+from repro.train import make_train_step
+
+ARCHS = ["stablelm-3b", "qwen3-0.6b", "zamba2-7b", "xlstm-1.3b",
+         "phi3.5-moe-42b-a6.6b", "deepseek-v2-236b", "qwen2-vl-2b",
+         "seamless-m4t-medium"]
+
+
+def run(quick: bool = False):
+    rules = MeshRules.single_device()
+    archs = ARCHS[:3] if quick else ARCHS
+    b, s = 2, 64
+    rows = []
+    for arch in archs:
+        cfg = scaled_config(C.get(arch), 0.04)
+        data = SyntheticLM(cfg, batch_spec_for(cfg, b, s))
+        batch = {k: jnp.asarray(v) for k, v in data(0).items()}
+        params = P.init_params(cfg, jax.random.PRNGKey(0))
+        opt = AdamW(learning_rate=1e-3)
+        step = jax.jit(make_train_step(cfg, rules, opt))
+        opt_state = opt.init(params)
+        t, sd = common.time_fn(
+            lambda: step(params, opt_state, batch)[2]["loss"],
+            repeat=3)
+        tokens = b * batch["labels"].shape[1]
+        rows.append({
+            "arch": arch,
+            "family": cfg.family,
+            "params": P.count_params(cfg),
+            "train_step_ms": round(t * 1e3, 1),
+            "tok_per_s": round(tokens / t, 1),
+        })
+    common.emit("lm_step", rows,
+                ["arch", "family", "params", "train_step_ms", "tok_per_s"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

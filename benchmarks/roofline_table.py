@@ -1,0 +1,77 @@
+"""Roofline table generator: reads experiments/dryrun/*.json and emits the
+per-(arch x shape x mesh) three-term table (EXPERIMENTS.md §Roofline)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks import common
+
+
+def load(tag: str = "") -> list:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(common.DRYRUN_DIR, "*.json"))):
+        name = os.path.basename(path)[:-5]
+        parts = name.split("__")
+        variant = parts[2].split("_", 1)[1] if "_" in parts[2] else "baseline"
+        with open(path) as f:
+            r = json.load(f)
+        r["variant"] = variant
+        rows.append(r)
+    return rows
+
+
+def fmt_row(r: dict) -> dict:
+    if "skipped" in r:
+        return {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "variant": r.get("variant", "baseline"),
+                "status": "SKIP (" + r["skipped"].split(":")[0] + ")"}
+    if "error" in r:
+        return {"arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+                "status": "ERROR"}
+    t = r["roofline"]
+    pd = r["per_device"]
+    variant = r.get("variant", "baseline")
+    step = t["step_time_s"]
+    # achievable fraction of the compute roofline: compute term / step time
+    frac = t["compute_s"] / step if step else 0.0
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "variant": variant,
+        "status": "ok",
+        "compute_s": f"{t['compute_s']:.4f}",
+        "memory_s": f"{t['memory_s']:.4f}",
+        "collective_s": f"{t['collective_s']:.4f}",
+        "bottleneck": t["bottleneck"],
+        "roofline_frac": f"{frac:.3f}",
+        "peak_GiB": f"{pd['peak_bytes'] / 2**30:.2f}",
+        "useful_flops_frac": f"{min(r['useful_flops_fraction'], 9.99):.3f}",
+    }
+
+
+HEADERS = ["arch", "shape", "mesh", "variant", "status", "compute_s", "memory_s",
+           "collective_s", "bottleneck", "roofline_frac", "peak_GiB",
+           "useful_flops_frac"]
+
+
+def markdown(rows: list) -> str:
+    out = ["| " + " | ".join(HEADERS) + " |",
+           "|" + "---|" * len(HEADERS)]
+    for r in rows:
+        out.append("| " + " | ".join(str(r.get(h, "")) for h in HEADERS)
+                   + " |")
+    return "\n".join(out)
+
+
+def run(quick: bool = False):
+    rows = [fmt_row(r) for r in load()]
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                             r.get("variant", "")))
+    common.emit("roofline_table", rows, HEADERS)
+    return rows
+
+
+if __name__ == "__main__":
+    print(markdown(run()))

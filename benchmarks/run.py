@@ -1,0 +1,45 @@
+"""Benchmark harness entry point — one module per paper table/figure:
+
+  table1_strategies : Table 1 (strategy time-to-solution + EDP)
+  fig4_validation   : Fig. 4 (accuracy bands + energy-distribution overlap)
+  fig5_scaling      : Fig. 5 (strong scaling 1/2/4 devices)
+  fig6_energy       : Fig. 6 (energy-to-solution / peak power, EDP minimum)
+  lm_step           : LM-side reduced-config step microbench
+  roofline_table    : dry-run roofline summary (EXPERIMENTS.md §Roofline)
+
+``python -m benchmarks.run [--quick] [--only NAME]``
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller N / fewer archs (CI mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    from benchmarks import (fig4_validation, fig5_scaling, fig6_energy,
+                            lm_step, roofline_table, table1_strategies)
+
+    suites = {
+        "fig4_validation": fig4_validation.run,
+        "fig5_scaling": fig5_scaling.run,
+        "fig6_energy": fig6_energy.run,
+        "table1_strategies": table1_strategies.run,
+        "lm_step": lm_step.run,
+        "roofline_table": roofline_table.run,
+    }
+    names = [args.only] if args.only else list(suites)
+    for name in names:
+        t0 = time.perf_counter()
+        suites[name](quick=args.quick)
+        print(f"# {name} done in {time.perf_counter() - t0:.1f}s\n")
+
+
+if __name__ == "__main__":
+    main()

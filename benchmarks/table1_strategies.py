@@ -1,0 +1,79 @@
+"""Paper Table 1 analogue: time-to-solution + EDP per scaling strategy.
+
+Measured part (CPU host, 4 placeholder devices, reduced N, 3 Hermite steps —
+the paper's own step count): wall time per strategy, normalized to the
+single-chip configuration.  Modeled part: the 409600-particle full-scale
+energy/EDP from the measured time scaled by (N_full/N_bench)^2 and the
+energy model in benchmarks/common.py.
+
+The paper's ranking to reproduce: single-chip DP fastest; multi-chip ~+3.6%;
+mesh-based (runtime-managed reshards) slowest; EDP minimized at 2 ranks.
+"""
+
+from __future__ import annotations
+
+from benchmarks import common
+
+N_BENCH = 4096
+N_FULL = 409_600
+STEPS = 3
+
+_SNIPPET = """
+import time, jax, jax.numpy as jnp
+from repro.core import nbody, hermite
+from repro.core.strategies import make_strategy_evaluator
+
+state = nbody.plummer({n}, seed=0)
+ev = make_strategy_evaluator("{strategy}", devices=jax.devices()[:{devices}],
+                             impl="xla", chips_per_card=2)
+state0 = hermite.initialize(state, ev)   # compile + bootstrap
+jax.block_until_ready(state0.pos)
+t0 = time.perf_counter()
+out = hermite.evolve_scan(state0, ev, n_steps={steps}, dt=1e-3)
+jax.block_until_ready(out.pos)
+print("TIME", time.perf_counter() - t0)
+"""
+
+
+def run(quick: bool = False):
+    n = 2048 if quick else N_BENCH
+    rows = []
+    cases = [
+        ("replicated", 1, "Multi-Host Single-Chip (1 chip)"),
+        ("replicated", 2, "Multi-Host Single-Chip (2 chips)"),
+        ("two_level", 2, "Multi-Host Multi-Chip (1 card, 2 chips)"),
+        ("mesh_sharded", 2, "Mesh-Based (1 card, 2 chips)"),
+        ("ring", 2, "Ring systolic (beyond-paper, 2 chips)"),
+        ("replicated", 4, "Multi-Host Single-Chip (4 chips)"),
+    ]
+    base_time = None
+    for strategy, devices, label in cases:
+        out = common.run_subprocess(
+            _SNIPPET.format(strategy=strategy, devices=devices, n=n,
+                            steps=STEPS),
+            devices=max(devices, 1))
+        t = float(out.strip().split()[-1])
+        if base_time is None:
+            base_time = t
+        scale = (N_FULL / n) ** 2 / devices * 1  # O(N^2), ideal DP speedup
+        t_model = t * (N_FULL / n) ** 2 * 1.0    # measured incl. its devices
+        energy = common.modeled_energy(t_model, devices, util=0.6)
+        rows.append({
+            "configuration": label,
+            "strategy": strategy,
+            "chips": devices,
+            "bench_time_s": round(t, 3),
+            "vs_single": round(t / base_time, 3),
+            "modeled_full_time_s": round(t_model, 1),
+            "modeled_EDP_kJs": round(
+                energy["edp_Js"] * (t_model / t_model) / 1e3, 1),
+        })
+        del scale
+    common.emit("table1_strategies", rows,
+                ["configuration", "strategy", "chips", "bench_time_s",
+                 "vs_single", "modeled_full_time_s", "modeled_EDP_kJs"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,1 @@
+from repro.checkpoint.store import save, restore, restore_latest, available_steps  # noqa: F401

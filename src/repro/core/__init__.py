@@ -1,0 +1,1 @@
+from repro.core import evaluate, hermite, nbody, strategies  # noqa: F401

@@ -1,0 +1,58 @@
+"""Evaluator factories: the FP32 force-evaluation stage of the Hermite loop.
+
+``make_evaluator`` builds the single-device evaluator (the paper's one-chip
+configuration); the multi-device strategies live in
+``repro.core.strategies`` and share the same ``Evaluator`` signature.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.core.hermite import Evaluation, Evaluator
+from repro.kernels import nbody_force, ops
+
+
+def make_evaluator(
+    *,
+    eps: float = 1e-7,
+    order: int = 6,
+    impl: Optional[str] = None,
+    block_i: int = nbody_force.DEFAULT_BLOCK_I,
+    block_j: int = nbody_force.DEFAULT_BLOCK_J,
+    precision: str = "fp32",  # "fp32" (paper device precision) | "fp64" golden
+) -> Evaluator:
+    """Single-device evaluator (Pallas kernel or XLA fallback).
+
+    ``precision="fp64"`` is the golden-reference mode (pure-jnp oracle at
+    host precision, no kernel) used for validation and convergence tests.
+    """
+    if precision == "fp64":
+        from repro.kernels import ref
+
+        def evaluate_golden(pos, vel, mass) -> Evaluation:
+            acc, jerk, pot = ref.acc_jerk_pot_rect(pos, vel, pos, vel, mass, eps=eps)
+            if order >= 6:
+                snp = ref.snap_rect(pos, vel, acc, pos, vel, acc, mass, eps=eps)
+            else:
+                snp = jnp.zeros_like(acc)
+            return Evaluation(acc=acc, jerk=jerk, snap=snp, pot=pot)
+
+        return evaluate_golden
+
+    impl_ = impl or ops.default_impl()
+    kw = dict(eps=eps, block_i=block_i, block_j=block_j, impl=impl_)
+
+    def evaluate(pos, vel, mass) -> Evaluation:
+        f32 = jnp.float32
+        p, v, m = jnp.asarray(pos, f32), jnp.asarray(vel, f32), jnp.asarray(mass, f32)
+        acc, jerk, pot = ops.acc_jerk_pot_rect(p, v, p, v, m, **kw)
+        if order >= 6:
+            snp = ops.snap_rect(p, v, acc, p, v, acc, m, **kw)
+        else:
+            snp = jnp.zeros_like(acc)
+        return Evaluation(acc=acc, jerk=jerk, snap=snp, pot=pot)
+
+    return evaluate

@@ -1,0 +1,135 @@
+"""N-body system state, initial conditions and energy diagnostics.
+
+State follows the paper's split: dynamical quantities live at host precision
+(FP64 when x64 is enabled — the paper's CPU side), while force evaluation is
+delegated to the FP32 device kernels (``repro.kernels``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ParticleState:
+    """Full Hermite-6 integrator state (all (N,3) except mass (N,))."""
+
+    pos: jax.Array
+    vel: jax.Array
+    acc: jax.Array
+    jerk: jax.Array
+    snap: jax.Array
+    crackle: jax.Array
+    mass: jax.Array
+    pot: jax.Array                      # per-particle potential (diagnostics)
+    time: jax.Array                     # scalar
+
+    @property
+    def n(self) -> int:
+        return self.pos.shape[0]
+
+    @property
+    def dtype(self):
+        return self.pos.dtype
+
+
+def zeros_like_state(pos, vel, mass) -> ParticleState:
+    z = jnp.zeros_like(pos)
+    return ParticleState(
+        pos=pos, vel=vel, acc=z, jerk=z, snap=z, crackle=z,
+        mass=mass, pot=jnp.zeros_like(mass),
+        time=jnp.zeros((), pos.dtype),
+    )
+
+
+def plummer(
+    n: int,
+    *,
+    seed: int = 0,
+    total_mass: float = 1.0,
+    dtype=jnp.float64,
+    cutoff: float = 22.8042468,  # standard 99%-mass radius cut (Aarseth 1974)
+) -> ParticleState:
+    """Plummer-sphere initial conditions in standard N-body units.
+
+    Uses the Aarseth, Henon & Wielen (1974) recipe with von Neumann rejection
+    for the velocity sampling; positions/velocities are centred and rescaled
+    to virial equilibrium (E = -1/4, G = M = 1).
+    """
+    rng = np.random.default_rng(seed)
+    m = np.full(n, total_mass / n)
+
+    # radii from the cumulative mass profile, with an outer cutoff
+    x1 = rng.uniform(0.0, 1.0, size=n)
+    frac = cutoff / np.sqrt(1.0 + cutoff**2)
+    x1 = x1 * frac**3  # restrict to the mass fraction inside the cutoff
+    r = (x1 ** (-2.0 / 3.0) - 1.0) ** (-0.5)
+
+    def iso(rr):
+        u = rng.uniform(-1.0, 1.0, size=rr.shape[0])
+        phi = rng.uniform(0.0, 2 * np.pi, size=rr.shape[0])
+        st = np.sqrt(1.0 - u * u)
+        return rr[:, None] * np.stack(
+            [st * np.cos(phi), st * np.sin(phi), u], axis=1
+        )
+
+    pos = iso(r)
+
+    # velocity: q = v/v_esc with g(q) = q^2 (1-q^2)^{7/2}, rejection sampling
+    q = np.zeros(n)
+    todo = np.ones(n, dtype=bool)
+    while todo.any():
+        k = int(todo.sum())
+        x2 = rng.uniform(0.0, 1.0, size=k)
+        x3 = rng.uniform(0.0, 0.1, size=k)
+        ok = x3 < x2**2 * (1.0 - x2**2) ** 3.5
+        idx = np.flatnonzero(todo)[ok]
+        q[idx] = x2[ok]
+        todo[idx] = False
+    v_esc = np.sqrt(2.0) * (1.0 + r * r) ** (-0.25)
+    vel = iso(q * v_esc)
+
+    # centre of mass / momentum frame
+    pos -= (m[:, None] * pos).sum(0) / m.sum()
+    vel -= (m[:, None] * vel).sum(0) / m.sum()
+
+    # rescale to standard units: E = -1/4 (scale factor 16/(3*pi))
+    pos *= 3.0 * np.pi / 16.0
+    vel *= np.sqrt(16.0 / (3.0 * np.pi))
+
+    return zeros_like_state(
+        jnp.asarray(pos, dtype), jnp.asarray(vel, dtype), jnp.asarray(m, dtype)
+    )
+
+
+def two_body_circular(dtype=jnp.float64) -> ParticleState:
+    """Equal-mass circular binary — analytic test case (period = 2*pi*r^1.5...)."""
+    pos = jnp.asarray([[0.5, 0.0, 0.0], [-0.5, 0.0, 0.0]], dtype)
+    # G=1, m=0.5 each, separation 1 -> v_circ of each about COM: v = sqrt(mu/r)/...
+    # orbital speed: v = sqrt(G * m_other^2 / (M * r)) with M=1, r=1 -> 0.5
+    vel = jnp.asarray([[0.0, 0.5, 0.0], [0.0, -0.5, 0.0]], dtype)
+    mass = jnp.asarray([0.5, 0.5], dtype)
+    return zeros_like_state(pos, vel, mass)
+
+
+def kinetic_energy(state: ParticleState) -> jax.Array:
+    return 0.5 * jnp.sum(state.mass * jnp.sum(state.vel**2, axis=1))
+
+
+def potential_energy(state: ParticleState) -> jax.Array:
+    return 0.5 * jnp.sum(state.mass * state.pot)
+
+
+def total_energy(state: ParticleState) -> jax.Array:
+    return kinetic_energy(state) + potential_energy(state)
+
+
+def particle_energies(state: ParticleState) -> jax.Array:
+    """Per-particle specific energies (paper Fig. 4 distribution)."""
+    return 0.5 * jnp.sum(state.vel**2, axis=1) + state.pot

@@ -1,0 +1,250 @@
+"""Multi-device distribution strategies for the N-body force evaluation.
+
+These are the paper's three scaling configurations (§3, Fig. 3) mapped onto
+JAX collectives, plus one beyond-paper strategy (DESIGN.md §3):
+
+* ``replicated``   — paper's Multi-Host Single-Chip: targets sharded over all
+  devices, the full source set all-gathered onto every device once per
+  evaluation (each chip holds a full replicated copy).
+* ``two_level``    — paper's Multi-Host Multi-Chip: identical math, but the
+  source gather is staged hierarchically over a (card, chip) view of the
+  devices — all-gather across the chips of a card first, then across cards —
+  modelling the explicit per-card partitioning of the paper.
+* ``mesh_sharded`` — paper's Mesh-Based configuration: no explicit
+  collectives; targets carry a sharded layout constraint and sources a
+  replicated one, and the runtime (XLA SPMD here, TT-NN there) inserts the
+  communication.  "Sharded buffers for domain-decomposed data, replicated
+  buffers for globally shared particle data."
+* ``ring``         — beyond-paper: systolic ``ppermute`` ring; every device
+  keeps only N/P sources resident and overlaps each (N/P)^2 interaction block
+  with the shift of the next source shard.  O(N/P) memory instead of O(N).
+
+All strategies implement the same ``Evaluator`` contract and are numerically
+equivalent to the single-device evaluation (tested property), because
+all-pairs summation is order-invariant in the source index.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core.hermite import Evaluation, Evaluator
+from repro.kernels import nbody_force, ops
+
+STRATEGIES = ("replicated", "two_level", "mesh_sharded", "ring")
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def _pad_particles(pos, vel, mass, n_pad: int):
+    n = pos.shape[0]
+    return (
+        jnp.pad(pos, ((0, n_pad - n), (0, 0))),
+        jnp.pad(vel, ((0, n_pad - n), (0, 0))),
+        jnp.pad(mass, ((0, n_pad - n),)),  # zero mass => zero contribution
+    )
+
+
+def _force_kw(impl, block_i, block_j, eps):
+    return dict(eps=eps, impl=impl, block_i=block_i, block_j=block_j)
+
+
+def make_strategy_evaluator(
+    strategy: str,
+    *,
+    devices: Optional[Sequence[jax.Device]] = None,
+    chips_per_card: int = 2,
+    eps: float = 1e-7,
+    order: int = 6,
+    impl: str = "xla",
+    block_i: int = nbody_force.DEFAULT_BLOCK_I,
+    block_j: int = nbody_force.DEFAULT_BLOCK_J,
+) -> Evaluator:
+    """Build an ``Evaluator`` that distributes the evaluation over devices.
+
+    The strategy meshes are *internal views* over the given devices: a 1D
+    ``('dev',)`` mesh for replicated/mesh_sharded/ring, a 2D
+    ``('card', 'chip')`` view for two_level (paper: 2 chips per n300 card).
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    p = devs.size
+    kw = _force_kw(impl, block_i, block_j, eps)
+
+    if strategy == "two_level":
+        if p % chips_per_card:
+            raise ValueError(f"{p} devices not divisible by {chips_per_card=}")
+        mesh = Mesh(devs.reshape(p // chips_per_card, chips_per_card),
+                    ("card", "chip"))
+        return _two_level(mesh, order, kw)
+    mesh = Mesh(devs.reshape(p), ("dev",))
+    if strategy == "replicated":
+        return _replicated(mesh, order, kw)
+    if strategy == "mesh_sharded":
+        return _mesh_sharded(mesh, order, kw)
+    return _ring(mesh, order, kw)
+
+
+def _wrap(mesh, p, order, eval_padded):
+    """Pad N to a multiple of the device count, evaluate, slice back."""
+
+    def evaluate(pos, vel, mass) -> Evaluation:
+        n = pos.shape[0]
+        f32 = jnp.float32
+        pos32 = jnp.asarray(pos, f32)
+        vel32 = jnp.asarray(vel, f32)
+        mass32 = jnp.asarray(mass, f32)
+        n_pad = _round_up(n, p)
+        pp, vp, mp = _pad_particles(pos32, vel32, mass32, n_pad)
+        acc, jerk, snp, pot = eval_padded(pp, vp, mp)
+        return Evaluation(acc[:n], jerk[:n], snp[:n], pot[:n])
+
+    return evaluate
+
+
+# --------------------------------------------------------------------------
+# Strategy 1 — replicated (Multi-Host Single-Chip analogue)
+# --------------------------------------------------------------------------
+def _replicated(mesh: Mesh, order: int, kw) -> Evaluator:
+    axes = mesh.axis_names
+
+    @jax.jit
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(axes), P(axes), P(axes)),
+        out_specs=(P(axes), P(axes), P(axes), P(axes)),
+    )
+    def eval_padded(pos, vel, mass):
+        # each device: local targets x full (gathered) source set
+        gp = jax.lax.all_gather(pos, axes, axis=0, tiled=True)
+        gv = jax.lax.all_gather(vel, axes, axis=0, tiled=True)
+        gm = jax.lax.all_gather(mass, axes, axis=0, tiled=True)
+        acc, jerk, pot = ops.acc_jerk_pot_rect(pos, vel, gp, gv, gm, **kw)
+        if order >= 6:
+            ga = jax.lax.all_gather(acc, axes, axis=0, tiled=True)
+            snp = ops.snap_rect(pos, vel, acc, gp, gv, ga, gm, **kw)
+        else:
+            snp = jnp.zeros_like(acc)
+        return acc, jerk, snp, pot
+
+    return _wrap(mesh, mesh.size, order, eval_padded)
+
+
+# --------------------------------------------------------------------------
+# Strategy 2 — two_level (Multi-Host Multi-Chip analogue)
+# --------------------------------------------------------------------------
+def _two_level(mesh: Mesh, order: int, kw) -> Evaluator:
+    axes = mesh.axis_names  # ("card", "chip")
+
+    def gather2(x):
+        # stage 1: within the card (the paper's explicit chip partitioning),
+        # stage 2: across cards (the MPI level).  Source order differs from
+        # the 1D gather but all-pairs summation is order-invariant.
+        x = jax.lax.all_gather(x, "chip", axis=0, tiled=True)
+        return jax.lax.all_gather(x, "card", axis=0, tiled=True)
+
+    @jax.jit
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(axes), P(axes), P(axes)),
+        out_specs=(P(axes), P(axes), P(axes), P(axes)),
+    )
+    def eval_padded(pos, vel, mass):
+        gp, gv, gm = gather2(pos), gather2(vel), gather2(mass)
+        acc, jerk, pot = ops.acc_jerk_pot_rect(pos, vel, gp, gv, gm, **kw)
+        if order >= 6:
+            ga = gather2(acc)
+            snp = ops.snap_rect(pos, vel, acc, gp, gv, ga, gm, **kw)
+        else:
+            snp = jnp.zeros_like(acc)
+        return acc, jerk, snp, pot
+
+    return _wrap(mesh, mesh.size, order, eval_padded)
+
+
+# --------------------------------------------------------------------------
+# Strategy 3 — mesh_sharded (Mesh-Based analogue; runtime-managed comms)
+# --------------------------------------------------------------------------
+def _mesh_sharded(mesh: Mesh, order: int, kw) -> Evaluator:
+    sharded = NamedSharding(mesh, P("dev"))          # domain-decomposed
+    sharded2 = NamedSharding(mesh, P("dev", None))
+    replicated = NamedSharding(mesh, P())            # globally shared
+
+    @jax.jit
+    def eval_padded(pos, vel, mass):
+        wsc = jax.lax.with_sharding_constraint
+        # "sharded buffers" for the targets ...
+        pt, vt = wsc(pos, sharded2), wsc(vel, sharded2)
+        # ... "replicated buffers" for the globally shared source data; the
+        # runtime inserts the all-gathers (cf. TT-NN MeshDevice).
+        ps, vs, ms = wsc(pos, replicated), wsc(vel, replicated), wsc(mass, replicated)
+        acc, jerk, pot = ops.acc_jerk_pot_rect(pt, vt, ps, vs, ms, **kw)
+        acc = wsc(acc, sharded2)
+        if order >= 6:
+            snp = ops.snap_rect(
+                pt, vt, acc, ps, vs, wsc(acc, replicated), ms, **kw
+            )
+        else:
+            snp = jnp.zeros_like(acc)
+        return acc, jerk, wsc(snp, sharded2), wsc(pot, sharded)
+
+    return _wrap(mesh, mesh.size, order, eval_padded)
+
+
+# --------------------------------------------------------------------------
+# Strategy 4 — ring (beyond-paper systolic pipeline)
+# --------------------------------------------------------------------------
+def _ring(mesh: Mesh, order: int, kw) -> Evaluator:
+    axes = mesh.axis_names
+    p = mesh.size
+    perm = [(i, (i + 1) % p) for i in range(p)]
+
+    def shift(x):
+        return jax.lax.ppermute(x, axes[0], perm)
+
+    @jax.jit
+    @functools.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(axes), P(axes), P(axes)),
+        out_specs=(P(axes), P(axes), P(axes), P(axes)),
+    )
+    def eval_padded(pos, vel, mass):
+        zeros3 = jnp.zeros_like(pos)
+        zeros1 = jnp.zeros_like(mass)
+
+        def body_aj(_, carry):
+            acc, jerk, pot, sp, sv, sm = carry
+            a, j, pt = ops.acc_jerk_pot_rect(pos, vel, sp, sv, sm, **kw)
+            # the shift of the next source shard overlaps with the local
+            # (N/P)^2 interaction block on hardware (async collective)
+            return (acc + a, jerk + j, pot + pt, shift(sp), shift(sv), shift(sm))
+
+        acc, jerk, pot, *_ = jax.lax.fori_loop(
+            0, p, body_aj, (zeros3, zeros3, zeros1, pos, vel, mass)
+        )
+        if order >= 6:
+            def body_s(_, carry):
+                snp, sp, sv, sa, sm = carry
+                s = ops.snap_rect(pos, vel, acc, sp, sv, sa, sm, **kw)
+                return (snp + s, shift(sp), shift(sv), shift(sa), shift(sm))
+
+            snp, *_ = jax.lax.fori_loop(
+                0, p, body_s, (zeros3, pos, vel, acc, mass)
+            )
+        else:
+            snp = zeros3
+        return acc, jerk, snp, pot
+
+    return _wrap(mesh, p, order, eval_padded)

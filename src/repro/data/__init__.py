@@ -1,0 +1,1 @@
+from repro.data.pipeline import BatchSpec, SyntheticLM, MemmapCorpus, batch_spec_for, global_batch  # noqa: F401

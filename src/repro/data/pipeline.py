@@ -1,0 +1,112 @@
+"""Deterministic sharded data pipeline.
+
+Two sources behind one interface:
+
+* ``SyntheticLM`` — seeded counter-based token stream (threefry on
+  (seed, step, shard)); fully deterministic, O(1) skip-ahead to any step —
+  the property the trainer's restart path relies on.
+* ``MemmapCorpus`` — flat binary token file (np.memmap) sampled with the
+  same counter-based indexing, for "real data" runs.
+
+Batches are built *per data shard*: each host materializes only its local
+slice and the trainer device_puts it against the global sharding — no
+full-batch materialization on any single host (multi-host pattern; on one
+host it degenerates gracefully).
+
+Stub frontends (audio frames / vision patches) synthesize deterministic
+embeddings the same way, matching DESIGN.md §5 (the modality encoder is out
+of scope; its *output* is the model input).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class BatchSpec:
+    batch: int                  # global batch size
+    seq: int                    # token sequence length
+    enc_len: int = 0            # audio: encoder frame count
+    patch_len: int = 0          # vlm: patch count
+
+
+def batch_spec_for(cfg: ArchConfig, batch: int, seq: int) -> BatchSpec:
+    if cfg.family == "audio":
+        return BatchSpec(batch, seq, enc_len=seq)
+    if cfg.family == "vlm":
+        f = min(cfg.frontend_len, seq // 2)
+        return BatchSpec(batch, seq - f, patch_len=f)
+    return BatchSpec(batch, seq)
+
+
+class SyntheticLM:
+    """Deterministic synthetic LM batches; ``shard``/``num_shards`` select the
+    local slice of the global batch."""
+
+    def __init__(self, cfg: ArchConfig, spec: BatchSpec, *, seed: int = 0,
+                 shard: int = 0, num_shards: int = 1):
+        assert spec.batch % num_shards == 0, (spec.batch, num_shards)
+        self.cfg, self.spec, self.seed = cfg, spec, seed
+        self.shard, self.num_shards = shard, num_shards
+        self.local_batch = spec.batch // num_shards
+
+    def _rng(self, step: int) -> np.random.Generator:
+        return np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard]))
+
+    def __call__(self, step: int) -> dict:
+        """Local batch for ``step`` (O(1) in step: restart skip-ahead)."""
+        rng = self._rng(step)
+        cfg, spec = self.cfg, self.spec
+        b, s = self.local_batch, spec.seq
+        toks = rng.integers(0, cfg.vocab_size, size=(b, s + 1),
+                            dtype=np.int32)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if spec.enc_len:
+            out["frames"] = rng.standard_normal(
+                (b, spec.enc_len, cfg.d_model)).astype(np.float32)
+        if spec.patch_len:
+            out["patches"] = rng.standard_normal(
+                (b, spec.patch_len, cfg.d_model)).astype(np.float32)
+        return out
+
+
+class MemmapCorpus:
+    """Flat token-id binary file; deterministic random crops per step."""
+
+    def __init__(self, cfg: ArchConfig, spec: BatchSpec, path: str, *,
+                 dtype=np.int32, seed: int = 0, shard: int = 0,
+                 num_shards: int = 1):
+        self.data = np.memmap(path, dtype=dtype, mode="r")
+        assert self.data.size > spec.seq + 1, "corpus shorter than seq_len"
+        self.cfg, self.spec, self.seed = cfg, spec, seed
+        self.shard, self.num_shards = shard, num_shards
+        self.local_batch = spec.batch // num_shards
+
+    def __call__(self, step: int) -> dict:
+        rng = np.random.default_rng(
+            np.random.SeedSequence([self.seed, step, self.shard]))
+        s = self.spec.seq
+        starts = rng.integers(0, self.data.size - s - 1,
+                              size=self.local_batch)
+        rows = np.stack([np.asarray(self.data[a : a + s + 1]) for a in starts])
+        rows = rows.astype(np.int32) % self.cfg.vocab_size
+        return {"tokens": rows[:, :-1], "labels": rows[:, 1:]}
+
+
+def global_batch(source, step: int, *, shardings: Optional[dict] = None) -> dict:
+    """Assemble the (local) numpy batch and place it on device(s).
+
+    ``shardings``: optional per-key NamedSharding dict (missing keys are
+    placed unsharded)."""
+    local = source(step)
+    if shardings is None:
+        return jax.tree.map(jax.numpy.asarray, local)
+    return {k: jax.device_put(v, shardings.get(k)) for k, v in local.items()}

@@ -1,0 +1,1 @@
+from repro.distributed.shardings import MeshRules, DEFAULT_RULES  # noqa: F401

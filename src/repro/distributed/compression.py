@@ -1,0 +1,73 @@
+"""Gradient compression: stochastic int8 quantization with error feedback.
+
+On a production mesh the int8 tensor (+ one fp32 scale per bucket) is what
+crosses the data-parallel axis, cutting gradient-collective bytes ~4x; the
+error-feedback buffer accumulates the quantization residual so the optimizer
+sees an unbiased gradient over time (Seide et al. 2014; Karimireddy et al.
+2019).  ``compressed_psum`` is the explicit shard_map form used by the
+pure-DP N-body/LM paths; ``compress_tree`` is the in-step form the trainer
+applies before the optimizer.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_LEVELS = 127.0
+
+
+def quantize(x, key=None):
+    """x (fp) -> (int8 q, fp32 scale). Stochastic rounding when ``key``."""
+    xf = x.astype(jnp.float32)
+    scale = jnp.max(jnp.abs(xf)) / _LEVELS
+    scale = jnp.maximum(scale, 1e-30)
+    y = xf / scale
+    if key is not None:
+        y = jnp.floor(y + jax.random.uniform(key, y.shape))
+    else:
+        y = jnp.round(y)
+    return jnp.clip(y, -127, 127).astype(jnp.int8), scale
+
+
+def dequantize(q, scale):
+    return q.astype(jnp.float32) * scale
+
+
+def compress_leaf(g, e):
+    """One error-feedback round: returns (g_hat, new_err)."""
+    corrected = g.astype(jnp.float32) + e
+    q, s = quantize(corrected)
+    g_hat = dequantize(q, s)
+    return g_hat, corrected - g_hat
+
+
+def compress_tree(grads, err):
+    """Apply error-feedback int8 compression leaf-wise."""
+    out = jax.tree.map(compress_leaf, grads, err)
+    g_hat = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda v: isinstance(v, tuple))
+    new_err = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda v: isinstance(v, tuple))
+    return g_hat, new_err
+
+
+def zeros_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compressed_psum(x, axis_name: str):
+    """int8-on-the-wire all-reduce for use inside ``shard_map``.
+
+    Quantizes locally, all-reduces the int8 payload widened to int32 (exact —
+    the per-device range is ±127, so up to ~16M devices fit in int32), then
+    dequantizes with the max participating scale.  The wire cost of the
+    int32 widening is an XLA artifact; on TPU the intended lowering is an
+    int8 all-to-all + local reduction (documented trade-off).
+    """
+    xf = x.astype(jnp.float32)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(xf)), axis_name)   # shared scale
+    scale = jnp.maximum(amax / _LEVELS, 1e-30)
+    q = jnp.clip(jnp.round(xf / scale), -127, 127).astype(jnp.int8)
+    total = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return total.astype(jnp.float32) * scale

@@ -1,0 +1,116 @@
+"""Logical-axis sharding rules with divisibility-checked fallback.
+
+Model code annotates arrays with *logical* axis names ("batch", "heads", ...);
+``MeshRules`` maps them to mesh axes and silently drops any mapping whose mesh
+axes do not divide the corresponding dimension (e.g. kv_heads=2 on a 16-way
+'model' axis -> replicated). A mesh axis is never used twice in one spec.
+
+``MeshRules(None, ...)`` is the single-device no-op used by smoke tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Sequence, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisVal = Union[str, Sequence[str], None]
+
+# Baseline rule set for the production (pod, data, model) mesh.  'fsdp' axes
+# shard parameters/optimizer state (ZeRO-3 style); activations use 'batch'.
+DEFAULT_RULES: dict = {
+    "batch": ("pod", "data"),
+    "seq": None,                    # sequence-parallel variant: "model"
+    "seq_q": None,                  # attention query-seq parallelism: "model"
+    #   (the sharding fix for archs whose (kv, group) head factorization is
+    #    not expressible on the model axis — see EXPERIMENTS.md §Perf)
+    "d_model": None,
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "d_ff": "model",
+    "vocab": "model",
+    "experts": "model",
+    "expert_cap": None,
+    "layers": None,
+    "state": None,
+    "conv": None,
+    # parameter (FSDP) axes
+    "fsdp_d_model": ("data", "pod"),
+    "fsdp_d_ff": None,
+    "cache_batch": ("pod", "data"),
+    "cache_seq": None,
+}
+
+
+def _axes_tuple(v: AxisVal):
+    if v is None:
+        return ()
+    if isinstance(v, str):
+        return (v,)
+    return tuple(v)
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshRules:
+    mesh: Optional[Mesh]
+    rules: dict
+
+    @classmethod
+    def single_device(cls) -> "MeshRules":
+        return cls(mesh=None, rules=dict(DEFAULT_RULES))
+
+    @classmethod
+    def for_mesh(cls, mesh: Mesh, overrides: Optional[dict] = None) -> "MeshRules":
+        rules = dict(DEFAULT_RULES)
+        if overrides:
+            rules.update(overrides)
+        return cls(mesh=mesh, rules=rules)
+
+    def with_overrides(self, **overrides) -> "MeshRules":
+        rules = dict(self.rules)
+        rules.update(overrides)
+        return MeshRules(mesh=self.mesh, rules=rules)
+
+    # ---------------- spec construction ----------------
+    def spec(self, shape: Sequence[int], logical: Sequence[Optional[str]]) -> P:
+        """PartitionSpec for ``shape`` under the rules, with fallbacks."""
+        if self.mesh is None:
+            return P()
+        assert len(shape) == len(logical), (shape, logical)
+        used: set = set()
+        out = []
+        sizes = dict(zip(self.mesh.axis_names, self.mesh.devices.shape))
+        for dim, name in zip(shape, logical):
+            axes = _axes_tuple(self.rules.get(name)) if name else ()
+            # drop axes already used or not dividing the dimension
+            picked = []
+            prod = 1
+            for a in axes:
+                if a in used or a not in sizes:
+                    continue
+                if dim % (prod * sizes[a]) == 0:
+                    picked.append(a)
+                    prod *= sizes[a]
+            for a in picked:
+                used.add(a)
+            out.append(tuple(picked) if len(picked) > 1 else (picked[0] if picked else None))
+        return P(*out)
+
+    def sharding(self, shape, logical) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(shape, logical))
+
+    def shard(self, x: jax.Array, *logical: Optional[str]) -> jax.Array:
+        """with_sharding_constraint by logical axes (no-op without a mesh)."""
+        if self.mesh is None:
+            return x
+        s = self.sharding(x.shape, logical)
+        return jax.lax.with_sharding_constraint(x, s)
+
+    def num_devices(self) -> int:
+        return 1 if self.mesh is None else self.mesh.size

@@ -1,0 +1,1 @@
+from repro.kernels import nbody_force, ops, ref  # noqa: F401

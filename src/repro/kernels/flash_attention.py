@@ -1,0 +1,138 @@
+"""Pallas TPU flash-attention kernel (grouped-query, causal).
+
+The train_4k / prefill_32k roofline is HBM-bound on attention: the XLA path
+materializes (Sq, Sk) fp32 score tensors in HBM (~5 passes per layer).  This
+kernel keeps the whole running-softmax state in VMEM — HBM traffic collapses
+to the q/k/v/o tensors themselves, which is the memory-term fix identified in
+EXPERIMENTS.md §Perf.
+
+Layout (one (batch x kv-head) slab per grid row):
+    q   : (B*KV, Sq, G*D)  — G = query heads per kv head, folded into lanes
+    k   : (B*KV, Sk, D)
+    v   : (B*KV, Sk, D)
+    out : (B*KV, Sq, G*D)
+
+Grid: (B*KV, Sq/BQ, Sk/BK) — the Sk axis is innermost, so the (m, l, acc)
+running-softmax state lives in VMEM scratch across the KV sweep; BlockSpec
+index maps stream K/V blocks while the q block stays resident (the paper's
+resident-target / streamed-source schedule, DESIGN.md §2).  Causal masking
+skips fully-masked KV blocks via ``pl.when`` on the block indices.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 512
+DEFAULT_BLOCK_K = 512
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  scale: float, causal: bool, block_q: int, block_k: int,
+                  groups: int, head_dim: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    run = True
+    if causal:
+        # block (qi, ki) is live unless strictly above the diagonal
+        run = (ki * block_k) <= (qi * block_q + block_q - 1)
+
+    @pl.when(run if causal else True)
+    def _step():
+        q = q_ref[0]                                   # (BQ, G*D)
+        k = k_ref[0]                                   # (BK, D)
+        v = v_ref[0]                                   # (BK, D)
+        bq = q.shape[0]
+        qg = q.reshape(bq, groups, head_dim)
+        s = jax.lax.dot_general(
+            qg, k, (((2,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (BQ, G, BK)
+        s = s * scale
+        if causal:
+            qpos = qi * block_q + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, groups, k.shape[0]), 0)
+            kpos = ki * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (bq, groups, k.shape[0]), 2)
+            s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+        m_prev = m_ref[...]                            # (BQ, G)
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=2))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[..., None])              # (BQ, G, BK)
+        l_ref[...] = l_prev * alpha + p.sum(axis=2)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((2,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)        # (BQ, G, D)
+        acc_ref[...] = acc_ref[...] * alpha[..., None] + pv
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        bq = acc_ref.shape[0]
+        l = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        out = (acc_ref[...] / l).reshape(bq, groups * head_dim)
+        o_ref[0] = out.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "block_q", "block_k", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    block_q: int = DEFAULT_BLOCK_Q,
+                    block_k: int = DEFAULT_BLOCK_K,
+                    interpret: bool = False):
+    """Grouped-query flash attention.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D) with H % KV == 0.
+    Returns (B, Sq, H, D) in q.dtype.  Sq % block_q == Sk % block_k == 0.
+    """
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    g = h // kv
+    scale = d ** -0.5
+
+    # fold (B, KV) into the grid's slab axis; queries carry G heads in lanes
+    qs = q.reshape(b, sq, kv, g * d).transpose(0, 2, 1, 3).reshape(
+        b * kv, sq, g * d)
+    ks = k.transpose(0, 2, 1, 3).reshape(b * kv, sk, d)
+    vs = v.transpose(0, 2, 1, 3).reshape(b * kv, sk, d)
+
+    grid = (b * kv, sq // block_q, sk // block_k)
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, block_q=block_q,
+        block_k=block_k, groups=g, head_dim=d)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, g * d), lambda s, i, j: (s, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda s, i, j: (s, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda s, i, j: (s, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, g * d), lambda s, i, j: (s, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b * kv, sq, g * d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, g), jnp.float32),       # running max m
+            pltpu.VMEM((block_q, g), jnp.float32),       # running sum l
+            pltpu.VMEM((block_q, g, d), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(qs, ks, vs)
+    return out.reshape(b, kv, sq, g, d).transpose(0, 2, 1, 3, 4).reshape(
+        b, sq, h, d)

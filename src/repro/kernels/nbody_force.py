@@ -1,0 +1,214 @@
+"""Pallas TPU kernel for the all-pairs N-body force evaluation.
+
+TPU adaptation of the paper's Tensix read/compute/write pipeline (DESIGN.md §2):
+
+* The paper stages particle tiles through circular buffers between dedicated
+  data-movement and compute RISC-V cores.  Here the same producer/consumer
+  overlap is expressed by the Pallas grid pipeline: ``BlockSpec`` index maps
+  describe which (i-block, j-block) of particle data each grid step consumes,
+  and Mosaic double-buffers the HBM->VMEM DMAs against the VPU compute.
+* The paper replicates every scalar 1024x so the Tensix tile engine can act on
+  it.  TPUs broadcast natively, so we store each particle ONCE in a packed
+  struct-of-arrays layout and broadcast inside the kernel (DESIGN.md §2.1):
+
+      tgt  : (N, 8)  rows = target particles,  cols = [x y z m vx vy vz pad]
+      src  : (8, N)  rows = [x y z m vx vy vz pad], cols = source particles
+      out  : (N, 8)  cols = [ax ay az jx jy jz pot pad]
+
+  A ``(BI, 8)`` target block meets an ``(8, BJ)`` source block and the whole
+  (BI, BJ) interaction tile lives in VMEM registers/vregs.
+* Accumulation runs along the source (j) grid axis, which is the innermost
+  grid dimension, so the output block stays resident in VMEM across the sweep
+  — the same "accumulate along the row direction" schedule as the paper's
+  Fig. 2, without the dst-register acquire/release dance (VMEM is the staging
+  buffer and Mosaic schedules the reuse).
+
+The snap kernel is the second evaluation pass of the 6th-order Hermite scheme
+and additionally consumes the pass-1 accelerations of both partners:
+
+      tgt_acc : (N, 8) cols = [ax ay az pad...]
+      src_acc : (8, N) rows = [ax ay az pad...]
+      out     : (N, 8) cols = [sx sy sz pad...]
+
+All math is FP32 (the paper's SFPU precision); padding particles carry m = 0
+so they contribute exactly zero.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default interaction-block shape.  VMEM working set is ~12 live (BI, BJ)
+# fp32 tensors: 12 * 256 * 512 * 4 B ~= 6.3 MB, comfortably inside the 16 MB
+# VMEM of a v5e core with room for the double-buffered input blocks.
+# BJ is lane-aligned (multiple of 128), BI sublane-aligned (multiple of 8).
+DEFAULT_BLOCK_I = 256
+DEFAULT_BLOCK_J = 512
+
+_X, _Y, _Z, _M, _VX, _VY, _VZ = 0, 1, 2, 3, 4, 5, 6
+
+
+def _geometry(tgt, src, eps):
+    """Pairwise displacement + softened inverse-distance for one block pair."""
+    f32 = jnp.float32
+    xi, yi, zi = (tgt[:, k : k + 1] for k in (_X, _Y, _Z))    # (BI, 1)
+    xj, yj, zj = (src[k : k + 1, :] for k in (_X, _Y, _Z))    # (1, BJ)
+    dx = xj - xi
+    dy = yj - yi
+    dz = zj - zi
+    r2 = dx * dx + dy * dy + dz * dz
+    d2 = r2 + f32(eps) ** 2
+    # self-pairs (r2 == 0) must contribute exactly zero, incl. the potential
+    safe = r2 > 0.0
+    inv_r = jnp.where(safe, jax.lax.rsqrt(jnp.where(safe, d2, 1.0)), 0.0)
+    d2s = jnp.where(safe, d2, 1.0)
+    return dx, dy, dz, d2s, inv_r
+
+
+def _dv(tgt, src):
+    dvx = src[_VX : _VX + 1, :] - tgt[:, _VX : _VX + 1]
+    dvy = src[_VY : _VY + 1, :] - tgt[:, _VY : _VY + 1]
+    dvz = src[_VZ : _VZ + 1, :] - tgt[:, _VZ : _VZ + 1]
+    return dvx, dvy, dvz
+
+
+def _acc_jerk_kernel(tgt_ref, src_ref, out_ref, *, eps: float):
+    """One (i-block, j-block) step of the acc/jerk/potential sweep."""
+    j_step = pl.program_id(1)
+
+    @pl.when(j_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tgt = tgt_ref[...]
+    src = src_ref[...]
+    dx, dy, dz, d2, inv_r = _geometry(tgt, src, eps)
+    inv_r3 = inv_r * inv_r * inv_r
+    mj = src[_M : _M + 1, :]
+    t = mj * inv_r3                                     # t_j  (paper Alg. 3)
+
+    dvx, dvy, dvz = _dv(tgt, src)
+    rv = dx * dvx + dy * dvy + dz * dvz                 # v_r
+    q = (-3.0 * rv) / d2                                # A_ij * v_r
+
+    ax = jnp.sum(t * dx, axis=1)
+    ay = jnp.sum(t * dy, axis=1)
+    az = jnp.sum(t * dz, axis=1)
+    jx = jnp.sum(t * (dvx + q * dx), axis=1)
+    jy = jnp.sum(t * (dvy + q * dy), axis=1)
+    jz = jnp.sum(t * (dvz + q * dz), axis=1)
+    pot = -jnp.sum(mj * inv_r, axis=1)
+    zero = jnp.zeros_like(ax)
+
+    partial = jnp.stack([ax, ay, az, jx, jy, jz, pot, zero], axis=1)
+    out_ref[...] += partial
+
+
+def _snap_kernel(tgt_ref, src_ref, tacc_ref, sacc_ref, out_ref, *, eps: float):
+    """Second Hermite pass: snap from positions, velocities and pass-1 accs."""
+    j_step = pl.program_id(1)
+
+    @pl.when(j_step == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    tgt = tgt_ref[...]
+    src = src_ref[...]
+    dx, dy, dz, d2, inv_r = _geometry(tgt, src, eps)
+    inv_r3 = inv_r * inv_r * inv_r
+    mj = src[_M : _M + 1, :]
+    t = mj * inv_r3
+
+    dvx, dvy, dvz = _dv(tgt, src)
+    dax = sacc_ref[0:1, :] - tacc_ref[:, 0:1]
+    day = sacc_ref[1:2, :] - tacc_ref[:, 1:2]
+    daz = sacc_ref[2:3, :] - tacc_ref[:, 2:3]
+
+    alpha = (dx * dvx + dy * dvy + dz * dvz) / d2
+    beta = (dvx * dvx + dvy * dvy + dvz * dvz
+            + dx * dax + dy * day + dz * daz) / d2 + alpha * alpha
+
+    # A0 / A1 / A2 chains, per component (paper Alg. 3 extended to snap).
+    a3, b3 = -3.0 * alpha, -3.0 * beta
+    px, py, pz = t * dx, t * dy, t * dz                       # A0
+    jx_, jy_, jz_ = t * dvx + a3 * px, t * dvy + a3 * py, t * dvz + a3 * pz
+    sx = jnp.sum(t * dax - 6.0 * alpha * jx_ + b3 * px, axis=1)
+    sy = jnp.sum(t * day - 6.0 * alpha * jy_ + b3 * py, axis=1)
+    sz = jnp.sum(t * daz - 6.0 * alpha * jz_ + b3 * pz, axis=1)
+    zero = jnp.zeros_like(sx)
+
+    partial = jnp.stack([sx, sy, sz, zero, zero, zero, zero, zero], axis=1)
+    out_ref[...] += partial
+
+
+def _grid_specs(n_t: int, n_s: int, block_i: int, block_j: int):
+    grid = (n_t // block_i, n_s // block_j)
+    tgt_spec = pl.BlockSpec((block_i, 8), lambda i, j: (i, 0))
+    src_spec = pl.BlockSpec((8, block_j), lambda i, j: (0, j))
+    out_spec = pl.BlockSpec((block_i, 8), lambda i, j: (i, 0))
+    return grid, tgt_spec, src_spec, out_spec
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps", "block_i", "block_j", "interpret")
+)
+def acc_jerk_pot_packed(
+    tgt,
+    src,
+    *,
+    eps: float = 1e-7,
+    block_i: int = DEFAULT_BLOCK_I,
+    block_j: int = DEFAULT_BLOCK_J,
+    interpret: bool = False,
+):
+    """Pallas all-pairs acceleration+jerk+potential on packed operands.
+
+    ``tgt``: (N_t, 8) float32, ``src``: (8, N_s) float32, with N_t divisible
+    by ``block_i`` and N_s by ``block_j`` (``ops.py`` handles padding).
+    Returns packed (N_t, 8) output.  N_t and N_s may differ — the rectangular
+    contract used by the multi-device strategies (local targets x streamed
+    sources).
+    """
+    n_t, n_s = tgt.shape[0], src.shape[1]
+    grid, tgt_spec, src_spec, out_spec = _grid_specs(n_t, n_s, block_i, block_j)
+    return pl.pallas_call(
+        functools.partial(_acc_jerk_kernel, eps=eps),
+        grid=grid,
+        in_specs=[tgt_spec, src_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n_t, 8), jnp.float32),
+        interpret=interpret,
+    )(tgt, src)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("eps", "block_i", "block_j", "interpret")
+)
+def snap_packed(
+    tgt,
+    src,
+    tgt_acc,
+    src_acc,
+    *,
+    eps: float = 1e-7,
+    block_i: int = DEFAULT_BLOCK_I,
+    block_j: int = DEFAULT_BLOCK_J,
+    interpret: bool = False,
+):
+    """Pallas all-pairs snap pass on packed operands (see module docstring)."""
+    n_t, n_s = tgt.shape[0], src.shape[1]
+    grid, tgt_spec, src_spec, out_spec = _grid_specs(n_t, n_s, block_i, block_j)
+    acc_t_spec = pl.BlockSpec((block_i, 8), lambda i, j: (i, 0))
+    acc_s_spec = pl.BlockSpec((8, block_j), lambda i, j: (0, j))
+    return pl.pallas_call(
+        functools.partial(_snap_kernel, eps=eps),
+        grid=grid,
+        in_specs=[tgt_spec, src_spec, acc_t_spec, acc_s_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((n_t, 8), jnp.float32),
+        interpret=interpret,
+    )(tgt, src, tgt_acc, src_acc)

@@ -1,0 +1,161 @@
+"""Public jit'd wrappers around the N-body force kernels.
+
+These functions own the (un)packing between the physics-facing layout
+(pos/vel/mass arrays, arbitrary N, any float dtype) and the kernel's packed,
+block-padded FP32 layout. They dispatch to
+
+* the Pallas TPU kernel (``nbody_force.py``) — compiled on TPU, interpreted
+  (``interpret=True``) on CPU for validation, or
+* a pure-XLA blocked fallback (``impl="xla"``) — used inside the multi-device
+  strategies and the dry-run, where the CPU backend cannot lower Mosaic.
+
+The primitive contract is *rectangular*: a set of N_t targets against a set
+of N_s sources (the paper's "i-particles" x "j-particles"). Symmetric
+all-pairs is the special case targets == sources; a target that also appears
+in the source set self-cancels via the softened-zero-distance guard.
+
+Mixed precision follows the paper: evaluation in FP32, caller keeps FP64
+state. Padding particles have zero mass => exactly zero contribution.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import nbody_force, ref
+
+_PAD_COLS = 8
+IMPLS = ("pallas", "pallas_interpret", "xla", "pallas_marked")
+# pallas_marked: ref math inside a PALLAS_VMEM_REGION named scope — the
+# dry-run cost model for the deployed Pallas kernel (Mosaic cannot lower on
+# the CPU dry-run host; hlo_analysis applies VMEM-fusion semantics to the
+# marked region, and the kernel itself is interpret-validated in tests).
+
+
+def _round_up(n: int, m: int) -> int:
+    return ((n + m - 1) // m) * m
+
+
+def pack_targets(pos, vel, n_pad: int):
+    """(N,3)x2 -> (n_pad, 8) target block [x y z 0 vx vy vz 0]."""
+    n = pos.shape[0]
+    f32 = jnp.float32
+    zero = jnp.zeros((n,), f32)
+    cols = [
+        pos[:, 0], pos[:, 1], pos[:, 2], zero,
+        vel[:, 0], vel[:, 1], vel[:, 2], zero,
+    ]
+    tgt = jnp.stack([jnp.asarray(c, f32) for c in cols], axis=1)
+    return jnp.pad(tgt, ((0, n_pad - n), (0, 0)))
+
+
+def pack_sources(pos, vel, mass, n_pad: int):
+    """(N,3)x2 + (N,) -> (8, n_pad) source block [x y z m vx vy vz 0] rows."""
+    n = pos.shape[0]
+    f32 = jnp.float32
+    rows = [
+        pos[:, 0], pos[:, 1], pos[:, 2], mass,
+        vel[:, 0], vel[:, 1], vel[:, 2], jnp.zeros((n,), f32),
+    ]
+    src = jnp.stack([jnp.asarray(r, f32) for r in rows], axis=0)
+    return jnp.pad(src, ((0, 0), (0, n_pad - n)))
+
+
+def pack_acc_targets(acc, n_pad: int):
+    a = jnp.pad(jnp.asarray(acc, jnp.float32), ((0, n_pad - acc.shape[0]), (0, _PAD_COLS - 3)))
+    return a
+
+
+def pack_acc_sources(acc, n_pad: int):
+    a = jnp.pad(
+        jnp.asarray(acc, jnp.float32).T, ((0, _PAD_COLS - 3), (0, n_pad - acc.shape[0]))
+    )
+    return a
+
+
+@partial(jax.jit, static_argnames=("eps", "block_i", "block_j", "impl"))
+def acc_jerk_pot_rect(
+    pos_t, vel_t, pos_s, vel_s, mass_s,
+    *,
+    eps: float = 1e-7,
+    block_i: int = nbody_force.DEFAULT_BLOCK_I,
+    block_j: int = nbody_force.DEFAULT_BLOCK_J,
+    impl: str = "pallas",
+):
+    """(acc, jerk, pot) of N_t targets due to N_s sources, FP32."""
+    if impl in ("xla", "pallas_marked"):
+        f32 = jnp.float32
+        args = (
+            jnp.asarray(pos_t, f32), jnp.asarray(vel_t, f32),
+            jnp.asarray(pos_s, f32), jnp.asarray(vel_s, f32),
+            jnp.asarray(mass_s, f32),
+        )
+        if impl == "pallas_marked":
+            with jax.named_scope("PALLAS_VMEM_REGION"):
+                return ref.acc_jerk_pot_rect(*args, eps=eps)
+        return ref.acc_jerk_pot_rect(*args, eps=eps)
+    n_t, n_s = pos_t.shape[0], pos_s.shape[0]
+    nt_pad = _round_up(n_t, block_i)
+    ns_pad = _round_up(n_s, block_j)
+    tgt = pack_targets(pos_t, vel_t, nt_pad)
+    src = pack_sources(pos_s, vel_s, mass_s, ns_pad)
+    out = nbody_force.acc_jerk_pot_packed(
+        tgt, src, eps=eps, block_i=block_i, block_j=block_j,
+        interpret=(impl == "pallas_interpret"),
+    )[:n_t]
+    return out[:, 0:3], out[:, 3:6], out[:, 6]
+
+
+@partial(jax.jit, static_argnames=("eps", "block_i", "block_j", "impl"))
+def snap_rect(
+    pos_t, vel_t, acc_t, pos_s, vel_s, acc_s, mass_s,
+    *,
+    eps: float = 1e-7,
+    block_i: int = nbody_force.DEFAULT_BLOCK_I,
+    block_j: int = nbody_force.DEFAULT_BLOCK_J,
+    impl: str = "pallas",
+):
+    """Snap of N_t targets due to N_s sources (second Hermite pass), FP32."""
+    if impl in ("xla", "pallas_marked"):
+        f32 = jnp.float32
+        args = (
+            jnp.asarray(pos_t, f32), jnp.asarray(vel_t, f32),
+            jnp.asarray(acc_t, f32),
+            jnp.asarray(pos_s, f32), jnp.asarray(vel_s, f32),
+            jnp.asarray(acc_s, f32), jnp.asarray(mass_s, f32),
+        )
+        if impl == "pallas_marked":
+            with jax.named_scope("PALLAS_VMEM_REGION"):
+                return ref.snap_rect(*args, eps=eps)
+        return ref.snap_rect(*args, eps=eps)
+    n_t, n_s = pos_t.shape[0], pos_s.shape[0]
+    nt_pad = _round_up(n_t, block_i)
+    ns_pad = _round_up(n_s, block_j)
+    tgt = pack_targets(pos_t, vel_t, nt_pad)
+    src = pack_sources(pos_s, vel_s, mass_s, ns_pad)
+    tacc = pack_acc_targets(acc_t, nt_pad)
+    sacc = pack_acc_sources(acc_s, ns_pad)
+    out = nbody_force.snap_packed(
+        tgt, src, tacc, sacc, eps=eps, block_i=block_i, block_j=block_j,
+        interpret=(impl == "pallas_interpret"),
+    )
+    return out[:n_t, 0:3]
+
+
+def acc_jerk_pot(pos, vel, mass, **kw):
+    """Symmetric all-pairs (targets == sources) convenience wrapper."""
+    return acc_jerk_pot_rect(pos, vel, pos, vel, mass, **kw)
+
+
+def snap(pos, vel, acc, mass, **kw):
+    """Symmetric all-pairs snap convenience wrapper."""
+    return snap_rect(pos, vel, acc, pos, vel, acc, mass, **kw)
+
+
+def default_impl() -> str:
+    """Pallas kernels only lower on TPU; interpret everywhere else."""
+    return "pallas" if jax.default_backend() == "tpu" else "pallas_interpret"

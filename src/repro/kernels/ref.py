@@ -1,0 +1,111 @@
+"""Pure-jnp oracle for the all-pairs N-body force kernels.
+
+This is the analogue of the paper's "golden reference": a naive, brute-force
+direct-summation evaluation of accelerations, jerks (and snaps for the
+6th-order Hermite scheme), run at whatever precision the caller requests
+(float64 when x64 is enabled reproduces the paper's CPU golden run).
+
+Conventions (G = 1, N-body units):
+    acc_i  = sum_j m_j * r_ij / (r^2 + eps^2)^{3/2}
+    jerk_i = sum_j m_j * [ v_ij / d3 + q * r_ij / d3 ],  q = -3 (r.v)/d2
+    snap_i = sum_j [ m_j * a_ij / d3 - 6 alpha * J_ij - 3 beta * P_ij ]
+with r_ij = r_j - r_i, v_ij = v_j - v_i, a_ij = a_j - a_i,
+     d2 = r^2 + eps^2, alpha = (r.v)/d2, beta = (v.v + r.a)/d2 + alpha^2,
+     P_ij / J_ij the pairwise acc/jerk contributions.
+
+The potential phi_i = -sum_j m_j / sqrt(d2) is returned alongside for energy
+diagnostics (paper Fig. 4 validation).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def _pairwise_geometry(pos_t, pos_s, eps):
+    """Displacements r_ij = r_j - r_i and softened inverse distances.
+
+    Rectangular contract: axis 0 = target i (N_t), axis 1 = source j (N_s).
+    A target that also appears in the source set self-cancels (dr = 0).
+    """
+    dr = pos_s[None, :, :] - pos_t[:, None, :]
+    r2 = jnp.sum(dr * dr, axis=-1)
+    d2 = r2 + jnp.asarray(eps, pos_t.dtype) ** 2
+    # Self-interactions (exact zero displacement) contribute NOTHING — with
+    # softening d2 = eps^2 > 0 there, so the guard must use the unsoftened
+    # distance (otherwise the potential gains a spurious -m/eps per particle).
+    safe = r2 > 0
+    inv_r = jnp.where(safe, 1.0 / jnp.sqrt(jnp.where(safe, d2, 1.0)), 0.0)
+    return dr, d2, inv_r
+
+
+def acc_jerk_pot_rect(pos_t, vel_t, pos_s, vel_s, mass_s, *, eps: float = 1e-7):
+    """Brute-force acc/jerk/potential of targets due to sources.
+
+    Args:
+        pos_t, vel_t: (N_t, 3) target positions/velocities.
+        pos_s, vel_s: (N_s, 3) source positions/velocities.
+        mass_s: (N_s,) source masses.
+        eps: Plummer softening length (paper Appendix A: 1e-7).
+
+    Returns:
+        acc (N_t, 3), jerk (N_t, 3), pot (N_t,) in ``pos_t.dtype``.
+    """
+    dr, d2, inv_r = _pairwise_geometry(pos_t, pos_s, eps)
+    inv_r3 = inv_r * inv_r * inv_r
+    dv = vel_s[None, :, :] - vel_t[:, None, :]
+
+    t = mass_s[None, :] * inv_r3                    # m_j / d^3
+    rv = jnp.sum(dr * dv, axis=-1)                  # r_ij . v_ij
+    q = -3.0 * rv / jnp.where(d2 > 0, d2, 1.0)      # A_ij * v_r in the paper
+
+    acc = jnp.sum(t[:, :, None] * dr, axis=1)
+    jerk = jnp.sum(t[:, :, None] * (dv + q[:, :, None] * dr), axis=1)
+    pot = -jnp.sum(mass_s[None, :] * inv_r, axis=1)
+    return acc, jerk, pot
+
+
+def acc_jerk_pot(pos, vel, mass, *, eps: float = 1e-7):
+    """Symmetric all-pairs form (targets == sources)."""
+    return acc_jerk_pot_rect(pos, vel, pos, vel, mass, eps=eps)
+
+
+def snap_rect(
+    pos_t, vel_t, acc_t, pos_s, vel_s, acc_s, mass_s, *, eps: float = 1e-7
+):
+    """Brute-force snap of targets due to sources, given accelerations.
+
+    This is the second evaluation pass of the 6th-order Hermite scheme: it
+    needs the acceleration of *both* interaction partners (a_ij = a_j - a_i),
+    which is why the paper's single-pass device kernel (acc+jerk only) caps at
+    4th order; see DESIGN.md §2.2.
+    """
+    dr, d2, inv_r = _pairwise_geometry(pos_t, pos_s, eps)
+    inv_r3 = inv_r * inv_r * inv_r
+    d2s = jnp.where(d2 > 0, d2, 1.0)
+    dv = vel_s[None, :, :] - vel_t[:, None, :]
+    da = acc_s[None, :, :] - acc_t[:, None, :]
+    mass = mass_s
+
+    t = mass[None, :] * inv_r3
+    alpha = jnp.sum(dr * dv, axis=-1) / d2s
+    beta = (jnp.sum(dv * dv, axis=-1) + jnp.sum(dr * da, axis=-1)) / d2s \
+        + alpha * alpha
+
+    p_pair = t[:, :, None] * dr                                   # A0
+    j_pair = t[:, :, None] * dv - 3.0 * alpha[:, :, None] * p_pair  # A1
+    s_pair = t[:, :, None] * da - 6.0 * alpha[:, :, None] * j_pair \
+        - 3.0 * beta[:, :, None] * p_pair                          # A2
+    return jnp.sum(s_pair, axis=1)
+
+
+def snap(pos, vel, acc, mass, *, eps: float = 1e-7):
+    """Symmetric all-pairs snap (targets == sources)."""
+    return snap_rect(pos, vel, acc, pos, vel, acc, mass, eps=eps)
+
+
+def acc_jerk_snap_pot(pos, vel, mass, *, eps: float = 1e-7):
+    """Full two-pass evaluation: (acc, jerk, snap, pot)."""
+    acc, jerk, pot = acc_jerk_pot(pos, vel, mass, eps=eps)
+    snp = snap(pos, vel, acc, mass, eps=eps)
+    return acc, jerk, snp, pot

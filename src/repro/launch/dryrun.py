@@ -1,0 +1,400 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (architecture x input shape) on
+the production meshes and extract the roofline terms.
+
+MUST be imported before any other jax-touching module — the XLA_FLAGS line
+above runs first and forces 512 placeholder CPU devices (jax locks the device
+count at first init).  Never set that flag globally: smoke tests and benches
+see 1 device.
+
+Per cell this script:
+  1. builds the (16,16) single-pod or (2,16,16) multi-pod mesh;
+  2. lowers the target step (train_step / prefill / decode) against abstract
+     ShapeDtypeStruct inputs carrying NamedShardings — no allocation;
+  3. compiles, recording ``memory_analysis()`` (per-device bytes — proves the
+     cell fits), ``cost_analysis()`` (per-device FLOPs/bytes), and the wire
+     bytes of every collective parsed from the optimized HLO;
+  4. writes one JSON to ``experiments/dryrun/``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  PYTHONPATH=src python -m repro.launch.dryrun --nbody --mesh single
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.shardings import MeshRules
+from repro.launch import hlo_analysis as H
+from repro.launch import shapes as S
+from repro.launch.mesh import make_production_mesh
+from repro.models import config as C
+from repro.models import model as M
+from repro.models import params as P
+from repro.optim import AdamW, abstract_state
+from repro.train import make_train_step
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+# hardware constants (TPU v5e)
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link (1 link assumed; conservative)
+
+
+def roofline_terms(flops, bytes_accessed, wire_bytes):
+    return {
+        "compute_s": flops / PEAK_FLOPS,
+        "memory_s": bytes_accessed / HBM_BW,
+        "collective_s": wire_bytes / ICI_BW,
+    }
+
+
+def _model_flops(cfg, case) -> float:
+    """6*N_active*D for train, 2*N_active*D for serve (D = tokens/step)."""
+    n_active = P.count_active(cfg)
+    if case.kind == "train":
+        toks = case.global_batch * case.seq_len
+        return 6.0 * n_active * toks
+    if case.kind == "prefill":
+        return 2.0 * n_active * case.global_batch * case.seq_len
+    return 2.0 * n_active * case.global_batch  # decode: 1 token/seq
+
+
+def lower_cell(arch: str, shape: str, *, multi_pod: bool,
+               rule_overrides: dict | None = None, accum: int = 0,
+               flash: bool = False, accum_dtype="float32"):
+    """Build + lower + compile one cell; returns (record, compiled).
+
+    ``accum=0`` selects the per-arch default microbatching (shapes.TRAIN_ACCUM)
+    for train cells.  Serve cells lower against bf16 weights.
+    """
+    cfg = C.get(arch)
+    if flash:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, attn_impl="flash")
+    case = S.SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    model_size = dict(zip(mesh.axis_names, mesh.devices.shape))["model"]
+    # decode caches: prefer kv-head sharding when it divides the model axis
+    # (no softmax-axis communication); fall back to sequence-sharded caches
+    # for small-kv GQA archs (memory enabler — see EXPERIMENTS.md §Dry-run)
+    if cfg.n_kv_heads % model_size == 0 and not cfg.uses_mla:
+        overrides = {"cache_seq": None}
+    else:
+        overrides = {"cache_seq": "model"}
+    overrides.update(rule_overrides or {})
+    rules = MeshRules.for_mesh(mesh, overrides)
+
+    t0 = time.time()
+    if case.kind == "train":
+        accum = accum or S.TRAIN_ACCUM.get(arch, 1)
+        # the global microbatch (batch/accum) must stay divisible by the
+        # batch-sharding degree, or SPMD silently REPLICATES each microbatch
+        # across the excess batch ranks (observed 16x flops bloat on
+        # deepseek-67b multi-pod — EXPERIMENTS.md §Perf hypothesis log)
+        batch_shards = mesh.size // model_size
+        accum = max(1, min(accum, case.global_batch // batch_shards))
+        opt = AdamW(learning_rate=1e-3)
+        step = make_train_step(cfg, rules, opt, accum=accum,
+                               accum_dtype=jnp.dtype(accum_dtype))
+        params = P.abstract_params(cfg, rules)
+        opt_state = abstract_state(params)
+        batch = S.train_specs(cfg, case, rules)
+        with mesh:
+            lowered = jax.jit(step, donate_argnums=(0, 1)).lower(
+                params, opt_state, batch)
+    elif case.kind == "prefill":
+        def step(params, batch):
+            return M.prefill(cfg, rules, params, batch)
+
+        params = P.abstract_params(cfg, rules, dtype="bfloat16")
+        batch = S.prefill_specs(cfg, case, rules)
+        with mesh:
+            lowered = jax.jit(step).lower(params, batch)
+    else:
+        def step(params, cache, tokens):
+            return M.decode_step(cfg, rules, params, cache, tokens)
+
+        params = P.abstract_params(cfg, rules, dtype="bfloat16")
+        spec = S.decode_specs(cfg, case, rules)
+        with mesh:
+            lowered = jax.jit(step, donate_argnums=(1,)).lower(
+                params, spec["cache"], spec["tokens"])
+    t_lower = time.time() - t0
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    mem = compiled.memory_analysis()
+    # trip-count-aware static analysis (XLA's cost_analysis counts while
+    # bodies once — useless for scan-structured programs; see hlo_analysis)
+    an = H.analyze(compiled.as_text())
+    flops = an["flops"]
+    bytes_acc = an["hbm_bytes"]
+    coll = an["collectives"]
+    terms = roofline_terms(flops, bytes_acc, coll["total"])
+    mf = _model_flops(cfg, case)
+    chips = mesh.size
+
+    record = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "chips": chips,
+        "kind": case.kind,
+        "per_device": {
+            "flops": flops,
+            "dot_flops": an["dot_flops"],
+            "bytes_accessed": bytes_acc,
+            "xla_flops_body_once": float(ca.get("flops", 0.0)),
+            "collective_wire_bytes": coll["total"],
+            "collectives": {k: v for k, v in coll.items()
+                            if k not in ("total",)},
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.output_size_in_bytes
+                           - mem.alias_size_in_bytes
+                           + mem.temp_size_in_bytes),
+        },
+        "roofline": dict(
+            terms,
+            bottleneck=max(terms, key=terms.get).replace("_s", ""),
+            step_time_s=max(terms.values()),
+        ),
+        "model_flops_total": mf,
+        "model_flops_per_chip": mf / chips,
+        "useful_flops_fraction": (mf / chips) / flops if flops else 0.0,
+        "timings": {"lower_s": t_lower, "compile_s": t_compile},
+    }
+    return record, compiled
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool, out_dir: str,
+             tag: str = "", rule_overrides: dict | None = None,
+             accum: int = 0, flash: bool = False, verbose: bool = True,
+             accum_dtype="float32"):
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    ok, why = S.cell_supported(C.get(arch), shape)
+    os.makedirs(out_dir, exist_ok=True)
+    fname = os.path.join(
+        out_dir, f"{arch}__{shape}__{mesh_name}{tag}.json")
+    if not ok:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "skipped": why}
+        with open(fname, "w") as f:
+            json.dump(rec, f, indent=1)
+        if verbose:
+            print(f"[dryrun] SKIP {arch} x {shape} x {mesh_name}: {why}")
+        return rec
+    try:
+        rec, compiled = lower_cell(arch, shape, multi_pod=multi_pod,
+                                   rule_overrides=rule_overrides, accum=accum,
+                                   flash=flash, accum_dtype=accum_dtype)
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "error": f"{type(e).__name__}: {e}",
+               "traceback": traceback.format_exc()[-4000:]}
+        with open(fname, "w") as f:
+            json.dump(rec, f, indent=1)
+        print(f"[dryrun] FAIL {arch} x {shape} x {mesh_name}: {e}")
+        return rec
+    with open(fname, "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        t = rec["roofline"]
+        pd = rec["per_device"]
+        print(f"[dryrun] OK {arch} x {shape} x {mesh_name}: "
+              f"compute {t['compute_s']:.4f}s  memory {t['memory_s']:.4f}s  "
+              f"collective {t['collective_s']:.4f}s  "
+              f"bottleneck={t['bottleneck']}  "
+              f"peak {pd['peak_bytes']/2**30:.2f} GiB/dev  "
+              f"(compile {rec['timings']['compile_s']:.0f}s)")
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# N-body cells (the paper's own workload on the production mesh)
+# ---------------------------------------------------------------------------
+def run_nbody_cell(strategy: str, *, n_particles: int = 409_600,
+                   multi_pod: bool = False, out_dir: str = OUT_DIR,
+                   order: int = 6, tag: str = "", impl: str = "xla",
+                   verbose: bool = True):
+    from repro.core import strategies as ST
+
+    mesh_name = "2x16x16" if multi_pod else "16x16"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    devs = list(mesh.devices.reshape(-1))
+    ev = ST.make_strategy_evaluator(
+        strategy, devices=devs, eps=1e-7, order=order, impl=impl,
+        chips_per_card=2)
+    n = n_particles
+    f64 = jnp.float64 if jax.config.read("jax_enable_x64") else jnp.float32
+    pos = jax.ShapeDtypeStruct((n, 3), f64)
+    vel = jax.ShapeDtypeStruct((n, 3), f64)
+    mass = jax.ShapeDtypeStruct((n,), f64)
+
+    t0 = time.time()
+    lowered = jax.jit(lambda p, v, m: ev(p, v, m)).lower(pos, vel, mass)
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    mem = compiled.memory_analysis()
+    # trip-count-aware static analysis (XLA's cost_analysis counts while
+    # bodies once — useless for scan-structured programs; see hlo_analysis)
+    an = H.analyze(compiled.as_text())
+    flops = an["flops"]
+    bytes_acc = an["hbm_bytes"]
+    coll = an["collectives"]
+    if impl == "pallas_marked":
+        # deployed-kernel HBM model: BlockSpec streaming traffic (residual
+        # marked-path bytes are XLA layout copies the kernel never makes).
+        # tgt blocks stay VMEM-resident across the j sweep (constant block
+        # index); src blocks re-stream once per i block; out written once.
+        import math as _math
+        n_loc = -(-n // mesh.size)
+        n_i = -(-n_loc // 256)
+        passes = 2 if order >= 6 else 1           # acc/jerk + snap sweeps
+        bytes_model = passes * (
+            n_loc * 32 + 32 * float(n) * n_i + 2 * n_loc * 32)
+        bytes_acc = min(bytes_acc, bytes_model)
+        # the XLA stand-in's materialized pairwise buffers do not exist in
+        # the kernel either: peak = operands + gathered sources + VMEM tiles
+        kernel_peak = int(mem.argument_size_in_bytes
+                          + mem.output_size_in_bytes
+                          + 32 * n + (1 << 26))
+        mem = type("M", (), dict(
+            argument_size_in_bytes=mem.argument_size_in_bytes,
+            output_size_in_bytes=mem.output_size_in_bytes,
+            alias_size_in_bytes=mem.alias_size_in_bytes,
+            temp_size_in_bytes=kernel_peak
+            - mem.argument_size_in_bytes - mem.output_size_in_bytes))()
+    terms = roofline_terms(flops, bytes_acc, coll["total"])
+    # the all-pairs kernel is elementwise (VPU) work — the MXU bf16 peak
+    # does not apply; v5e VPU fp32 is ~1/16 of the MXU peak (documented)
+    terms["compute_vpu_s"] = flops / (PEAK_FLOPS / 16.0)
+    # useful flops: acc+jerk ~44 flops/pair + snap pass ~50 flops/pair
+    pair_flops = (44.0 + (50.0 if order >= 6 else 0.0)) * float(n) * n
+    rec = {
+        "arch": f"nbody-{strategy}",
+        "shape": f"N{n}",
+        "mesh": mesh_name,
+        "chips": mesh.size,
+        "kind": "nbody",
+        "per_device": {
+            "flops": flops,
+            "dot_flops": an["dot_flops"],
+            "bytes_accessed": bytes_acc,
+            "xla_flops_body_once": float(ca.get("flops", 0.0)),
+            "collective_wire_bytes": coll["total"],
+            "collectives": {k: v for k, v in coll.items() if k != "total"},
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "peak_bytes": (mem.argument_size_in_bytes
+                           + mem.output_size_in_bytes
+                           - mem.alias_size_in_bytes
+                           + mem.temp_size_in_bytes),
+        },
+        "roofline": dict(
+            terms,
+            bottleneck=max(
+                ("compute_vpu_s", "memory_s", "collective_s"),
+                key=terms.get).replace("_s", ""),
+            step_time_s=max(terms[k] for k in
+                            ("compute_vpu_s", "memory_s", "collective_s")),
+        ),
+        "model_flops_total": pair_flops,
+        "model_flops_per_chip": pair_flops / mesh.size,
+        "useful_flops_fraction": (pair_flops / mesh.size) / flops
+        if flops else 0.0,
+        "timings": {"compile_s": t_compile},
+    }
+    os.makedirs(out_dir, exist_ok=True)
+    fname = os.path.join(out_dir,
+                         f"nbody-{strategy}__N{n}__{mesh_name}{tag}.json")
+    with open(fname, "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        t = rec["roofline"]
+        print(f"[dryrun] OK nbody-{strategy} N={n} x {mesh_name}: "
+              f"compute {t['compute_s']:.4f}s  memory {t['memory_s']:.4f}s  "
+              f"collective {t['collective_s']:.4f}s  "
+              f"bottleneck={t['bottleneck']} (compile {t_compile:.0f}s)")
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(S.SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=("single", "multi", "both"))
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) cell")
+    ap.add_argument("--nbody", action="store_true",
+                    help="N-body strategy cells instead of LM cells")
+    ap.add_argument("--strategy", default=None,
+                    help="nbody strategy (default: all four)")
+    ap.add_argument("--n-particles", type=int, default=409_600)
+    ap.add_argument("--out", default=OUT_DIR)
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--accum", type=int, default=0)
+    ap.add_argument("--flash", action="store_true",
+                    help="attn_impl=flash (Pallas kernel / marked region)")
+    ap.add_argument("--nbody-impl", default="xla",
+                    choices=("xla", "pallas_marked"))
+    args = ap.parse_args()
+
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    if args.nbody:
+        from repro.core.strategies import STRATEGIES
+        strats = [args.strategy] if args.strategy else list(STRATEGIES)
+        for mp in meshes:
+            for st in strats:
+                run_nbody_cell(st, n_particles=args.n_particles,
+                               multi_pod=mp, out_dir=args.out, tag=args.tag,
+                               impl=args.nbody_impl)
+        return
+
+    archs = [args.arch] if args.arch else C.available()
+    shps = [args.shape] if args.shape else list(S.SHAPES)
+    if not (args.all or args.arch or args.shape):
+        ap.error("pass --arch/--shape, --all, or --nbody")
+    for mp in meshes:
+        for arch in archs:
+            for shape in shps:
+                run_cell(arch, shape, multi_pod=mp, out_dir=args.out,
+                         tag=args.tag, accum=args.accum,
+                         rule_overrides=None,
+                         flash=args.flash)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module constant) so importing
+this module never touches jax device state; the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before any jax
+import and then builds either the single-pod (16, 16) = 256-chip mesh or the
+2-pod (2, 16, 16) = 512-chip mesh.
+
+Axis semantics (DESIGN.md §6):
+  pod   — data-parallel across pods (gradient all-reduce over DCN/ICI);
+  data  — data-parallel + FSDP parameter sharding within a pod;
+  model — tensor/expert parallel (heads, d_ff, vocab, experts).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == n:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, found {len(devices)}; "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512")
+    # more devices than the mesh needs (512 placeholders, 256-chip mesh)
+    return Mesh(np.asarray(devices[:n]).reshape(shape), axes)
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str],
+              devices: Optional[Sequence[jax.Device]] = None) -> Mesh:
+    """Small helper for tests: mesh over an explicit device subset."""
+    devices = list(devices if devices is not None else jax.devices())
+    n = int(np.prod(shape))
+    return Mesh(np.asarray(devices[:n]).reshape(tuple(shape)), tuple(axes))

@@ -1,0 +1,1 @@
+from repro.models import config, layers, model, params, ssm  # noqa: F401

@@ -1,0 +1,455 @@
+"""Model layers: norms, RoPE/M-RoPE, attention (GQA / MLA / chunked),
+MoE dispatch, Mamba2 SSD and xLSTM cells.
+
+Numerics: activations in ``cfg.dtype`` (bf16 default); softmax, router
+probabilities, norm statistics and SSM/state recurrences in fp32.
+
+The chunked attention (``_attn_streamed``) streams KV blocks against resident
+query blocks with a running softmax — structurally the paper's
+target-sharded / source-streamed N-body pattern (DESIGN.md §5), and the
+memory-enabler for the 32k prefill shapes.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import MeshRules
+from repro.models.config import ArchConfig
+
+NEG_INF = -1e30
+
+
+# --------------------------------------------------------------------------
+# norms / embeddings
+# --------------------------------------------------------------------------
+def rms_norm(x, w, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * w.astype(dt)
+
+
+def embed(tokens, table, dtype):
+    return jnp.take(table, tokens, axis=0).astype(dtype)
+
+
+def unembed(x, table_or_head, *, tied: bool):
+    w = table_or_head.astype(x.dtype)
+    if tied:
+        return jnp.einsum("...d,vd->...v", x, w)
+    return jnp.einsum("...d,dv->...v", x, w)
+
+
+# --------------------------------------------------------------------------
+# RoPE / M-RoPE
+# --------------------------------------------------------------------------
+def rope_freqs(head_dim: int, theta: float):
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x, positions3, sections, theta: float):
+    """M-RoPE (qwen2-vl): positions3 (3, ..., S) = (t, h, w) streams;
+    ``sections`` split the hd/2 frequency bands across the three streams."""
+    hd = x.shape[-1]
+    half = hd // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = rope_freqs(hd, theta)
+    # band i uses position stream sec_id[i]
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(sections),
+                        total_repeat_length=half)
+    onehot = jax.nn.one_hot(sec_id, 3, dtype=jnp.float32)   # (half, 3)
+    ang_all = positions3[..., None].astype(jnp.float32) * freqs  # (3,...,S,half)
+    ang = jnp.einsum("p...h,hp->...h", ang_all, onehot)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def text_mrope_positions(positions):
+    """Text-only M-RoPE: all three streams equal the 1-D positions."""
+    return jnp.broadcast_to(positions[None], (3,) + positions.shape)
+
+
+def vlm_mrope_positions(batch: int, n_patches: int, n_text: int, grid: int):
+    """(t, h, w) streams for [image patches | text] sequences (stub frontend:
+    one image of ``grid``-wide raster-ordered patches at t=0, then text)."""
+    idx = jnp.arange(n_patches, dtype=jnp.int32)
+    hh, ww = idx // grid, idx % grid
+    t_img = jnp.zeros((n_patches,), jnp.int32)
+    t_txt = jnp.arange(1, n_text + 1, dtype=jnp.int32)
+    t = jnp.concatenate([t_img, t_txt])
+    h = jnp.concatenate([hh, t_txt])
+    w = jnp.concatenate([ww, t_txt])
+    pos3 = jnp.stack([t, h, w])                          # (3, S)
+    return jnp.broadcast_to(pos3[:, None, :], (3, batch, pos3.shape[-1]))
+
+
+# --------------------------------------------------------------------------
+# attention cores
+# --------------------------------------------------------------------------
+def _attn_full(q, k, v, *, causal: bool, q_pos=None, kv_pos=None, kv_len=None):
+    """Grouped-query einsum attention: q (B,Sq,H,hd), k/v (B,Sk,KV,hd).
+
+    KV heads are NEVER materialized H/KV-fold (the classic ``repeat_kv`` is a
+    pure memory/reshard pessimization on TPU): queries are reshaped to
+    (KV, group) and contracted against the kv heads directly, which also
+    keeps a seq- or head-sharded KV cache layout stable under SPMD.
+    """
+    b, sq, h, hd = q.shape
+    kv, vd = k.shape[2], v.shape[-1]          # v head dim may differ (MLA)
+    g = h // kv
+    scale = hd ** -0.5
+    qg = q.reshape(b, sq, kv, g, hd)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32) * scale
+    mask = None
+    if causal:
+        qp = q_pos if q_pos is not None else jnp.arange(sq)
+        kp = kv_pos if kv_pos is not None else jnp.arange(k.shape[1])
+        mask = qp[:, None] >= kp[None, :]
+    if kv_len is not None:
+        valid = jnp.arange(k.shape[1])[None, :] < kv_len
+        mask = valid if mask is None else (mask & valid)
+    if mask is not None:
+        scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v)
+    return out.reshape(b, sq, h, vd)
+
+
+def _attn_streamed(q, k, v, *, causal: bool, q_chunk: int):
+    """Memory-efficient attention: resident query blocks, streamed KV blocks
+    with running (m, l, o) softmax state.  Pure-XLA flash-style; grouped-query
+    form (k/v carry KV heads, never repeated)."""
+    b, sq, h, hd = q.shape
+    sk, kv, vd = k.shape[1], k.shape[2], v.shape[-1]
+    g = h // kv
+    scale = hd ** -0.5
+    nq = sq // q_chunk
+    kv_chunk = min(sk, max(q_chunk, 512))
+    nk = sk // kv_chunk
+
+    q_blocks = q.reshape(b, nq, q_chunk, kv, g, hd)
+
+    def per_qblock(qi, qb):
+        q_off = qi * q_chunk
+
+        def inner(carry, ki):
+            m, l, o = carry
+            kb = jax.lax.dynamic_slice_in_dim(k, ki * kv_chunk, kv_chunk, 1)
+            vb = jax.lax.dynamic_slice_in_dim(v, ki * kv_chunk, kv_chunk, 1)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qb, kb).astype(jnp.float32)
+            s = s * scale
+            if causal:
+                qp = q_off + jnp.arange(q_chunk)
+                kp = ki * kv_chunk + jnp.arange(kv_chunk)
+                s = jnp.where((qp[:, None] >= kp[None, :])[None, None, None],
+                              s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + p.sum(-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p.astype(qb.dtype), vb
+            ).astype(jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((b, kv, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv, g, q_chunk), jnp.float32)
+        o0 = jnp.zeros((b, kv, g, q_chunk, vd), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(inner, (m0, l0, o0), jnp.arange(nk))
+        out = o / jnp.maximum(l[..., None], 1e-30)
+        out = jnp.moveaxis(out, 3, 1)                      # (b, qc, kv, g, vd)
+        return out.reshape(b, q_chunk, h, vd).astype(q.dtype)
+
+    outs = jax.lax.map(
+        lambda args: per_qblock(*args),
+        (jnp.arange(nq), jnp.moveaxis(q_blocks, 1, 0)),
+    )                                                      # (nq, b, qc, h, vd)
+    return jnp.moveaxis(outs, 0, 1).reshape(b, sq, h, vd)
+
+
+def _attn_dispatch(cfg: ArchConfig, q, k, v, *, causal: bool):
+    """Route to the configured attention implementation.
+
+    ``flash``: the Pallas grouped-query flash kernel on TPU; on other
+    backends the same math runs inside a ``PALLAS_VMEM_REGION`` named scope
+    so the dry-run's HLO analyzer applies VMEM-fusion (kernel) cost
+    semantics (see launch/hlo_analysis.py).  The kernel itself is validated
+    in interpret mode against the XLA path (tests/test_flash_attention.py).
+    """
+    if cfg.attn_impl == "flash":
+        if jax.default_backend() == "tpu":
+            from repro.kernels.flash_attention import flash_attention
+
+            bq = min(512, q.shape[1])
+            bk = min(512, k.shape[1])
+            return flash_attention(q, k, v, causal=causal,
+                                   block_q=bq, block_k=bk)
+        with jax.named_scope("PALLAS_VMEM_REGION"):
+            if q.shape[1] >= cfg.attn_chunked_above:
+                return _attn_streamed(q, k, v, causal=causal,
+                                      q_chunk=cfg.attn_chunk)
+            return _attn_full(q, k, v, causal=causal)
+    if q.shape[1] >= cfg.attn_chunked_above:
+        return _attn_streamed(q, k, v, causal=causal, q_chunk=cfg.attn_chunk)
+    return _attn_full(q, k, v, causal=causal)
+
+
+def attention(
+    cfg: ArchConfig,
+    rules: MeshRules,
+    p: dict,
+    x,
+    *,
+    positions,
+    causal: bool = True,
+    memory=None,              # cross-attention memory (enc-dec)
+    cache: Optional[dict] = None,
+    prefix: str = "",
+    prefill_len: Optional[int] = None,
+):
+    """GQA attention with optional qk-norm, M-RoPE, cross-attn and KV cache.
+
+    ``prefill_len``: run normal (causal) attention but additionally return the
+    post-RoPE k/v padded to that length — the prefill cache-fill path.
+
+    Returns (out, new_cache_slice | None).
+    """
+    b, s, d = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    dt = x.dtype
+    src = memory if memory is not None else x
+
+    q = jnp.einsum("bsd,dh->bsh", x, p[prefix + "q"].astype(dt))
+    k = jnp.einsum("bsd,dh->bsh", src, p[prefix + "k"].astype(dt))
+    v = jnp.einsum("bsd,dh->bsh", src, p[prefix + "v"].astype(dt))
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, src.shape[1], kv, hd)
+    v = v.reshape(b, src.shape[1], kv, hd)
+    q = rules.shard(q, "batch", "seq_q", "heads", None)
+    k = rules.shard(k, "batch", None, "kv_heads", None)
+    v = rules.shard(v, "batch", None, "kv_heads", None)
+
+    if cfg.qk_norm and not prefix:
+        q = rms_norm(q, p["qn"], cfg.norm_eps)
+        k = rms_norm(k, p["kn"], cfg.norm_eps)
+
+    if memory is None:  # self-attention: rotary embedding
+        if cfg.mrope:
+            q = apply_mrope(q, positions, cfg.mrope_sections, cfg.rope_theta)
+            k = apply_mrope(k, positions, cfg.mrope_sections, cfg.rope_theta)
+        else:
+            q = apply_rope(q, positions, cfg.rope_theta)
+            k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None and memory is None:
+        # decode: write this step's k/v at cur_len, attend over the cache
+        ck, cv, cur = cache["k"], cache["v"], cache["len"]
+        ck = jax.lax.dynamic_update_slice_in_dim(ck, k.astype(ck.dtype), cur, 1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cv, v.astype(cv.dtype), cur, 1)
+        new_cache = {"k": ck, "v": cv}
+        # the query is the newest token: the kv_len mask IS the causal mask
+        out = _attn_full(q, ck.astype(dt), cv.astype(dt), causal=False,
+                         kv_len=cur + s)
+    else:
+        if prefill_len is not None and memory is None:
+            pad = prefill_len - k.shape[1]
+            new_cache = {
+                "k": jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0))),
+                "v": jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0))),
+            }
+        out = _attn_dispatch(cfg, q, k, v, causal=causal)
+
+    out = rules.shard(out, "batch", None, "heads", None)
+    out = out.reshape(b, s, h * hd)
+    out = jnp.einsum("bsh,hd->bsd", out, p[prefix + "o"].astype(dt))
+    return rules.shard(out, "batch", "seq", "d_model"), new_cache
+
+
+# --------------------------------------------------------------------------
+# MLA (deepseek-v2)
+# --------------------------------------------------------------------------
+def mla_attention(
+    cfg: ArchConfig,
+    rules: MeshRules,
+    p: dict,
+    x,
+    *,
+    positions,
+    cache: Optional[dict] = None,
+    prefill_len: Optional[int] = None,
+):
+    """Multi-head Latent Attention. Cache holds only (c_kv, k_rope) — the
+    paper's KV-compression; decode uses the absorbed-projection form."""
+    b, s, d = x.shape
+    h = cfg.n_heads
+    hd, vhd, rhd = cfg.head_dim, cfg.v_head_dim, cfg.rope_head_dim
+    kvlr = cfg.kv_lora_rank
+    dt = x.dtype
+
+    # --- queries ---
+    cq = jnp.einsum("bsd,dr->bsr", x, p["q_a"].astype(dt))
+    cq = rms_norm(cq, p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rh->bsh", cq, p["q_b"].astype(dt))
+    q = q.reshape(b, s, h, hd + rhd)
+    q_nope, q_rope = q[..., :hd], q[..., hd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    # --- latent kv ---
+    ckv_full = jnp.einsum("bsd,dr->bsr", x, p["kv_a"].astype(dt))
+    c_kv, k_rope = ckv_full[..., :kvlr], ckv_full[..., kvlr:]
+    c_kv = rms_norm(c_kv, p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)
+
+    wkv_b = p["kv_b"].astype(dt).reshape(kvlr, h, hd + vhd)
+    w_uk, w_uv = wkv_b[..., :hd], wkv_b[..., hd:]
+
+    scale = (hd + rhd) ** -0.5
+
+    if cache is not None:
+        cur = cache["len"]
+        ckv_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["c_kv"], c_kv.astype(cache["c_kv"].dtype), cur, 1)
+        krope_c = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_rope"], k_rope[:, :, 0, :].astype(cache["k_rope"].dtype),
+            cur, 1)
+        new_cache = {"c_kv": ckv_c, "k_rope": krope_c}
+        # absorbed form: q_eff = q_nope @ W_uk  ->  scores in latent space
+        q_eff = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)
+        s_lat = jnp.einsum("bshr,bkr->bhsk", q_eff, ckv_c.astype(dt))
+        s_rope = jnp.einsum("bshd,bkd->bhsk", q_rope, krope_c.astype(dt))
+        scores = (s_lat + s_rope).astype(jnp.float32) * scale
+        valid = jnp.arange(ckv_c.shape[1])[None, :] < (cur + s)
+        scores = jnp.where(valid[None, None], scores, NEG_INF)
+        pr = jax.nn.softmax(scores, axis=-1).astype(dt)
+        o_lat = jnp.einsum("bhsk,bkr->bshr", pr, ckv_c.astype(dt))
+        out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv)
+    else:
+        new_cache = None
+        if prefill_len is not None:
+            pad = prefill_len - s
+            new_cache = {
+                "c_kv": jnp.pad(c_kv, ((0, 0), (0, pad), (0, 0))),
+                "k_rope": jnp.pad(k_rope[:, :, 0, :],
+                                  ((0, 0), (0, pad), (0, 0))),
+            }
+        k_nope = jnp.einsum("bkr,rhd->bkhd", c_kv, w_uk)
+        v = jnp.einsum("bkr,rhd->bkhd", c_kv, w_uv)
+        k_rope_b = jnp.broadcast_to(k_rope, (b, s, h, rhd))
+        qf = jnp.concatenate([q_nope, q_rope], axis=-1)
+        kf = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        qf = rules.shard(qf, "batch", None, "heads", None)
+        kf = rules.shard(kf, "batch", None, "heads", None)
+        out = _attn_dispatch(cfg, qf, kf, v, causal=True)
+
+    out = out.reshape(b, s, h * vhd)
+    out = jnp.einsum("bsh,hd->bsd", out, p["o"].astype(dt))
+    return rules.shard(out, "batch", "seq", "d_model"), new_cache
+
+
+# --------------------------------------------------------------------------
+# FFN / MoE
+# --------------------------------------------------------------------------
+def ffn(cfg: ArchConfig, rules: MeshRules, p: dict, x, *, keys=("wg", "wu", "wd")):
+    dt = x.dtype
+    g = jnp.einsum("bsd,df->bsf", x, p[keys[0]].astype(dt))
+    u = jnp.einsum("bsd,df->bsf", x, p[keys[1]].astype(dt))
+    h = jax.nn.silu(g) * u
+    h = rules.shard(h, "batch", "seq", "d_ff")
+    out = jnp.einsum("bsf,fd->bsd", h, p[keys[2]].astype(dt))
+    return rules.shard(out, "batch", "seq", "d_model")
+
+
+def moe_ffn(cfg: ArchConfig, rules: MeshRules, p: dict, x):
+    """Top-k MoE with sort-based capacity dispatch (DESIGN.md §6).
+
+    Each sequence is a dispatch group: tokens are argsorted by expert id into
+    contiguous (E, C) slots, experts run as one batched matmul sharded over
+    the 'model' axis, and outputs scatter back via segment-sum.  Tokens over
+    capacity are dropped (standard GShard semantics).  For single-token
+    decode the exact dense-combine path is used instead (no drops).
+
+    Returns (out, aux_loss).
+    """
+    b, s, d = x.shape
+    e, k, f = cfg.n_experts, cfg.top_k, cfg.moe_d_ff
+    dt = x.dtype
+
+    logits = jnp.einsum("bsd,de->bse", x, p["router"].astype(dt))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, k)                  # (b, s, k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux loss (Switch-style: f_i * P_i)
+    me = probs.mean(axis=(0, 1))                            # (e,)
+    ce = jnp.zeros((e,), jnp.float32).at[top_i.reshape(-1)].add(
+        1.0 / (b * s * k))
+    aux = e * jnp.sum(me * ce) * cfg.router_aux_coef
+
+    if s == 1:
+        # exact dense combine for decode (weights for non-selected = 0)
+        bi = jnp.arange(b)[:, None, None]
+        si = jnp.arange(s)[None, :, None]
+        w_full = jnp.zeros((b, s, e), jnp.float32).at[bi, si, top_i].add(top_p)
+        hx = jnp.einsum("bsd,edf->besf", x, p["we_g"].astype(dt))
+        ux = jnp.einsum("bsd,edf->besf", x, p["we_u"].astype(dt))
+        yx = jnp.einsum("besf,efd->besd", jax.nn.silu(hx) * ux,
+                        p["we_d"].astype(dt))
+        out = jnp.einsum("besd,bse->bsd", yx, w_full.astype(dt))
+    else:
+        cap = max(8, int(math.ceil(s * k / e * cfg.capacity_factor)))
+
+        def dispatch_one(xg, ig, pg):
+            """xg: (s, d); ig/pg: (s, k) -> (out_g: (s, d))."""
+            flat_i = ig.reshape(-1)                          # (s*k,)
+            order = jnp.argsort(flat_i)
+            sorted_e = flat_i[order]
+            tok = order // k                                 # token of slot
+            counts = jnp.bincount(sorted_e, length=e)
+            starts = jnp.cumsum(counts) - counts
+            pos = jnp.arange(s * k) - starts[sorted_e]
+            ok = pos < cap
+            # over-capacity entries get an out-of-bounds slot -> dropped
+            slot = jnp.where(ok, sorted_e * cap + pos, e * cap)
+            # (e*cap,) token index per slot; empty slots -> token s (pad row)
+            slot_tok = jnp.full((e * cap,), s, jnp.int32).at[slot].set(
+                tok.astype(jnp.int32), mode="drop")
+            xg_pad = jnp.concatenate([xg, jnp.zeros((1, d), dt)], 0)
+            xe = xg_pad[slot_tok].reshape(e, cap, d)
+            h = jnp.einsum("ecd,edf->ecf", xe, p["we_g"].astype(dt))
+            u = jnp.einsum("ecd,edf->ecf", xe, p["we_u"].astype(dt))
+            ye = jnp.einsum("ecf,efd->ecd", jax.nn.silu(h) * u,
+                            p["we_d"].astype(dt))
+            # combine: weight per slot, scatter-add back to tokens
+            wslot = jnp.zeros((e * cap,), jnp.float32).at[slot].set(
+                pg.reshape(-1)[order], mode="drop")
+            contrib = ye.reshape(e * cap, d) * wslot[:, None].astype(dt)
+            out_g = jax.ops.segment_sum(contrib, slot_tok, num_segments=s + 1)
+            return out_g[:s]
+
+        out = jax.vmap(dispatch_one)(x, top_i, top_p)
+        out = rules.shard(out, "batch", "seq", "d_model")
+
+    if cfg.n_shared_experts:
+        out = out + ffn(cfg, rules, p, x, keys=("ws_g", "ws_u", "ws_d"))
+    return out, aux

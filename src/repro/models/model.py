@@ -1,0 +1,714 @@
+"""Model assembly: train forward + loss, prefill, and single-token decode for
+every assigned architecture family.
+
+Families (DESIGN.md §5):
+  dense / vlm   — pre-norm decoder, GQA (+ M-RoPE and patch-stub for vlm)
+  moe           — as dense but MoE FFN (+ MLA + leading dense layers for
+                  deepseek-v2)
+  hybrid        — Mamba2 (SSD) backbone with ONE shared-weight attention+FFN
+                  block applied every ``attn_every`` layers (zamba2)
+  ssm           — xLSTM: groups of (slstm_every-1) mLSTM blocks + 1 sLSTM
+  audio         — encoder-decoder; the speech frontend is a stub (precomputed
+                  frame embeddings arrive in the batch)
+
+Per-layer parameters are stacked and consumed with ``lax.scan`` (compile time
+O(1) in depth); the scan body is rematerialized (``jax.checkpoint``) for
+training when ``cfg.remat != "none"``.
+
+Decode caches are pytrees of stacked per-layer arrays plus a scalar ``len``;
+``cache_spec`` builds the matching ShapeDtypeStruct tree for the dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import MeshRules
+from repro.models import layers, ssm
+from repro.models.config import ArchConfig
+from repro.models.params import param_defs  # noqa: F401  (re-export site)
+
+F32 = jnp.float32
+
+
+def _adt(cfg: ArchConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _maybe_remat(cfg: ArchConfig, fn, *, train: bool):
+    if not train or cfg.remat == "none":
+        return fn
+    policy = None
+    if cfg.remat == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+    return jax.checkpoint(fn, policy=policy)
+
+
+# ===========================================================================
+# block forwards
+# ===========================================================================
+def transformer_block(cfg, rules, p, x, *, positions, causal=True,
+                      memory=None, cache=None, prefill_len=None):
+    """Pre-norm attention (+cross) + FFN/MoE block.
+
+    Returns (x, new_kv_cache_or_None, aux_loss).
+    """
+    xa = layers.rms_norm(x, p["ln1"], cfg.norm_eps)
+    if cfg.uses_mla:
+        out, kv = layers.mla_attention(
+            cfg, rules, p, xa, positions=positions, cache=cache,
+            prefill_len=prefill_len)
+    else:
+        out, kv = layers.attention(
+            cfg, rules, p, xa, positions=positions, causal=causal,
+            cache=cache, prefill_len=prefill_len)
+    x = x + out
+
+    if "xq" in p:  # encoder-decoder cross-attention
+        xc = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+        out, _ = layers.attention(
+            cfg, rules, p, xc, positions=positions, causal=False,
+            memory=memory, prefix="x")
+        x = x + out
+        xf = layers.rms_norm(x, p["lnx"], cfg.norm_eps)
+    else:
+        xf = layers.rms_norm(x, p["ln2"], cfg.norm_eps)
+
+    aux = jnp.zeros((), F32)
+    if "router" in p:
+        out, aux = layers.moe_ffn(cfg, rules, p, xf)
+        x = x + out
+    else:
+        x = x + layers.ffn(cfg, rules, p, xf)
+    return x, kv, aux
+
+
+def mamba_block(cfg, rules, p, x, *, state=None, conv_cache=None):
+    """Mamba2 block (SSD mixer).  Returns (x, state, conv_cache)."""
+    b, s, d = x.shape
+    dt_act = x.dtype
+    di, ns = cfg.d_inner, cfg.ssm_state
+    nh, hp = di // cfg.ssm_head_dim, cfg.ssm_head_dim
+
+    xn = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+    xi = jnp.einsum("bsd,df->bsf", xn, p["wx"].astype(dt_act))
+    xi = rules.shard(xi, "batch", "seq", "d_ff")
+    if conv_cache is not None:
+        xi, conv_cache = ssm.causal_conv(xi, p["conv"].astype(dt_act),
+                                         cache=conv_cache)
+    else:
+        xi = ssm.causal_conv(xi, p["conv"].astype(dt_act))
+    xi = jax.nn.silu(xi)
+
+    b_mat = jnp.einsum("bsd,dn->bsn", xn, p["wB"].astype(dt_act)).astype(F32)
+    c_mat = jnp.einsum("bsd,dn->bsn", xn, p["wC"].astype(dt_act)).astype(F32)
+    dtv = jax.nn.softplus(
+        jnp.einsum("bsd,dh->bsh", xn, p["wdt"].astype(dt_act)).astype(F32)
+        + p["dt_bias"].astype(F32))
+    a_neg = -jnp.exp(p["a_log"].astype(F32))
+    xh = xi.reshape(b, s, nh, hp).astype(F32)
+
+    if s == 1 and state is not None:
+        y, state = ssm.ssd_step(xh[:, 0], dtv[:, 0], a_neg,
+                                b_mat[:, 0], c_mat[:, 0], state)
+        y = y[:, None]
+    else:
+        y, state = ssm.ssd_chunked(xh, dtv, a_neg, b_mat, c_mat,
+                                   chunk=min(cfg.chunk_size, s), state0=state)
+    y = y + p["d_skip"].astype(F32)[:, None] * xh
+    y = y.reshape(b, s, di).astype(dt_act)
+    gate = jax.nn.silu(jnp.einsum("bsd,df->bsf", xn, p["wz"].astype(dt_act)))
+    y = layers.rms_norm(y * gate, p["gnorm"], cfg.norm_eps)
+    out = jnp.einsum("bsf,fd->bsd", y, p["wo"].astype(dt_act))
+    return x + rules.shard(out, "batch", "seq", "d_model"), state, conv_cache
+
+
+def mlstm_block(cfg, rules, p, x, *, carry=None):
+    """xLSTM mLSTM block (factor-2 up-projection, per-head cell)."""
+    b, s, d = x.shape
+    dt_act = x.dtype
+    di = 2 * d
+    nh = cfg.n_heads
+    dk = di // nh
+
+    xn = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+    up = jnp.einsum("bsd,df->bsf", xn, p["w_up"].astype(dt_act))
+    up = rules.shard(up, "batch", "seq", "d_ff")
+    xm, zg = jnp.split(up, 2, axis=-1)
+
+    xh = xm.reshape(b, s, nh, dk).astype(F32)
+    q = jnp.einsum("bshk,hkl->bshl", xh, p["wq"].astype(F32))
+    k = jnp.einsum("bshk,hkl->bshl", xh, p["wk"].astype(F32))
+    v = jnp.einsum("bshk,hkl->bshl", xh, p["wv"].astype(F32))
+    gates = jnp.einsum("bsf,fg->bsg", xm, p["w_if"].astype(dt_act)).astype(F32)
+    gi, gf = gates[..., :nh], gates[..., nh:]
+
+    if s == 1 and carry is not None:
+        h, carry = ssm.mlstm_step(q[:, 0], k[:, 0], v[:, 0],
+                                  gi[:, 0], gf[:, 0], carry)
+        h = h[:, None]
+    else:
+        h, carry = ssm.mlstm_chunked(q, k, v, gi, gf,
+                                     chunk=min(cfg.chunk_size, s),
+                                     carry0=carry)
+    h = h.reshape(b, s, di).astype(dt_act)
+    h = layers.rms_norm(h, p["onorm"], cfg.norm_eps) * jax.nn.silu(zg)
+    out = jnp.einsum("bsf,fd->bsd", h, p["w_down"].astype(dt_act))
+    return x + rules.shard(out, "batch", "seq", "d_model"), carry
+
+
+def slstm_block(cfg, rules, p, x, *, carry=None):
+    """xLSTM sLSTM block (true time recurrence)."""
+    b, s, d = x.shape
+    dt_act = x.dtype
+    nh = cfg.n_heads
+    hd = d // nh
+
+    xn = layers.rms_norm(x, p["ln"], cfg.norm_eps)
+    gx = (jnp.einsum("bsd,dg->bsg", xn, p["w_in"].astype(dt_act))
+          + p["b"].astype(dt_act)).astype(F32)
+    gx = gx.reshape(b, s, nh, 4, hd)
+
+    if s == 1 and carry is not None:
+        h, carry = ssm.slstm_step(gx[:, 0], p["r"].astype(F32), carry)
+        h = h[:, None]
+    else:
+        h, carry = ssm.slstm_scan(gx, p["r"].astype(F32), n_heads=nh,
+                                  carry0=carry)
+    h = h.reshape(b, s, d).astype(dt_act)
+    h = layers.rms_norm(h, p["onorm"], cfg.norm_eps)
+    out = jnp.einsum("bsd,de->bse", h, p["w_down"].astype(dt_act))
+    return x + rules.shard(out, "batch", "seq", "d_model"), carry
+
+
+# ===========================================================================
+# positions
+# ===========================================================================
+def _positions(cfg: ArchConfig, batch: dict, s: int, b: int):
+    if cfg.mrope:
+        if "patches" in batch:
+            f = batch["patches"].shape[1]
+            grid = max(1, int(round(f ** 0.5)))
+            return layers.vlm_mrope_positions(b, f, s - f, grid)
+        return layers.text_mrope_positions(
+            jnp.broadcast_to(jnp.arange(s), (b, s)))
+    return jnp.arange(s)
+
+
+def _decode_positions(cfg: ArchConfig, cur, b: int, offset=0):
+    """Positions for the single new token at index ``cur``; ``offset`` is the
+    frontend (patch) span recorded in the cache at prefill time."""
+    if cfg.mrope:
+        t = jnp.maximum(cur - offset, 0) + 1
+        pos = jnp.broadcast_to(t, (b, 1)).astype(jnp.int32)
+        return jnp.stack([pos, pos, pos])          # text stream: t == h == w
+    return jnp.broadcast_to(cur, (1, 1)).astype(jnp.int32)
+
+
+# ===========================================================================
+# forward (training / no-cache)
+# ===========================================================================
+def forward(cfg: ArchConfig, rules: MeshRules, params: dict, batch: dict,
+            *, train: bool = True):
+    """Returns (logits, aux_loss).  ``batch`` carries tokens (+stub frontends)."""
+    dt_act = _adt(cfg)
+    tokens = batch["tokens"]
+    b = tokens.shape[0]
+    x = layers.embed(tokens, params["embed"], dt_act)
+
+    if cfg.family == "vlm" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(dt_act), x], axis=1)
+    x = rules.shard(x, "batch", "seq", "d_model")
+    s = x.shape[1]
+    positions = _positions(cfg, batch, s, b)
+
+    aux = jnp.zeros((), F32)
+
+    if cfg.family in ("dense", "vlm"):
+        x, aux = _scan_attn_blocks(cfg, rules, params["blocks"], x,
+                                   positions, train)
+    elif cfg.family == "moe":
+        if cfg.first_k_dense:
+            x, a0 = _scan_attn_blocks(cfg, rules, params["dense_blocks"], x,
+                                      positions, train)
+            aux = aux + a0
+        x, a1 = _scan_attn_blocks(cfg, rules, params["blocks"], x,
+                                  positions, train)
+        aux = aux + a1
+    elif cfg.family == "hybrid":
+        x = _hybrid_forward(cfg, rules, params, x, positions, train)
+    elif cfg.family == "ssm":
+        x = _xlstm_forward(cfg, rules, params, x, train)
+    elif cfg.family == "audio":
+        memory = _audio_encoder(cfg, rules, params, batch["frames"], train)
+        x, aux = _scan_attn_blocks(cfg, rules, params["dec_blocks"], x,
+                                   positions, train, memory=memory)
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if cfg.family == "vlm" and "patches" in batch:
+        x = x[:, batch["patches"].shape[1]:]       # logits over text span only
+    logits = layers.unembed(
+        x, params["embed"] if cfg.tie_embeddings else params["lm_head"],
+        tied=cfg.tie_embeddings)
+    return rules.shard(logits, "batch", "seq", "vocab"), aux
+
+
+def _scan_attn_blocks(cfg, rules, stacked, x, positions, train, *,
+                      memory=None, causal=True):
+    def body(carry, pl):
+        x, aux = carry
+        x, _, a = transformer_block(cfg, rules, pl, x, positions=positions,
+                                    causal=causal, memory=memory)
+        return (x, aux + a), None
+
+    body = _maybe_remat(cfg, body, train=train)
+    (x, aux), _ = jax.lax.scan(body, (x, jnp.zeros((), F32)), stacked)
+    return x, aux
+
+
+def _audio_encoder(cfg, rules, params, frames, train):
+    x = frames.astype(_adt(cfg))
+    x = rules.shard(x, "batch", "seq", "d_model")
+    pos = jnp.arange(x.shape[1])
+    x, _ = _scan_attn_blocks(cfg, rules, params["enc_blocks"], x, pos, train,
+                             causal=False)
+    return x
+
+
+def _hybrid_split(cfg, blocks):
+    """Split the stacked Mamba blocks into (n_groups, every, ...) + tail."""
+    every = cfg.attn_every
+    n_g, tail = cfg.n_layers // every, cfg.n_layers % every
+    head = jax.tree.map(
+        lambda a: a[: n_g * every].reshape((n_g, every) + a.shape[1:]),
+        blocks)
+    tailp = jax.tree.map(lambda a: a[n_g * every:], blocks) if tail else None
+    return head, tailp, n_g, tail
+
+
+def _hybrid_forward(cfg, rules, params, x, positions, train):
+    """zamba2: groups of ``attn_every`` Mamba2 layers, each followed by the
+    ONE shared-weight attention+FFN block (branch-free scan-of-scans)."""
+    shared = params["shared_attn"]
+    head, tailp, n_g, tail = _hybrid_split(cfg, params["blocks"])
+
+    def m_scan(x, stacked):
+        def body(c, pl):
+            y, _, _ = mamba_block(cfg, rules, pl, c)
+            return y, None
+
+        x, _ = jax.lax.scan(body, x, stacked)
+        return x
+
+    def group(carry, gp):
+        x, = carry
+        x = m_scan(x, gp)
+        x, _, _ = transformer_block(cfg, rules, shared, x,
+                                    positions=positions)
+        return (x,), None
+
+    group = _maybe_remat(cfg, group, train=train)
+    (x,), _ = jax.lax.scan(group, (x,), head)
+    if tail:
+        x = m_scan(x, tailp)
+    return x
+
+
+def _xlstm_forward(cfg, rules, params, x, train):
+    """xLSTM: groups of (slstm_every - 1) mLSTM blocks + 1 sLSTM block."""
+    k = cfg.slstm_every
+    n_groups = cfg.n_layers // k
+    m_per = k - 1
+    mparams = jax.tree.map(
+        lambda a: a.reshape((n_groups, m_per) + a.shape[1:]),
+        params["blocks"])
+
+    def group(carry, inp):
+        x, = carry
+        mp, sp = inp
+
+        def m_body(c, pl):
+            y, _ = mlstm_block(cfg, rules, pl, c[0])
+            return (y,), None
+
+        (x,), _ = jax.lax.scan(m_body, (x,), mp)
+        x, _ = slstm_block(cfg, rules, sp, x)
+        return (x,), None
+
+    group = _maybe_remat(cfg, group, train=train)
+    (x,), _ = jax.lax.scan(group, (x,), (mparams, params["slstm_blocks"]))
+    return x
+
+
+# ===========================================================================
+# loss
+# ===========================================================================
+def loss_fn(cfg: ArchConfig, rules: MeshRules, params: dict, batch: dict,
+            *, z_coef: float = 1e-4):
+    """Masked CE (fp32) + router aux + z-loss.  labels < 0 are masked out."""
+    logits, aux = forward(cfg, rules, params, batch, train=True)
+    labels = batch["labels"]
+    lg = logits.astype(F32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    gold = jnp.take_along_axis(
+        lg, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    mask = (labels >= 0).astype(F32)
+    denom = jnp.maximum(mask.sum(), 1.0)
+    ce = (nll * mask).sum() / denom
+    zl = z_coef * ((lse * mask) ** 2).sum() / denom
+    return ce + zl + aux, {"ce": ce, "aux": aux, "z": zl,
+                           "tokens": mask.sum()}
+
+
+# ===========================================================================
+# caches
+# ===========================================================================
+def _kv_entry(cfg, b, max_len, dtype):
+    if cfg.uses_mla:
+        return {
+            "c_kv": ((b, max_len, cfg.kv_lora_rank), dtype,
+                     ("cache_batch", "cache_seq", None)),
+            "k_rope": ((b, max_len, cfg.rope_head_dim), dtype,
+                       ("cache_batch", "cache_seq", None)),
+        }
+    return {
+        "k": ((b, max_len, cfg.n_kv_heads, cfg.head_dim), dtype,
+              ("cache_batch", "cache_seq", "kv_heads", None)),
+        "v": ((b, max_len, cfg.n_kv_heads, cfg.head_dim), dtype,
+              ("cache_batch", "cache_seq", "kv_heads", None)),
+    }
+
+
+def _stack_entry(tree, n):
+    return jax.tree.map(
+        lambda e: ((n,) + e[0], e[1], (None,) + e[2]),
+        tree, is_leaf=lambda v: isinstance(v, tuple) and isinstance(v[0], tuple))
+
+
+def cache_layout(cfg: ArchConfig, b: int, max_len: int, enc_len: int = 0):
+    """(shape, dtype, logical_axes) tree describing the decode cache."""
+    kv_dt = jnp.dtype(cfg.dtype)
+    di, ns = cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim if cfg.ssm_head_dim else 0
+
+    if cfg.family in ("dense", "vlm"):
+        lay = {"layers": _stack_entry(_kv_entry(cfg, b, max_len, kv_dt),
+                                      cfg.n_layers)}
+    elif cfg.family == "moe":
+        lay = {"layers": _stack_entry(
+            _kv_entry(cfg, b, max_len, kv_dt),
+            cfg.n_layers - cfg.first_k_dense)}
+        if cfg.first_k_dense:
+            lay["dense_layers"] = _stack_entry(
+                _kv_entry(cfg, b, max_len, kv_dt), cfg.first_k_dense)
+    elif cfg.family == "hybrid":
+        n_app = cfg.n_layers // cfg.attn_every
+        lay = {
+            "ssm": ((cfg.n_layers, b, nh, ns, cfg.ssm_head_dim), F32,
+                    (None, "cache_batch", "heads", None, None)),
+            "conv": ((cfg.n_layers, b, cfg.conv_width - 1, di), kv_dt,
+                     (None, "cache_batch", None, "d_ff")),
+            "attn": _stack_entry(_kv_entry(cfg, b, max_len, kv_dt), n_app),
+        }
+    elif cfg.family == "ssm":
+        k = cfg.slstm_every
+        n_g, m_per = cfg.n_layers // k, k - 1
+        dml = 2 * cfg.d_model
+        dk = dml // cfg.n_heads
+        hd = cfg.d_model // cfg.n_heads
+        lay = {
+            "mlstm_C": ((n_g, m_per, b, cfg.n_heads, dk, dk), F32,
+                        (None, None, "cache_batch", "heads", None, None)),
+            "mlstm_n": ((n_g, m_per, b, cfg.n_heads, dk), F32,
+                        (None, None, "cache_batch", "heads", None)),
+            "mlstm_m": ((n_g, m_per, b, cfg.n_heads), F32,
+                        (None, None, "cache_batch", "heads")),
+            "slstm": ((n_g, 4, b, cfg.n_heads, hd), F32,
+                      (None, None, "cache_batch", "heads", None)),
+        }
+    elif cfg.family == "audio":
+        lay = {
+            "layers": _stack_entry(_kv_entry(cfg, b, max_len, kv_dt),
+                                   cfg.n_layers),
+            "memory": ((b, enc_len or max_len, cfg.d_model), kv_dt,
+                       ("cache_batch", "cache_seq", "d_model")),
+        }
+    else:
+        raise ValueError(cfg.family)
+    lay["len"] = ((), jnp.int32, ())
+    lay["offset"] = ((), jnp.int32, ())            # frontend (patch) span
+    return lay
+
+
+def _is_entry(v):
+    return isinstance(v, tuple) and len(v) == 3 and isinstance(v[0], tuple)
+
+
+def init_cache(cfg, b, max_len, enc_len: int = 0):
+    lay = cache_layout(cfg, b, max_len, enc_len)
+    return jax.tree.map(lambda e: jnp.zeros(e[0], e[1]), lay,
+                        is_leaf=_is_entry)
+
+
+def cache_spec(cfg, b, max_len, rules: Optional[MeshRules] = None,
+               enc_len: int = 0):
+    """ShapeDtypeStruct tree (with shardings when ``rules``) for the dry-run."""
+    lay = cache_layout(cfg, b, max_len, enc_len)
+
+    def mk(e):
+        shape, dtype, logical = e
+        sh = rules.sharding(shape, logical) if rules is not None else None
+        return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+    return jax.tree.map(mk, lay, is_leaf=_is_entry)
+
+
+# ===========================================================================
+# prefill
+# ===========================================================================
+def prefill(cfg: ArchConfig, rules: MeshRules, params: dict, batch: dict,
+            *, max_len: Optional[int] = None):
+    """Run the full prompt, returning (last-token logits, filled cache)."""
+    dt_act = _adt(cfg)
+    tokens = batch["tokens"]
+    b, s_tok = tokens.shape
+    x = layers.embed(tokens, params["embed"], dt_act)
+    if cfg.family == "vlm" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(dt_act), x], axis=1)
+    x = rules.shard(x, "batch", "seq", "d_model")
+    s = x.shape[1]
+    max_len = max_len or s
+    positions = _positions(cfg, batch, s, b)
+    enc_len = batch["frames"].shape[1] if "frames" in batch else 0
+    cache = init_cache(cfg, b, max_len, enc_len)
+
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        memory = None
+        if cfg.family == "audio":
+            memory = _audio_encoder(cfg, rules, params, batch["frames"], False)
+            cache["memory"] = memory.astype(cache["memory"].dtype)
+
+        def scan_fill(stacked, x):
+            def body(x, pl):
+                x, kv, _ = transformer_block(
+                    cfg, rules, pl, x, positions=positions, memory=memory,
+                    prefill_len=max_len)
+                return x, kv
+
+            return jax.lax.scan(body, x, stacked)
+
+        if cfg.family == "moe" and cfg.first_k_dense:
+            x, kv_d = scan_fill(params["dense_blocks"], x)
+            cache["dense_layers"] = kv_d
+        key = "dec_blocks" if cfg.family == "audio" else "blocks"
+        x, kv = scan_fill(params[key], x)
+        cache["layers"] = kv
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        head, tailp, n_g, tail = _hybrid_split(cfg, params["blocks"])
+        conv0 = jnp.zeros((b, cfg.conv_width - 1, cfg.d_inner), dt_act)
+
+        def m_fill(x, stacked):
+            def body(x, pl):
+                x, st, cc = mamba_block(cfg, rules, pl, x, state=None,
+                                        conv_cache=conv0)
+                return x, (st, cc)
+
+            return jax.lax.scan(body, x, stacked)
+
+        def group(x, gp):
+            x, (st, cc) = m_fill(x, gp)
+            x, kv, _ = transformer_block(cfg, rules, shared, x,
+                                         positions=positions,
+                                         prefill_len=max_len)
+            return x, (st, cc, kv)
+
+        x, (states, convs, attn_kv) = jax.lax.scan(group, x, head)
+        states = jax.tree.map(
+            lambda a: a.reshape((n_g * cfg.attn_every,) + a.shape[2:]),
+            states)
+        convs = jax.tree.map(
+            lambda a: a.reshape((n_g * cfg.attn_every,) + a.shape[2:]),
+            convs)
+        if tail:
+            x, (st_t, cc_t) = m_fill(x, tailp)
+            states = jnp.concatenate([states, st_t], axis=0)
+            convs = jnp.concatenate([convs, cc_t], axis=0)
+        cache["ssm"] = states
+        cache["conv"] = convs.astype(cache["conv"].dtype)
+        cache["attn"] = attn_kv
+
+    elif cfg.family == "ssm":
+        k = cfg.slstm_every
+        n_g, m_per = cfg.n_layers // k, k - 1
+        mparams = jax.tree.map(
+            lambda a: a.reshape((n_g, m_per) + a.shape[1:]), params["blocks"])
+
+        def group(x, inp):
+            mp, sp = inp
+
+            def m_body(x, pl):
+                x, carry = mlstm_block(cfg, rules, pl, x)
+                return x, carry
+
+            x, m_carry = jax.lax.scan(m_body, x, mp)
+            x, s_carry = slstm_block(cfg, rules, sp, x)
+            return x, (m_carry, s_carry)
+
+        x, (mc, sc) = jax.lax.scan(group, x, (mparams, params["slstm_blocks"]))
+        cache["mlstm_C"], cache["mlstm_n"], cache["mlstm_m"] = mc
+        cache["slstm"] = jnp.stack(sc, axis=1)
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = x[:, -1:]
+    logits = layers.unembed(
+        last, params["embed"] if cfg.tie_embeddings else params["lm_head"],
+        tied=cfg.tie_embeddings)
+    cache["len"] = jnp.asarray(s, jnp.int32)
+    cache["offset"] = jnp.asarray(s - s_tok, jnp.int32)
+    return logits[:, 0], cache
+
+
+# ===========================================================================
+# decode
+# ===========================================================================
+def decode_step(cfg: ArchConfig, rules: MeshRules, params: dict, cache: dict,
+                tokens):
+    """One new token per sequence.  tokens: (B, 1) int32.
+
+    Returns (logits (B, vocab), new_cache).
+    """
+    dt_act = _adt(cfg)
+    b = tokens.shape[0]
+    cur = cache["len"]
+    x = layers.embed(tokens, params["embed"], dt_act)
+    x = rules.shard(x, "batch", None, "d_model")
+    positions = _decode_positions(cfg, cur, b, cache.get("offset", 0))
+
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        memory = cache.get("memory")
+        if memory is not None:
+            memory = memory.astype(dt_act)
+
+        def scan_dec(stacked, kvs, x):
+            # cache lives in the scan CARRY and is updated in place
+            # (dynamic_update_index on a loop carry lowers to an aliased
+            # buffer — one cache copy, not an xs/ys double buffer)
+            n_l = jax.tree.leaves(stacked)[0].shape[0]
+
+            def body(carry, inp):
+                x, kvs = carry
+                pl, idx = inp
+                kv = jax.tree.map(
+                    lambda full: jax.lax.dynamic_index_in_dim(
+                        full, idx, 0, keepdims=False), kvs)
+                x, new_kv, _ = transformer_block(
+                    cfg, rules, pl, x, positions=positions, memory=memory,
+                    cache=dict(kv, len=cur))
+                kvs = jax.tree.map(
+                    lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                        full, new.astype(full.dtype), idx, 0), kvs, new_kv)
+                return (x, kvs), None
+
+            (x, kvs), _ = jax.lax.scan(
+                body, (x, kvs), (stacked, jnp.arange(n_l)))
+            return x, kvs
+
+        new_cache = dict(cache)
+        if cfg.family == "moe" and cfg.first_k_dense:
+            x, kv_d = scan_dec(params["dense_blocks"], cache["dense_layers"], x)
+            new_cache["dense_layers"] = kv_d
+        key = "dec_blocks" if cfg.family == "audio" else "blocks"
+        x, kv = scan_dec(params[key], cache["layers"], x)
+        new_cache["layers"] = kv
+
+    elif cfg.family == "hybrid":
+        shared = params["shared_attn"]
+        head, tailp, n_g, tail = _hybrid_split(cfg, params["blocks"])
+        every = cfg.attn_every
+        n_head = n_g * every
+        gr = lambda a: a[:n_head].reshape((n_g, every) + a.shape[1:])  # noqa
+
+        def m_step(x, stacked, sts, ccs):
+            def body(x, inp):
+                pl, st, cc = inp
+                x, st, cc = mamba_block(cfg, rules, pl, x, state=st,
+                                        conv_cache=cc.astype(dt_act))
+                return x, (st, cc)
+
+            return jax.lax.scan(body, x, (stacked, sts, ccs))
+
+        def group(carry, inp):
+            x, attn_kv = carry                   # attn kv carried in place
+            gp, sts, ccs, gidx = inp
+            x, (sts, ccs) = m_step(x, gp, sts, ccs)
+            kv = jax.tree.map(
+                lambda full: jax.lax.dynamic_index_in_dim(
+                    full, gidx, 0, keepdims=False), attn_kv)
+            x, new_kv, _ = transformer_block(
+                cfg, rules, shared, x, positions=positions,
+                cache=dict(kv, len=cur))
+            attn_kv = jax.tree.map(
+                lambda full, new: jax.lax.dynamic_update_index_in_dim(
+                    full, new.astype(full.dtype), gidx, 0),
+                attn_kv, new_kv)
+            return (x, attn_kv), (sts, ccs)
+
+        (x, attn_kv), (states, convs) = jax.lax.scan(
+            group, (x, cache["attn"]),
+            (head, gr(cache["ssm"]), gr(cache["conv"]), jnp.arange(n_g)))
+        states = jax.tree.map(
+            lambda a: a.reshape((n_head,) + a.shape[2:]), states)
+        convs = jax.tree.map(
+            lambda a: a.reshape((n_head,) + a.shape[2:]), convs)
+        if tail:
+            x, (st_t, cc_t) = m_step(x, tailp, cache["ssm"][n_head:],
+                                     cache["conv"][n_head:])
+            states = jnp.concatenate([states, st_t], axis=0)
+            convs = jnp.concatenate([convs, cc_t], axis=0)
+        new_cache = dict(cache, ssm=states,
+                         conv=convs.astype(cache["conv"].dtype),
+                         attn=attn_kv)
+
+    elif cfg.family == "ssm":
+        k = cfg.slstm_every
+        n_g, m_per = cfg.n_layers // k, k - 1
+        mparams = jax.tree.map(
+            lambda a: a.reshape((n_g, m_per) + a.shape[1:]), params["blocks"])
+
+        def group(x, inp):
+            mp, sp, mC, mn, mm, sl = inp
+
+            def m_body(x, minp):
+                pl, C, nv, m = minp
+                x, carry = mlstm_block(cfg, rules, pl, x, carry=(C, nv, m))
+                return x, carry
+
+            x, (mC, mn, mm) = jax.lax.scan(m_body, x, (mp, mC, mn, mm))
+            x, s_carry = slstm_block(cfg, rules, sp, x,
+                                     carry=tuple(sl[i] for i in range(4)))
+            return x, (mC, mn, mm, jnp.stack(s_carry))
+
+        x, (mC, mn, mm, sl) = jax.lax.scan(
+            group, x,
+            (mparams, params["slstm_blocks"], cache["mlstm_C"],
+             cache["mlstm_n"], cache["mlstm_m"], cache["slstm"]))
+        new_cache = dict(cache, mlstm_C=mC, mlstm_n=mn, mlstm_m=mm, slstm=sl)
+    else:
+        raise ValueError(cfg.family)
+
+    x = layers.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = layers.unembed(
+        x, params["embed"] if cfg.tie_embeddings else params["lm_head"],
+        tied=cfg.tie_embeddings)
+    new_cache["len"] = cur + 1
+    return logits[:, 0], new_cache

@@ -1,0 +1,302 @@
+"""Parameter definitions: one tree of ``ParamDef`` per architecture.
+
+Every parameter is declared once with its shape, logical sharding axes and
+initializer; the same tree then yields
+  * concrete initialized params        (``init_params``)
+  * abstract ShapeDtypeStructs         (``abstract_params``, for the dry-run)
+  * NamedShardings / PartitionSpecs    (``param_shardings``)
+  * exact parameter counts             (``count_params`` / ``count_active``)
+
+Per-layer blocks are stacked along a leading "layers" axis and consumed with
+``lax.scan`` (compile-time is O(1) in depth — essential for the 95-layer
+archs on the 512-device dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | a_log | dt_bias
+    scale: float = 0.02
+
+    def stacked(self, n: int) -> "ParamDef":
+        return ParamDef(
+            shape=(n,) + self.shape,
+            logical=("layers",) + self.logical,
+            init=self.init,
+            scale=self.scale,
+        )
+
+
+def is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+# --------------------------------------------------------------------------
+# per-block definition builders
+# --------------------------------------------------------------------------
+def _attn_defs(cfg: ArchConfig, *, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.head_dim
+    h, kv = cfg.n_heads, cfg.n_kv_heads
+    pre = "x" if cross else ""
+    out = {
+        f"{pre}q": ParamDef((d, h * hd), ("fsdp_d_model", "heads")),
+        f"{pre}k": ParamDef((d, kv * hd), ("fsdp_d_model", "kv_heads")),
+        f"{pre}v": ParamDef((d, kv * hd), ("fsdp_d_model", "kv_heads")),
+        f"{pre}o": ParamDef((h * hd, d), ("heads", "fsdp_d_model")),
+    }
+    if cfg.qk_norm and not cross:
+        out["qn"] = ParamDef((hd,), ("head_dim",), "ones")
+        out["kn"] = ParamDef((hd,), ("head_dim",), "ones")
+    return out
+
+
+def _mla_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    h, hd, vhd, rhd = cfg.n_heads, cfg.head_dim, cfg.v_head_dim, cfg.rope_head_dim
+    qlr, kvlr = cfg.q_lora_rank, cfg.kv_lora_rank
+    return {
+        "q_a": ParamDef((d, qlr), ("fsdp_d_model", None)),
+        "q_norm": ParamDef((qlr,), (None,), "ones"),
+        "q_b": ParamDef((qlr, h * (hd + rhd)), (None, "heads")),
+        "kv_a": ParamDef((d, kvlr + rhd), ("fsdp_d_model", None)),
+        "kv_norm": ParamDef((kvlr,), (None,), "ones"),
+        "kv_b": ParamDef((kvlr, h * (hd + vhd)), (None, "heads")),
+        "o": ParamDef((h * vhd, d), ("heads", "fsdp_d_model")),
+    }
+
+
+def _ffn_defs(d: int, f: int) -> dict:
+    return {
+        "wg": ParamDef((d, f), ("fsdp_d_model", "d_ff")),
+        "wu": ParamDef((d, f), ("fsdp_d_model", "d_ff")),
+        "wd": ParamDef((f, d), ("d_ff", "fsdp_d_model")),
+    }
+
+
+def _moe_defs(cfg: ArchConfig) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    out = {
+        "router": ParamDef((d, e), ("fsdp_d_model", None)),
+        "we_g": ParamDef((e, d, f), ("experts", "fsdp_d_model", None)),
+        "we_u": ParamDef((e, d, f), ("experts", "fsdp_d_model", None)),
+        "we_d": ParamDef((e, f, d), ("experts", None, "fsdp_d_model")),
+    }
+    if cfg.n_shared_experts:
+        fs = cfg.n_shared_experts * f
+        out.update({f"ws_{k[-1]}": v for k, v in _ffn_defs(d, fs).items()})
+    return out
+
+
+def _mamba_defs(cfg: ArchConfig) -> dict:
+    d, di, ns = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh = di // cfg.ssm_head_dim
+    return {
+        "ln": ParamDef((d,), ("d_model",), "ones"),
+        "wz": ParamDef((d, di), ("fsdp_d_model", "d_ff")),
+        "wx": ParamDef((d, di), ("fsdp_d_model", "d_ff")),
+        "wB": ParamDef((d, ns), ("fsdp_d_model", None)),
+        "wC": ParamDef((d, ns), ("fsdp_d_model", None)),
+        "wdt": ParamDef((d, nh), ("fsdp_d_model", "heads")),
+        "conv": ParamDef((cfg.conv_width, di), (None, "d_ff")),
+        "a_log": ParamDef((nh,), ("heads",), "a_log"),
+        "d_skip": ParamDef((nh,), ("heads",), "ones"),
+        "dt_bias": ParamDef((nh,), ("heads",), "dt_bias"),
+        "gnorm": ParamDef((di,), ("d_ff",), "ones"),
+        "wo": ParamDef((di, d), ("d_ff", "fsdp_d_model")),
+    }
+
+
+def _mlstm_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    di = 2 * d
+    nh = cfg.n_heads
+    dk = di // nh
+    return {
+        "ln": ParamDef((d,), ("d_model",), "ones"),
+        "w_up": ParamDef((d, 2 * di), ("fsdp_d_model", "d_ff")),
+        # q/k/v are block-diagonal per head (official mLSTM cell layout)
+        "wq": ParamDef((nh, dk, dk), ("heads", None, None)),
+        "wk": ParamDef((nh, dk, dk), ("heads", None, None)),
+        "wv": ParamDef((nh, dk, dk), ("heads", None, None)),
+        "w_if": ParamDef((di, 2 * nh), ("fsdp_d_model", None)),
+        "onorm": ParamDef((di,), ("d_ff",), "ones"),
+        "w_down": ParamDef((di, d), ("d_ff", "fsdp_d_model")),
+    }
+
+
+def _slstm_defs(cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    nh = cfg.n_heads
+    hd = d // nh
+    return {
+        "ln": ParamDef((d,), ("d_model",), "ones"),
+        "w_in": ParamDef((d, 4 * d), ("fsdp_d_model", "d_ff")),
+        "r": ParamDef((nh, hd, 4 * hd), ("heads", None, None)),
+        "b": ParamDef((4 * d,), ("d_ff",), "zeros"),
+        "onorm": ParamDef((d,), ("d_model",), "ones"),
+        "w_down": ParamDef((d, d), ("fsdp_d_model", "d_model")),
+    }
+
+
+def _block_defs(cfg: ArchConfig, kind: str, *, layer_idx: int = 0) -> dict:
+    d = cfg.d_model
+    out = {"ln1": ParamDef((d,), ("d_model",), "ones")}
+    if kind == "mamba":
+        return _mamba_defs(cfg)
+    if kind == "mlstm":
+        return _mlstm_defs(cfg)
+    if kind == "slstm":
+        return _slstm_defs(cfg)
+    if cfg.uses_mla:
+        out.update(_mla_defs(cfg))
+    else:
+        out.update(_attn_defs(cfg))
+    out["ln2"] = ParamDef((d,), ("d_model",), "ones")
+    if kind == "moe":
+        out.update(_moe_defs(cfg))
+    elif kind == "cross_attn":
+        out.update(_attn_defs(cfg, cross=True))
+        out["lnx"] = ParamDef((d,), ("d_model",), "ones")
+        out.update(_ffn_defs(d, cfg.d_ff))
+    else:
+        out.update(_ffn_defs(d, cfg.d_ff))
+    return out
+
+
+def _stack(defs: dict, n: int) -> dict:
+    return jax.tree.map(lambda p: p.stacked(n), defs, is_leaf=is_def)
+
+
+# --------------------------------------------------------------------------
+# full-model definition tree
+# --------------------------------------------------------------------------
+def param_defs(cfg: ArchConfig) -> dict:
+    d, v = cfg.d_model, cfg.padded_vocab
+    tree: dict = {
+        "embed": ParamDef((v, d), ("vocab", "fsdp_d_model")),
+        "final_norm": ParamDef((d,), ("d_model",), "ones"),
+    }
+    if not cfg.tie_embeddings:
+        tree["lm_head"] = ParamDef((d, v), ("fsdp_d_model", "vocab"))
+
+    if cfg.family in ("dense", "vlm"):
+        tree["blocks"] = _stack(_block_defs(cfg, "attn"), cfg.n_layers)
+    elif cfg.family == "moe":
+        n_moe = cfg.n_layers - cfg.first_k_dense
+        tree["blocks"] = _stack(_block_defs(cfg, "moe"), n_moe)
+        if cfg.first_k_dense:
+            tree["dense_blocks"] = _stack(
+                _block_defs(cfg, "attn"), cfg.first_k_dense
+            )
+    elif cfg.family == "hybrid":
+        tree["blocks"] = _stack(_block_defs(cfg, "mamba"), cfg.n_layers)
+        tree["shared_attn"] = _block_defs(cfg, "attn")  # ONE shared block
+    elif cfg.family == "ssm":
+        n_s = cfg.n_layers // cfg.slstm_every
+        n_m = cfg.n_layers - n_s
+        tree["blocks"] = _stack(_block_defs(cfg, "mlstm"), n_m)
+        tree["slstm_blocks"] = _stack(_block_defs(cfg, "slstm"), n_s)
+    elif cfg.family == "audio":
+        tree["enc_blocks"] = _stack(_block_defs(cfg, "attn"), cfg.encoder_layers)
+        tree["dec_blocks"] = _stack(_block_defs(cfg, "cross_attn"), cfg.n_layers)
+    else:
+        raise ValueError(cfg.family)
+    return tree
+
+
+# --------------------------------------------------------------------------
+# materialization
+# --------------------------------------------------------------------------
+def _init_one(p: ParamDef, key, dtype):
+    if p.init == "zeros":
+        return jnp.zeros(p.shape, dtype)
+    if p.init == "ones":
+        return jnp.ones(p.shape, dtype)
+    if p.init == "a_log":
+        nh = p.shape[-1]
+        base = jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32))
+        return jnp.broadcast_to(base, p.shape).astype(dtype)
+    if p.init == "dt_bias":
+        # softplus^-1 of dt in [1e-3, 1e-1], log-spaced
+        nh = p.shape[-1]
+        dt = jnp.exp(jnp.linspace(np.log(1e-3), np.log(1e-1), nh,
+                                  dtype=jnp.float32))
+        inv = jnp.log(jnp.expm1(dt))
+        return jnp.broadcast_to(inv, p.shape).astype(dtype)
+    fan_in = p.shape[-2] if len(p.shape) >= 2 else p.shape[-1]
+    std = min(p.scale, fan_in ** -0.5)
+    return (jax.random.normal(key, p.shape, jnp.float32) * std).astype(dtype)
+
+
+def init_params(cfg: ArchConfig, key) -> dict:
+    defs = param_defs(cfg)
+    dtype = jnp.dtype(cfg.param_dtype)
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    vals = [_init_one(p, k, dtype) for p, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def abstract_params(cfg: ArchConfig, rules=None, dtype=None) -> dict:
+    """ShapeDtypeStruct tree (optionally with shardings) — no allocation.
+
+    ``dtype`` override: serving lowers against bf16 weights (the inference
+    checkpoint cast), training against ``cfg.param_dtype`` masters."""
+    defs = param_defs(cfg)
+    dtype = jnp.dtype(dtype or cfg.param_dtype)
+
+    def mk(p: ParamDef):
+        sh = rules.sharding(p.shape, p.logical) if rules is not None else None
+        return jax.ShapeDtypeStruct(p.shape, dtype, sharding=sh)
+
+    return jax.tree.map(mk, defs, is_leaf=is_def)
+
+
+def param_shardings(cfg: ArchConfig, rules) -> dict:
+    defs = param_defs(cfg)
+    return jax.tree.map(
+        lambda p: rules.sharding(p.shape, p.logical), defs, is_leaf=is_def
+    )
+
+
+def param_specs(cfg: ArchConfig, rules) -> dict:
+    defs = param_defs(cfg)
+    return jax.tree.map(
+        lambda p: rules.spec(p.shape, p.logical), defs, is_leaf=is_def
+    )
+
+
+def count_params(cfg: ArchConfig) -> int:
+    defs = param_defs(cfg)
+    return sum(int(np.prod(p.shape))
+               for p in jax.tree.leaves(defs, is_leaf=is_def))
+
+
+def count_active(cfg: ArchConfig) -> int:
+    """Active (per-token) parameters — MoE counts top_k + shared experts,
+    embeddings/lm_head excluded (the 6ND convention)."""
+    defs = param_defs(cfg)
+    total = 0
+    for path, p in jax.tree.flatten_with_path(defs, is_leaf=is_def)[0]:
+        keys = [getattr(k, "key", str(k)) for k in path]
+        name = keys[-1]
+        if keys[0] in ("embed", "lm_head"):
+            continue
+        n = int(np.prod(p.shape))
+        if name.startswith("we_"):  # routed experts: only top_k of E active
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return total

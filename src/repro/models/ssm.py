@@ -1,0 +1,265 @@
+"""Sequence-mixing cells for the SSM/hybrid architectures.
+
+* **Mamba2 SSD** (zamba2-7b) — chunked state-space-duality algorithm: the
+  sequence is split into ``chunk``-length blocks; within-block interactions are
+  a masked (decay-weighted) matmul, cross-block interactions flow through a
+  recurrent (H, N, P) state carried by a ``lax.scan`` over blocks.  This is the
+  same "resident targets x streamed sources, accumulate along the stream"
+  shape as the paper's tiled N-body sweep (DESIGN.md §5).
+* **mLSTM** (xlstm-1.3b) — chunkwise-parallel matrix-LSTM with exponential
+  input gating and log-space (m) stabilization; carries (C, n, m) per head.
+* **sLSTM** (xlstm-1.3b) — post-up-projection scalar LSTM with per-head
+  recurrent block-diagonal R and exponential gating; a true time recurrence
+  (``lax.scan`` over steps).
+
+All recurrences/statistics run in fp32 regardless of the activation dtype;
+each cell has a single-token ``*_step`` form used by the decode path, and the
+parallel and step forms agree numerically (tested).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+F32 = jnp.float32
+
+
+def _logsigmoid(x):
+    return -jax.nn.softplus(-x)
+
+
+# ===========================================================================
+# Mamba2 SSD
+# ===========================================================================
+def ssd_chunked(x, dt, a_neg, b_mat, c_mat, *, chunk: int, state0=None):
+    """Chunked SSD scan.
+
+    Args:
+        x:      (B, S, H, P) fp32 inputs (heads x head_dim).
+        dt:     (B, S, H) fp32 positive step sizes (already softplus'd).
+        a_neg:  (H,) fp32 negative continuous-time decay (−exp(a_log)).
+        b_mat:  (B, S, N) fp32 input->state projection (shared across heads).
+        c_mat:  (B, S, N) fp32 state->output projection.
+        chunk:  block length L (S % L == 0).
+        state0: optional (B, H, N, P) initial state.
+
+    Returns:
+        y: (B, S, H, P) fp32, state: (B, H, N, P) final state.
+    """
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    nc = s // chunk
+    l = chunk
+
+    xr = x.reshape(bsz, nc, l, h, p)
+    dtr = dt.reshape(bsz, nc, l, h)
+    br = b_mat.reshape(bsz, nc, l, n)
+    cr = c_mat.reshape(bsz, nc, l, n)
+
+    g = dtr * a_neg                      # (B, nc, L, H) per-step log decay (<0)
+    big_g = jnp.cumsum(g, axis=2)        # inclusive cumulative log decay
+
+    # ---- within-chunk (intra) term, per chunk, inside the scan body ----
+    mask = jnp.tril(jnp.ones((l, l), bool))                   # t >= s
+
+    def chunk_body(state, inp):
+        xc, dtc, bc, cc, gc = inp        # (B,L,H,P) (B,L,H) (B,L,N) (B,L,N) (B,L,H)
+        # intra: w[t, s, h] = exp(G_t - G_s) * dt_s   for t >= s
+        dec = jnp.exp(jnp.clip(gc[:, :, None, :] - gc[:, None, :, :], -60.0, 0.0))
+        w = jnp.where(mask[None, :, :, None], dec * dtc[:, None, :, :], 0.0)
+        scores = jnp.einsum("bln,bmn->blm", cc, bc)           # C_t . B_s
+        y_intra = jnp.einsum("blm,blmh,bmhp->blhp", scores, w, xc)
+        # inter: contribution of the carried state
+        eg = jnp.exp(jnp.clip(gc, -60.0, None))               # (B,L,H)
+        y_inter = jnp.einsum("bln,bhnp,blh->blhp", cc, state, eg)
+        # state update: S' = exp(G_L) S + sum_s exp(G_L - G_s) dt_s B_s x_s^T
+        g_last = gc[:, -1:, :]                                # (B,1,H)
+        a_term = jnp.exp(jnp.clip(g_last - gc, -60.0, 0.0)) * dtc  # (B,L,H)
+        st = jnp.einsum("blh,bln,blhp->bhnp", a_term, bc, xc)
+        state = state * jnp.exp(jnp.clip(g_last[:, 0, :], -60.0, 0.0))[:, :, None, None] + st
+        return state, y_intra + y_inter
+
+    state0 = state0 if state0 is not None else jnp.zeros((bsz, h, n, p), F32)
+    xs = (
+        jnp.moveaxis(xr, 1, 0), jnp.moveaxis(dtr, 1, 0),
+        jnp.moveaxis(br, 1, 0), jnp.moveaxis(cr, 1, 0),
+        jnp.moveaxis(big_g, 1, 0),
+    )
+    state, ys = jax.lax.scan(chunk_body, state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, p)
+    return y, state
+
+
+def ssd_step(x, dt, a_neg, b_mat, c_mat, state):
+    """Single-token SSD update.
+
+    x: (B, H, P), dt: (B, H), b_mat/c_mat: (B, N), state: (B, H, N, P).
+    Returns (y: (B, H, P), new_state).
+    """
+    g = jnp.exp(jnp.clip(dt * a_neg, -60.0, 0.0))             # (B, H)
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, b_mat, x)
+    state = state * g[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", c_mat, state)
+    return y, state
+
+
+def causal_conv(x, w, *, cache=None):
+    """Depthwise causal 1-D conv.  x: (B, S, D), w: (W, D).
+
+    With ``cache`` ((B, W-1, D) trailing context) performs the streaming form
+    and returns (y, new_cache); otherwise zero-pads on the left.
+    """
+    width = w.shape[0]
+    if cache is not None:
+        ctx = jnp.concatenate([cache, x], axis=1)             # (B, W-1+S, D)
+        new_cache = ctx[:, -(width - 1):, :] if width > 1 else cache
+    else:
+        ctx = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+        new_cache = None
+    s = x.shape[1]
+    y = jnp.zeros_like(x)
+    for k in range(width):
+        y = y + ctx[:, k : k + s, :] * w[k]
+    return (y, new_cache) if cache is not None else y
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix cell)
+# ===========================================================================
+def mlstm_chunked(q, k, v, gi, gf, *, chunk: int, carry0=None):
+    """Chunkwise-parallel mLSTM with log-space stabilization.
+
+    Args:
+        q, k, v: (B, S, H, K) fp32 (K = key = value dim here).
+        gi, gf:  (B, S, H) fp32 raw input/forget gate pre-activations.
+        chunk:   block length L.
+        carry0:  optional (C, n, m) with C (B,H,K,K), n (B,H,K), m (B,H).
+
+    Returns:
+        h: (B, S, H, K), carry: (C, n, m).
+    """
+    bsz, s, h, kk = q.shape
+    l = chunk
+    nc = s // l
+    scale = kk ** -0.5
+
+    lf = _logsigmoid(gf)                                      # (B,S,H)
+    qr = q.reshape(bsz, nc, l, h, kk) * scale
+    kr = k.reshape(bsz, nc, l, h, kk)
+    vr = v.reshape(bsz, nc, l, h, kk)
+    lir = gi.reshape(bsz, nc, l, h)
+    lfr = lf.reshape(bsz, nc, l, h)
+
+    mask = jnp.tril(jnp.ones((l, l), bool))
+    neg = jnp.asarray(-1e30, F32)
+
+    def chunk_body(carry, inp):
+        big_c, nvec, m_in = carry
+        qc, kc, vc, lic, lfc = inp
+        f_cum = jnp.cumsum(lfc, axis=1)                       # (B,L,H) inclusive
+        # intra log-weights  w[t,s] = F_t - F_s + i_s  (t >= s)
+        wlog = f_cum[:, :, None, :] - f_cum[:, None, :, :] + lic[:, None, :, :]
+        wlog = jnp.where(mask[None, :, :, None], wlog, neg)
+        m_intra = wlog.max(axis=2)                            # (B,L,H)
+        m_t = jnp.maximum(m_in[:, None, :] + f_cum, m_intra)  # (B,L,H)
+        d = jnp.exp(wlog - m_t[:, :, None, :])                # (B,L,L,H)
+        scores = jnp.einsum("blhk,bmhk->blmh", qc, kc) * d
+        num = jnp.einsum("blmh,bmhk->blhk", scores, vc)
+        # inter-chunk via carried state
+        inter_w = jnp.exp(m_in[:, None, :] + f_cum - m_t)     # (B,L,H)
+        num = num + jnp.einsum("blhk,bhkv,blh->blhv", qc, big_c, inter_w)
+        # denominator: |TOTAL normalizer| (intra + carried summed BEFORE abs)
+        den_raw = scores.sum(axis=2) \
+            + jnp.einsum("blhk,bhk->blh", qc, nvec) * inter_w
+        hc = num / jnp.maximum(jnp.abs(den_raw),
+                               jnp.exp(-m_t))[..., None]
+        # carry update to the chunk end
+        f_tot = f_cum[:, -1:, :]                              # (B,1,H)
+        a_log = f_tot - f_cum + lic                           # (B,L,H)
+        m_out = jnp.maximum(m_in + f_tot[:, 0], a_log.max(axis=1))
+        cw = jnp.exp(a_log - m_out[:, None, :])               # (B,L,H)
+        decay = jnp.exp(m_in + f_tot[:, 0] - m_out)           # (B,H)
+        big_c = big_c * decay[..., None, None] + jnp.einsum(
+            "blh,blhk,blhv->bhkv", cw, kc, vc)
+        nvec = nvec * decay[..., None] + jnp.einsum("blh,blhk->bhk", cw, kc)
+        return (big_c, nvec, m_out), hc
+
+    if carry0 is None:
+        carry0 = (
+            jnp.zeros((bsz, h, kk, kk), F32),
+            jnp.zeros((bsz, h, kk), F32),
+            jnp.zeros((bsz, h), F32),
+        )
+    xs = tuple(jnp.moveaxis(a, 1, 0)
+               for a in (qr, kr, vr, lir, lfr))
+    carry, ys = jax.lax.scan(chunk_body, carry0, xs)
+    return jnp.moveaxis(ys, 0, 1).reshape(bsz, s, h, kk), carry
+
+
+def mlstm_step(q, k, v, gi, gf, carry):
+    """Single-token mLSTM update.  q/k/v: (B,H,K), gi/gf: (B,H)."""
+    big_c, nvec, m = carry
+    kk = q.shape[-1]
+    lf = _logsigmoid(gf)
+    m_new = jnp.maximum(lf + m, gi)
+    f_eff = jnp.exp(lf + m - m_new)[..., None]
+    i_eff = jnp.exp(gi - m_new)[..., None]
+    big_c = big_c * f_eff[..., None] + i_eff[..., None] * (
+        k[..., :, None] * v[..., None, :])
+    nvec = nvec * f_eff + i_eff * k
+    qs = q * (kk ** -0.5)
+    num = jnp.einsum("bhk,bhkv->bhv", qs, big_c)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", qs, nvec))
+    hvec = num / jnp.maximum(den, jnp.exp(-m_new))[..., None]
+    return hvec, (big_c, nvec, m_new)
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar cell, per-head recurrent R)
+# ===========================================================================
+def slstm_scan(gx, r, *, n_heads: int, carry0=None):
+    """Sequential sLSTM over a sequence.
+
+    Args:
+        gx: (B, S, H, 4, hd) fp32 input-gate pre-activations (i, f, z, o).
+        r:  (H, hd, 4*hd) recurrent weights (block-diagonal per head).
+        carry0: optional (c, n, hvec, m), each (B, H, hd).
+
+    Returns:
+        h: (B, S, H, hd), carry.
+    """
+    bsz, s, h, _, hd = gx.shape
+    if carry0 is None:
+        z = jnp.zeros((bsz, h, hd), F32)
+        carry0 = (z, z, z, z)
+
+    def body(carry, g_t):
+        c, n, hv, m = carry
+        rec = jnp.einsum("bhk,hkl->bhl", hv, r).reshape(bsz, h, 4, hd)
+        gi, gf, gz, go = [g_t[:, :, i] + rec[:, :, i] for i in range(4)]
+        m_new = jnp.maximum(gf + m, gi)
+        i_eff = jnp.exp(gi - m_new)
+        f_eff = jnp.exp(gf + m - m_new)
+        c = f_eff * c + i_eff * jnp.tanh(gz)
+        n = f_eff * n + i_eff
+        hv = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+        return (c, n, hv, m_new), hv
+
+    carry, ys = jax.lax.scan(body, carry0, jnp.moveaxis(gx, 1, 0))
+    return jnp.moveaxis(ys, 0, 1), carry
+
+
+def slstm_step(g_t, r, carry):
+    """One sLSTM step; g_t: (B, H, 4, hd)."""
+    (c, n, hv, m) = carry
+    bsz, h, _, hd = g_t.shape
+    rec = jnp.einsum("bhk,hkl->bhl", hv, r).reshape(bsz, h, 4, hd)
+    gi, gf, gz, go = [g_t[:, :, i] + rec[:, :, i] for i in range(4)]
+    m_new = jnp.maximum(gf + m, gi)
+    i_eff = jnp.exp(gi - m_new)
+    f_eff = jnp.exp(gf + m - m_new)
+    c = f_eff * c + i_eff * jnp.tanh(gz)
+    n = f_eff * n + i_eff
+    hv = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+    return hv, (c, n, hv, m_new)

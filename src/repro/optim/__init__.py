@@ -1,0 +1,1 @@
+from repro.optim.adamw import AdamW, AdamWState, apply_updates, warmup_cosine, global_norm, abstract_state  # noqa: F401

@@ -1,0 +1,108 @@
+"""Pure-JAX AdamW with global-norm clipping and warmup-cosine schedule.
+
+Optax-style interface (``init`` / ``update``) without the dependency; the
+optimizer state is a pytree shaped like the parameters, so it inherits the
+parameter shardings (ZeRO: FSDP-sharded params => FSDP-sharded m/v).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    count: jax.Array       # int32 scalar
+    m: dict                # first moment, like params
+    v: dict                # second moment, like params
+
+
+def warmup_cosine(peak_lr: float, *, warmup: int = 100,
+                  total: int = 10_000, floor: float = 0.1) -> Callable:
+    """lr(step): linear warmup to ``peak_lr`` then cosine to ``floor*peak``."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor * peak_lr + (1 - floor) * peak_lr * 0.5 * (
+            1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    learning_rate: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+
+    def init(self, params) -> AdamWState:
+        zeros = lambda: jax.tree.map(  # noqa: E731
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamWState(count=jnp.zeros((), jnp.int32), m=zeros(), v=zeros())
+
+    def _lr(self, count):
+        if callable(self.learning_rate):
+            return self.learning_rate(count)
+        return jnp.asarray(self.learning_rate, jnp.float32)
+
+    def update(self, grads, state: AdamWState, params):
+        """Returns (updates, new_state, metrics). ``params + updates`` is the
+        new parameter value (updates include the weight-decay term)."""
+        count = state.count + 1
+        gnorm = global_norm(grads)
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        b1, b2 = self.b1, self.b2
+        m = jax.tree.map(lambda mu, g: b1 * mu + (1 - b1) * g.astype(jnp.float32),
+                         state.m, grads)
+        v = jax.tree.map(lambda nu, g: b2 * nu + (1 - b2)
+                         * jnp.square(g.astype(jnp.float32)), state.v, grads)
+        c = count.astype(jnp.float32)
+        mhat_scale = 1.0 / (1 - b1 ** c)
+        vhat_scale = 1.0 / (1 - b2 ** c)
+        lr = self._lr(count)
+
+        def upd(p, mu, nu):
+            step = mu * mhat_scale / (jnp.sqrt(nu * vhat_scale) + self.eps)
+            # decay only matrices (norm vectors/bias-like 1-D params exempt)
+            wd = self.weight_decay if p.ndim >= 2 else 0.0
+            return (-(lr * (step + wd * p.astype(jnp.float32)))).astype(p.dtype)
+
+        updates = jax.tree.map(upd, params, m, v)
+        return updates, AdamWState(count=count, m=m, v=v), {
+            "gnorm": gnorm, "lr": lr}
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: p + u.astype(p.dtype), params, updates)
+
+
+def abstract_state(params_abstract) -> AdamWState:
+    """ShapeDtypeStruct state tree matching ``abstract_params`` (dry-run)."""
+
+    def mk(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32, sharding=p.sharding)
+
+    return AdamWState(
+        count=jax.ShapeDtypeStruct((), jnp.int32),
+        m=jax.tree.map(mk, params_abstract),
+        v=jax.tree.map(mk, params_abstract),
+    )

@@ -1,0 +1,1 @@
+from repro.serve.engine import Engine, ServeConfig, prefill_step, decode_step  # noqa: F401

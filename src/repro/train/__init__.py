@@ -1,0 +1,2 @@
+from repro.train.step import make_train_step, jit_train_step  # noqa: F401
+from repro.train.trainer import Trainer, TrainerConfig, StragglerMonitor  # noqa: F401

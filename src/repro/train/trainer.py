@@ -1,0 +1,147 @@
+"""Training loop with checkpoint/restart, straggler monitoring and
+deterministic data skip-ahead.
+
+Fault-tolerance model (DESIGN.md §6):
+
+* **checkpoint/restart** — atomic sharded checkpoints every
+  ``ckpt_every`` steps (params + optimizer state + step counter); on start
+  the trainer resumes from the newest complete checkpoint and the
+  counter-based data pipeline skips ahead in O(1).
+* **straggler mitigation** — per-step wall time is tracked with an EWMA of
+  mean and variance; a step slower than ``mean + k*sigma`` is flagged (on a
+  real cluster the flag feeds the job controller to drain/replace the slow
+  host; here it is surfaced in metrics and the log so the policy is
+  testable).
+* **elastic scaling** — checkpoints are mesh-agnostic (host numpy +
+  device_put against the *current* shardings), so restarts may change the
+  device count.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import store
+from repro.distributed.shardings import MeshRules
+from repro.models import params as P
+from repro.models.config import ArchConfig
+from repro.optim.adamw import AdamW
+from repro.train.step import make_train_step
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    """EWMA step-time monitor; flags outliers > mean + k*sigma."""
+
+    alpha: float = 0.1
+    k: float = 3.0
+    warmup: int = 5
+    mean: float = 0.0
+    var: float = 0.0
+    count: int = 0
+    flagged: int = 0
+
+    def observe(self, dt: float) -> bool:
+        self.count += 1
+        if self.count <= self.warmup:
+            # prime the statistics without flagging (first steps compile)
+            self.mean = dt if self.count == 1 else (
+                self.mean + (dt - self.mean) / self.count)
+            self.var = max(self.var, (dt - self.mean) ** 2)
+            return False
+        slow = dt > self.mean + self.k * max(self.var, 1e-12) ** 0.5
+        d = dt - self.mean
+        self.mean += self.alpha * d
+        self.var = (1 - self.alpha) * (self.var + self.alpha * d * d)
+        if slow:
+            self.flagged += 1
+        return slow
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    ckpt_keep: int = 3
+    accum: int = 1
+    log_every: int = 10
+    seed: int = 0
+
+
+class Trainer:
+    def __init__(self, cfg: ArchConfig, rules: MeshRules, opt: AdamW,
+                 data: Callable[[int], dict], tcfg: TrainerConfig,
+                 *, batch_shardings: Optional[dict] = None,
+                 log: Callable[[str], None] = print):
+        self.cfg, self.rules, self.opt = cfg, rules, opt
+        self.data, self.tcfg, self.log = data, tcfg, log
+        self.batch_shardings = batch_shardings
+        self.monitor = StragglerMonitor()
+        self._step_fn = jax.jit(
+            make_train_step(cfg, rules, opt, accum=tcfg.accum),
+            donate_argnums=(0, 1))
+
+    # ---------------- state ----------------
+    def init_state(self):
+        params = P.init_params(self.cfg, jax.random.PRNGKey(self.tcfg.seed))
+        if self.rules.mesh is not None:
+            shardings = P.param_shardings(self.cfg, self.rules)
+            params = jax.tree.map(jax.device_put, params, shardings)
+        return params, self.opt.init(params)
+
+    def restore_or_init(self):
+        params, opt_state = self.init_state()
+        if self.tcfg.ckpt_dir:
+            step, tree = store.restore_latest(
+                self.tcfg.ckpt_dir, {"params": params, "opt": opt_state})
+            if step is not None:
+                if self.rules.mesh is not None:   # elastic mesh-resharding
+                    shardings = P.param_shardings(self.cfg, self.rules)
+                    tree["params"] = jax.tree.map(
+                        jax.device_put, tree["params"], shardings)
+                self.log(f"[trainer] restored checkpoint at step {step}")
+                return step, tree["params"], tree["opt"]
+        return 0, params, opt_state
+
+    # ---------------- loop ----------------
+    def run(self, *, start_params=None, start_opt=None, start_step=0):
+        if start_params is None:
+            start_step, params, opt_state = self.restore_or_init()
+        else:
+            params, opt_state = start_params, start_opt
+        history = []
+        for step in range(start_step, self.tcfg.steps):
+            batch = self.data(step)
+            batch = {k: jax.device_put(
+                v, (self.batch_shardings or {}).get(k))
+                for k, v in batch.items()}
+            t0 = time.perf_counter()
+            params, opt_state, metrics = self._step_fn(
+                params, opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.perf_counter() - t0
+            slow = self.monitor.observe(dt)
+            metrics = {k: float(v) for k, v in metrics.items()}
+            metrics.update(step=step, step_time=dt, straggler=bool(slow))
+            history.append(metrics)
+            if slow:
+                self.log(f"[straggler] step {step} took {dt*1e3:.1f} ms "
+                         f"(mean {self.monitor.mean*1e3:.1f} ms)")
+            if step % self.tcfg.log_every == 0:
+                self.log(f"[train] step {step} loss {metrics['loss']:.4f} "
+                         f"({dt*1e3:.1f} ms)")
+            if (self.tcfg.ckpt_dir and (step + 1) % self.tcfg.ckpt_every == 0):
+                store.save(self.tcfg.ckpt_dir, step + 1,
+                           {"params": params, "opt": opt_state},
+                           keep=self.tcfg.ckpt_keep)
+        if self.tcfg.ckpt_dir:
+            store.save(self.tcfg.ckpt_dir, self.tcfg.steps,
+                       {"params": params, "opt": opt_state},
+                       keep=self.tcfg.ckpt_keep)
+        return params, opt_state, history

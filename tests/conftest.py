@@ -1,0 +1,13 @@
+"""Test fixtures.  x64 is enabled (the paper's FP64 host precision); device
+count stays at 1 — multi-device strategy tests run in subprocesses."""
+
+import jax
+import pytest
+
+jax.config.update("jax_enable_x64", True)
+
+
+@pytest.fixture(scope="session")
+def rng():
+    import numpy as np
+    return np.random.default_rng(0)

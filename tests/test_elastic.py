@@ -1,0 +1,67 @@
+"""Elastic scaling: a checkpoint written under one device configuration
+restores under another (mesh-resharded device_put) — the restart-with-
+different-pod-count path of DESIGN.md §6."""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+_SAVE = r"""
+import jax, sys
+from repro.checkpoint import store
+from repro.models import params as P
+from repro.models.config import ArchConfig
+
+cfg = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                 dtype="float32")
+params = P.init_params(cfg, jax.random.PRNGKey(7))
+store.save(sys.argv[1], 3, {"params": params})
+print("SAVED", len(jax.tree.leaves(params)))
+"""
+
+_RESTORE = r"""
+import numpy as np
+import jax, sys
+from jax.sharding import Mesh
+from repro.checkpoint import store
+from repro.distributed.shardings import MeshRules
+from repro.models import params as P
+from repro.models.config import ArchConfig
+
+cfg = ArchConfig(name="tiny", family="dense", n_layers=2, d_model=64,
+                 n_heads=4, n_kv_heads=2, d_ff=128, vocab_size=256,
+                 dtype="float32")
+mesh = Mesh(np.array(jax.devices()).reshape(2, 2), ("data", "model"))
+rules = MeshRules.for_mesh(mesh)
+like = P.init_params(cfg, jax.random.PRNGKey(0))
+shardings = P.param_shardings(cfg, rules)
+step, tree = store.restore_latest(sys.argv[1], {"params": like},
+                                  shardings={"params": shardings})
+assert step == 3
+ref = P.init_params(cfg, jax.random.PRNGKey(7))
+for a, b in zip(jax.tree.leaves(tree["params"]), jax.tree.leaves(ref)):
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert len(a.sharding.device_set) in (1, 2, 4)  # actually placed
+print("RESTORED-ON-4DEV OK")
+"""
+
+
+@pytest.mark.slow
+def test_checkpoint_restores_across_device_counts(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+
+    env.pop("XLA_FLAGS", None)   # writer: 1 device
+    res = subprocess.run([sys.executable, "-c", _SAVE, str(tmp_path)],
+                         env=env, capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr
+    assert "SAVED" in res.stdout
+
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    res = subprocess.run([sys.executable, "-c", _RESTORE, str(tmp_path)],
+                         env=env, capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "RESTORED-ON-4DEV OK" in res.stdout

@@ -1,0 +1,97 @@
+"""Launch-layer units: input specs, shape/skip policy, scaled configs.
+
+These run WITHOUT the 512-device flag (rules=None -> no shardings), so they
+exercise exactly the spec-construction logic the dry-run uses.
+"""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.launch import shapes as S
+from repro.launch.train import scaled_config
+from repro.models import config as C
+from repro.models import model as M
+
+ARCHS = C.available()
+
+
+def test_all_archs_registered():
+    assert len(ARCHS) == 10
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_specs_shapes(arch):
+    cfg = C.get(arch)
+    case = S.SHAPES["train_4k"]
+    batch = S.train_specs(cfg, case)
+    assert batch["tokens"].dtype == jnp.int32
+    b, s_txt = batch["tokens"].shape
+    assert b == case.global_batch
+    total = s_txt + (batch["patches"].shape[1] if "patches" in batch else 0)
+    assert total == case.seq_len
+    if cfg.family == "audio":
+        assert batch["frames"].shape == (b, case.seq_len, cfg.d_model)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_specs_cache_tree(arch):
+    cfg = C.get(arch)
+    spec = S.decode_specs(cfg, S.SHAPES["decode_32k"])
+    assert spec["tokens"].shape == (128, 1)
+    cache = spec["cache"]
+    assert cache["len"].shape == ()
+    if cfg.family in ("dense", "vlm", "moe", "audio"):
+        kv = cache["layers"]
+        key = "c_kv" if cfg.uses_mla else "k"
+        n_l = cfg.n_layers - cfg.first_k_dense
+        assert kv[key].shape[0] == n_l
+        assert kv[key].shape[2] == 32_768
+    if cfg.family == "hybrid":
+        assert cache["ssm"].shape[0] == cfg.n_layers
+        assert cache["attn"]["k"].shape[0] == cfg.n_layers // cfg.attn_every
+
+
+def test_long_500k_policy():
+    ok, _ = S.cell_supported(C.get("zamba2-7b"), "long_500k")
+    assert ok
+    ok, why = S.cell_supported(C.get("stablelm-3b"), "long_500k")
+    assert not ok and "full-attention" in why
+    with pytest.raises(ValueError):
+        S.input_specs(C.get("qwen3-0.6b"), "long_500k")
+    # 40 cells total: 10 archs x 4 shapes, 8 documented skips
+    cells = [(a, s) for a in ARCHS for s in S.SHAPES]
+    skipped = [c for c in cells if not S.cell_supported(C.get(c[0]), c[1])[0]]
+    assert len(cells) == 40 and len(skipped) == 8
+
+
+def test_train_accum_covers_all_archs():
+    assert set(S.TRAIN_ACCUM) == set(ARCHS)
+    # microbatch divisibility on both meshes after the cap
+    for arch, accum in S.TRAIN_ACCUM.items():
+        for batch_shards in (16, 32):
+            eff = max(1, min(accum, 256 // batch_shards))
+            assert (256 // eff) % batch_shards == 0, (arch, eff)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_scaled_config_valid(arch):
+    cfg = scaled_config(C.get(arch), 0.04)
+    assert cfg.d_model % cfg.n_heads == 0 or cfg.uses_mla
+    assert cfg.n_heads % cfg.n_kv_heads == 0
+    if cfg.family == "ssm":
+        assert cfg.n_layers % cfg.slstm_every == 0
+    if cfg.mrope:
+        assert sum(cfg.mrope_sections) == (cfg.head_dim or 0) // 2
+
+
+def test_cache_spec_matches_init_cache():
+    cfg = scaled_config(C.get("zamba2-7b"), 0.04)
+    spec = M.cache_spec(cfg, 2, 64)
+    concrete = M.init_cache(cfg, 2, 64)
+    import jax
+
+    s_leaves = jax.tree.leaves(spec)
+    c_leaves = jax.tree.leaves(concrete)
+    assert len(s_leaves) == len(c_leaves)
+    for s, c in zip(s_leaves, c_leaves):
+        assert s.shape == c.shape and s.dtype == c.dtype

@@ -1,0 +1,139 @@
+"""Hypothesis property tests on system invariants."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from jax.sharding import PartitionSpec
+
+from repro.distributed import compression
+from repro.distributed.shardings import MeshRules, DEFAULT_RULES
+from repro.kernels import ref
+
+F32 = jnp.float32
+COMMON = dict(deadline=None, max_examples=20,
+              suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def _cloud(n, seed):
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.standard_normal((n, 3)))
+    vel = jnp.asarray(rng.standard_normal((n, 3)) * 0.1)
+    mass = jnp.asarray(rng.uniform(0.1, 1.0, n) / n)
+    return pos, vel, mass
+
+
+# ------------------------------------------------------------- N-body laws
+@settings(**COMMON)
+@given(n=st.integers(8, 96), seed=st.integers(0, 10_000))
+def test_momentum_conservation(n, seed):
+    """Newton's third law: sum_i m_i a_i == 0 for any cloud."""
+    pos, vel, mass = _cloud(n, seed)
+    acc, jerk, _ = ref.acc_jerk_pot(pos, vel, mass)
+    f = jnp.sum(mass[:, None] * acc, axis=0)
+    df = jnp.sum(mass[:, None] * jerk, axis=0)
+    scale = float(jnp.abs(mass[:, None] * acc).sum()) + 1e-30
+    assert float(jnp.abs(f).max()) / scale < 1e-10
+    assert float(jnp.abs(df).max()) / (
+        float(jnp.abs(mass[:, None] * jerk).sum()) + 1e-30) < 1e-10
+
+
+@settings(**COMMON)
+@given(n=st.integers(8, 64), seed=st.integers(0, 10_000),
+       shift=st.floats(-50.0, 50.0))
+def test_translation_invariance(n, seed, shift):
+    pos, vel, mass = _cloud(n, seed)
+    a1, j1, _ = ref.acc_jerk_pot(pos, vel, mass)
+    a2, j2, _ = ref.acc_jerk_pot(pos + shift, vel, mass)
+    np.testing.assert_allclose(np.asarray(a1), np.asarray(a2),
+                               rtol=1e-8, atol=1e-10)
+    np.testing.assert_allclose(np.asarray(j1), np.asarray(j2),
+                               rtol=1e-8, atol=1e-10)
+
+
+@settings(**COMMON)
+@given(n=st.integers(8, 64), seed=st.integers(0, 10_000))
+def test_permutation_equivariance(n, seed):
+    """Relabeling particles permutes the outputs identically — the invariant
+    behind EVERY distribution strategy (order-invariant source sweeps)."""
+    pos, vel, mass = _cloud(n, seed)
+    perm = np.random.default_rng(seed + 1).permutation(n)
+    a1, j1, p1 = ref.acc_jerk_pot(pos, vel, mass)
+    a2, j2, p2 = ref.acc_jerk_pot(pos[perm], vel[perm], mass[perm])
+    np.testing.assert_allclose(np.asarray(a1[perm]), np.asarray(a2),
+                               rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(p1[perm]), np.asarray(p2),
+                               rtol=1e-9, atol=1e-12)
+
+
+@settings(**COMMON)
+@given(n=st.integers(8, 48), seed=st.integers(0, 10_000),
+       split=st.integers(1, 7))
+def test_source_block_additivity(n, seed, split):
+    """acc(targets; all sources) == sum of acc over source blocks — the
+    algebraic fact the replicated/two_level/ring strategies rely on."""
+    pos, vel, mass = _cloud(n, seed)
+    a_all, j_all, p_all = ref.acc_jerk_pot(pos, vel, mass)
+    k = max(1, (n * split) // 8)
+    a_sum = jnp.zeros_like(a_all)
+    j_sum = jnp.zeros_like(j_all)
+    p_sum = jnp.zeros_like(p_all)
+    for lo in range(0, n, k):
+        hi = min(lo + k, n)
+        a, j, p = ref.acc_jerk_pot_rect(pos, vel, pos[lo:hi], vel[lo:hi],
+                                        mass[lo:hi])
+        a_sum, j_sum, p_sum = a_sum + a, j_sum + j, p_sum + p
+    np.testing.assert_allclose(np.asarray(a_sum), np.asarray(a_all),
+                               rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(j_sum), np.asarray(j_all),
+                               rtol=1e-9, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(p_sum), np.asarray(p_all),
+                               rtol=1e-9, atol=1e-12)
+
+
+# ------------------------------------------------------------- compression
+@settings(**COMMON)
+@given(seed=st.integers(0, 10_000), scale=st.floats(1e-6, 1e6))
+def test_quantize_bound_any_scale(seed, scale):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal(256) * scale, F32)
+    q, s = compression.quantize(x)
+    err = jnp.abs(compression.dequantize(q, s) - x)
+    assert float(err.max()) <= float(s) * 0.5 * (1 + 1e-5) + 1e-30
+
+
+# ------------------------------------------------------------- sharding rules
+class _FakeMesh:
+    def __init__(self, shape, names):
+        import numpy as _np
+
+        self.axis_names = names
+        self.devices = _np.empty(shape)
+        self.size = int(_np.prod(shape))
+
+
+@settings(**COMMON)
+@given(
+    d0=st.sampled_from([1, 2, 3, 4, 6, 8, 16, 48, 256]),
+    d1=st.sampled_from([1, 2, 5, 8, 16, 32, 160, 1024]),
+    logical=st.lists(
+        st.sampled_from([None] + list(DEFAULT_RULES)), min_size=2,
+        max_size=2),
+)
+def test_spec_never_reuses_axis_and_always_divides(d0, d1, logical):
+    mesh = _FakeMesh((2, 16, 16), ("pod", "data", "model"))
+    rules = MeshRules(mesh=mesh, rules=dict(DEFAULT_RULES))
+    spec = rules.spec((d0, d1), logical)
+    assert isinstance(spec, PartitionSpec)
+    used = []
+    sizes = {"pod": 2, "data": 16, "model": 16}
+    for dim, entry in zip((d0, d1), spec):
+        axes = (entry,) if isinstance(entry, str) else (entry or ())
+        prod = 1
+        for a in axes:
+            assert a not in used, spec
+            used.append(a)
+            prod *= sizes[a]
+        assert dim % prod == 0, (spec, dim, prod)

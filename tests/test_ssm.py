@@ -1,0 +1,140 @@
+"""SSM cell correctness: chunked forms vs naive recurrences, chunk-size
+invariance, and parallel-vs-step agreement."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import ssm
+
+F32 = jnp.float32
+
+
+def _ssd_naive(x, dt, a_neg, b_mat, c_mat):
+    """Direct O(S) recurrence: S_t = exp(dt_t a) S_{t-1} + dt_t B_t x_t^T."""
+    bsz, s, h, p = x.shape
+    n = b_mat.shape[-1]
+    state = np.zeros((bsz, h, n, p))
+    ys = np.zeros((bsz, s, h, p))
+    for t in range(s):
+        g = np.exp(np.asarray(dt[:, t]) * np.asarray(a_neg))      # (B,H)
+        upd = np.einsum("bh,bn,bhp->bhnp", np.asarray(dt[:, t]),
+                        np.asarray(b_mat[:, t]), np.asarray(x[:, t]))
+        state = state * g[:, :, None, None] + upd
+        ys[:, t] = np.einsum("bn,bhnp->bhp", np.asarray(c_mat[:, t]), state)
+    return ys, state
+
+
+def _ssd_inputs(bsz=2, s=32, h=3, p=4, n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((bsz, s, h, p)), F32)
+    dt = jnp.asarray(rng.uniform(0.01, 0.2, (bsz, s, h)), F32)
+    a_neg = jnp.asarray(-rng.uniform(0.5, 2.0, (h,)), F32)
+    b_mat = jnp.asarray(rng.standard_normal((bsz, s, n)), F32)
+    c_mat = jnp.asarray(rng.standard_normal((bsz, s, n)), F32)
+    return x, dt, a_neg, b_mat, c_mat
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 16, 32])
+def test_ssd_chunked_matches_naive(chunk):
+    x, dt, a_neg, b_mat, c_mat = _ssd_inputs()
+    y, st = ssm.ssd_chunked(x, dt, a_neg, b_mat, c_mat, chunk=chunk)
+    y_ref, st_ref = _ssd_naive(x, dt, a_neg, b_mat, c_mat)
+    np.testing.assert_allclose(np.asarray(y), y_ref, rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st), st_ref, rtol=1e-4, atol=1e-5)
+
+
+def test_ssd_step_continues_chunked():
+    x, dt, a_neg, b_mat, c_mat = _ssd_inputs(s=16)
+    _, st = ssm.ssd_chunked(x, dt, a_neg, b_mat, c_mat, chunk=8)
+    x1, dt1, _, b1, c1 = _ssd_inputs(s=1, seed=9)
+    y_step, st2 = ssm.ssd_step(x1[:, 0], dt1[:, 0], a_neg, b1[:, 0],
+                               c1[:, 0], st)
+    # against chunked over the concatenated sequence
+    xx = jnp.concatenate([x, x1], axis=1)
+    dd = jnp.concatenate([dt, dt1], axis=1)
+    bb = jnp.concatenate([b_mat, b1], axis=1)
+    cc = jnp.concatenate([c_mat, c1], axis=1)
+    y_all, st_all = ssm.ssd_chunked(xx, dd, a_neg, bb, cc, chunk=17)
+    np.testing.assert_allclose(np.asarray(y_step), np.asarray(y_all[:, -1]),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(st2), np.asarray(st_all),
+                               rtol=1e-4, atol=1e-5)
+
+
+def _mlstm_inputs(bsz=2, s=24, h=2, k=8, seed=1):
+    rng = np.random.default_rng(seed)
+    mk = lambda *sh: jnp.asarray(rng.standard_normal(sh), F32)  # noqa: E731
+    return (mk(bsz, s, h, k), mk(bsz, s, h, k), mk(bsz, s, h, k),
+            mk(bsz, s, h) * 2.0, mk(bsz, s, h) * 2.0)
+
+
+@pytest.mark.parametrize("chunk", [4, 8, 12, 24])
+def test_mlstm_chunk_invariance(chunk):
+    q, k, v, gi, gf = _mlstm_inputs()
+    h1, c1 = ssm.mlstm_chunked(q, k, v, gi, gf, chunk=chunk)
+    h2, c2 = ssm.mlstm_chunked(q, k, v, gi, gf, chunk=24)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=1e-4, atol=1e-5)
+    for a, b in zip(c1, c2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_mlstm_chunked_matches_stepwise():
+    q, k, v, gi, gf = _mlstm_inputs(s=12)
+    h_par, _ = ssm.mlstm_chunked(q, k, v, gi, gf, chunk=4)
+    carry = None
+    bsz, s, h, kk = q.shape
+    carry = (jnp.zeros((bsz, h, kk, kk), F32), jnp.zeros((bsz, h, kk), F32),
+             jnp.zeros((bsz, h), F32))
+    outs = []
+    for t in range(s):
+        o, carry = ssm.mlstm_step(q[:, t], k[:, t], v[:, t],
+                                  gi[:, t], gf[:, t], carry)
+        outs.append(o)
+    h_seq = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(h_par), np.asarray(h_seq),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_slstm_scan_matches_step():
+    rng = np.random.default_rng(2)
+    bsz, s, h, hd = 2, 10, 2, 4
+    gx = jnp.asarray(rng.standard_normal((bsz, s, h, 4, hd)), F32)
+    r = jnp.asarray(rng.standard_normal((h, hd, 4 * hd)) * 0.2, F32)
+    h_par, carry_par = ssm.slstm_scan(gx, r, n_heads=h)
+    z = jnp.zeros((bsz, h, hd), F32)
+    carry = (z, z, z, z)
+    outs = []
+    for t in range(s):
+        o, carry = ssm.slstm_step(gx[:, t], r, carry)
+        outs.append(o)
+    np.testing.assert_allclose(np.asarray(h_par),
+                               np.asarray(jnp.stack(outs, 1)),
+                               rtol=1e-5, atol=1e-6)
+    for a, b in zip(carry_par, carry):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-6)
+
+
+def test_causal_conv_streaming_matches_padded():
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.standard_normal((2, 16, 6)), F32)
+    w = jnp.asarray(rng.standard_normal((4, 6)), F32)
+    y_full = ssm.causal_conv(x, w)
+    cache = jnp.zeros((2, 3, 6), F32)
+    y1, cache = ssm.causal_conv(x[:, :9], w, cache=cache)
+    y2, cache = ssm.causal_conv(x[:, 9:], w, cache=cache)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), rtol=1e-6, atol=1e-6)
+
+
+def test_gates_stay_finite_extreme():
+    """Log-space stabilization: extreme gate pre-activations stay finite."""
+    q, k, v, gi, gf = _mlstm_inputs(s=16)
+    h, _ = ssm.mlstm_chunked(q, k, v, gi + 40.0, gf - 40.0, chunk=8)
+    assert bool(jnp.all(jnp.isfinite(h)))
+    h2, _ = ssm.mlstm_chunked(q, k, v, gi - 40.0, gf + 40.0, chunk=8)
+    assert bool(jnp.all(jnp.isfinite(h2)))
