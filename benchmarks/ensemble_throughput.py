@@ -1,0 +1,113 @@
+"""Ensemble throughput: one batched call vs B sequential driver invocations.
+
+The serving question behind ``repro.sim.ensemble``: given B independent
+small-N simulations, is packing them into one stacked ``vmap`` call faster
+end-to-end than running the driver B times?  Each sequential invocation pays
+its own process start, jax import, trace/compile and per-step dispatch; the
+batched call pays them once and amortizes every fixed cost over the batch —
+the same economics as batched inference serving.
+
+Both paths run in subprocesses (the standard multi-device benchmark harness
+in ``benchmarks/common``), so the comparison is invocation-to-invocation:
+
+  sequential: B processes x [import + compile + N-step run]
+  batched:    1 process   x [import + compile + N-step run of the B-stack]
+
+A second (informative) row reports the warm in-process ratio — batched step
+throughput vs sequential step throughput with compile and import excluded —
+which on a CPU host is memory-bandwidth-bound rather than dispatch-bound.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks import common
+
+N = 256
+B = 8
+DT = 1.0 / 512
+
+_DRIVER = """
+from repro.sim import driver
+r = driver.run(driver.SimConfig(scenario="plummer", n={n}, seed={seed},
+                                ensemble={ensemble}, dt={dt}, t_end={t_end},
+                                impl="xla", diag_every=32))
+print("WALL", r["wall_s"])
+"""
+
+_WARM = """
+import time
+from repro.sim import driver
+cfg = dict(scenario="plummer", n={n}, dt={dt}, t_end={t_end}, impl="xla",
+           diag_every=32)
+driver.run(driver.SimConfig(seed=100, ensemble={ensemble}, **cfg))  # warm
+t0 = time.perf_counter()
+driver.run(driver.SimConfig(seed=0, ensemble={ensemble}, **cfg))
+print("WALL", time.perf_counter() - t0)
+"""
+
+
+def _wall(out: str) -> float:
+    for line in out.splitlines():
+        if line.startswith("WALL"):
+            return float(line.split()[-1])
+    raise RuntimeError(f"no WALL line in output:\n{out}")
+
+
+def run(quick: bool = False):
+    t_end = 0.125 if quick else 0.25
+    rows = []
+
+    # --- end-to-end: B sequential invocations vs one batched invocation ---
+    t0 = time.perf_counter()
+    seq_inner = 0.0
+    for seed in range(B):
+        out = common.run_subprocess(
+            _DRIVER.format(n=N, seed=seed, ensemble=1, dt=DT, t_end=t_end))
+        seq_inner += _wall(out)
+    seq_total = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    out = common.run_subprocess(
+        _DRIVER.format(n=N, seed=0, ensemble=B, dt=DT, t_end=t_end))
+    batch_inner = _wall(out)
+    batch_total = time.perf_counter() - t0
+
+    rows.append({
+        "mode": "end_to_end",
+        "runs": B, "n": N, "t_end": t_end,
+        "sequential_s": round(seq_total, 2),
+        "batched_s": round(batch_total, 2),
+        "speedup": round(seq_total / batch_total, 2),
+        "sequential_inner_s": round(seq_inner, 2),
+        "batched_inner_s": round(batch_inner, 2),
+    })
+
+    # --- warm in-process: steady-state step throughput only ---------------
+    warm_seq = 0.0
+    out = common.run_subprocess(
+        _WARM.format(n=N, ensemble=1, dt=DT, t_end=t_end))
+    warm_seq = B * _wall(out)
+    out = common.run_subprocess(
+        _WARM.format(n=N, ensemble=B, dt=DT, t_end=t_end))
+    warm_batch = _wall(out)
+    rows.append({
+        "mode": "warm_steady_state",
+        "runs": B, "n": N, "t_end": t_end,
+        "sequential_s": round(warm_seq, 2),
+        "batched_s": round(warm_batch, 2),
+        "speedup": round(warm_seq / warm_batch, 2),
+    })
+
+    common.emit("ensemble_throughput", rows,
+                ["mode", "runs", "n", "t_end", "sequential_s", "batched_s",
+                 "speedup", "sequential_inner_s", "batched_inner_s"])
+    e2e = rows[0]["speedup"]
+    print(f"# batched ensemble end-to-end speedup: {e2e:.2f}x "
+          f"({'meets' if e2e >= 2.0 else 'BELOW'} the 2x target)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -35,7 +35,9 @@ def run(quick: bool = False):
             "peak_W": round(e["peak_W"], 1),
             "EDP_Js": round(e["edp_Js"], 1),
         })
-    if len(rows) == 3:
+    # the EDP-minimum summary is meaningful for any sweep of >= 2 counts
+    # (the seed's == 3 gate silently dropped it for other sweep lengths)
+    if len(rows) >= 2:
         emin = min(rows, key=lambda r: r["EDP_Js"])
         for r in rows:
             r["edp_minimum"] = r is emin

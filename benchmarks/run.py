@@ -1,9 +1,11 @@
 """Benchmark harness entry point — one module per paper table/figure:
 
   table1_strategies : Table 1 (strategy time-to-solution + EDP)
+  table1_scenarios  : Table 1 sweep over the repro.sim scenario library
   fig4_validation   : Fig. 4 (accuracy bands + energy-distribution overlap)
   fig5_scaling      : Fig. 5 (strong scaling 1/2/4 devices)
   fig6_energy       : Fig. 6 (energy-to-solution / peak power, EDP minimum)
+  ensemble_throughput : batched B-run ensemble vs B sequential invocations
   lm_step           : LM-side reduced-config step microbench
   roofline_table    : dry-run roofline summary (EXPERIMENTS.md §Roofline)
 
@@ -23,14 +25,17 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     args = ap.parse_args()
 
-    from benchmarks import (fig4_validation, fig5_scaling, fig6_energy,
-                            lm_step, roofline_table, table1_strategies)
+    from benchmarks import (ensemble_throughput, fig4_validation,
+                            fig5_scaling, fig6_energy, lm_step,
+                            roofline_table, table1_strategies)
 
     suites = {
         "fig4_validation": fig4_validation.run,
         "fig5_scaling": fig5_scaling.run,
         "fig6_energy": fig6_energy.run,
         "table1_strategies": table1_strategies.run,
+        "table1_scenarios": table1_strategies.run_scenarios,
+        "ensemble_throughput": ensemble_throughput.run,
         "lm_step": lm_step.run,
         "roofline_table": roofline_table.run,
     }

@@ -20,10 +20,10 @@ STEPS = 3
 
 _SNIPPET = """
 import time, jax, jax.numpy as jnp
-from repro.core import nbody, hermite
+from repro.core import hermite
 from repro.core.strategies import make_strategy_evaluator
 
-state = nbody.plummer({n}, seed=0)
+{setup}
 ev = make_strategy_evaluator("{strategy}", devices=jax.devices()[:{devices}],
                              impl="xla", chips_per_card=2)
 state0 = hermite.initialize(state, ev)   # compile + bootstrap
@@ -33,6 +33,14 @@ out = hermite.evolve_scan(state0, ev, n_steps={steps}, dt=1e-3)
 jax.block_until_ready(out.pos)
 print("TIME", time.perf_counter() - t0)
 """
+
+_PLUMMER_SETUP = """\
+from repro.core import nbody
+state = nbody.plummer({n}, seed=0)"""
+
+_SCENARIO_SETUP = """\
+from repro.sim import scenarios
+state = scenarios.make("{scenario}", {n}, seed=0)"""
 
 
 def run(quick: bool = False):
@@ -49,8 +57,8 @@ def run(quick: bool = False):
     base_time = None
     for strategy, devices, label in cases:
         out = common.run_subprocess(
-            _SNIPPET.format(strategy=strategy, devices=devices, n=n,
-                            steps=STEPS),
+            _SNIPPET.format(setup=_PLUMMER_SETUP.format(n=n),
+                            strategy=strategy, devices=devices, steps=STEPS),
             devices=max(devices, 1))
         t = float(out.strip().split()[-1])
         if base_time is None:
@@ -75,5 +83,51 @@ def run(quick: bool = False):
     return rows
 
 
+SCENARIO_SWEEP = ("plummer", "king", "merger", "cold_collapse")
+
+
+def run_scenarios(quick: bool = False):
+    """Scenario sweep of the strategy ranking (workload-shape sensitivity).
+
+    Related work shows strategy rankings shift with workload shape; this
+    repeats the Table 1 measurement over the ``repro.sim`` scenario library
+    and reports, per scenario, each strategy's time normalized to the
+    single-chip baseline plus its rank.
+    """
+    n = 512 if quick else 2048
+    names = SCENARIO_SWEEP[:2] if quick else SCENARIO_SWEEP
+    cases = [("replicated", 1), ("replicated", 2), ("two_level", 2),
+             ("mesh_sharded", 2), ("ring", 2)]
+    rows = []
+    for scenario in names:
+        base_time = None
+        scen_rows = []
+        for strategy, devices in cases:
+            out = common.run_subprocess(
+                _SNIPPET.format(
+                    setup=_SCENARIO_SETUP.format(scenario=scenario, n=n),
+                    strategy=strategy, devices=devices, steps=STEPS),
+                devices=max(devices, 1))
+            t = float(out.strip().split()[-1])
+            if base_time is None:
+                base_time = t
+            scen_rows.append({
+                "scenario": scenario,
+                "strategy": strategy,
+                "chips": devices,
+                "bench_time_s": round(t, 3),
+                "vs_single": round(t / base_time, 3),
+            })
+        for rank, r in enumerate(
+                sorted(scen_rows, key=lambda r: r["bench_time_s"]), 1):
+            r["rank"] = rank
+        rows.extend(scen_rows)
+    common.emit("table1_scenarios", rows,
+                ["scenario", "strategy", "chips", "bench_time_s",
+                 "vs_single", "rank"])
+    return rows
+
+
 if __name__ == "__main__":
     run()
+    run_scenarios()

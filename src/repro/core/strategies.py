@@ -34,10 +34,29 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+try:  # jax >= 0.5 exports shard_map at top level
+    _shard_map = jax.shard_map
+except AttributeError:  # 0.4.x: the experimental location
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 from repro.core.hermite import Evaluation, Evaluator
 from repro.kernels import nbody_force, ops
 
 STRATEGIES = ("replicated", "two_level", "mesh_sharded", "ring")
+
+
+def make_batch_mesh(
+    devices: Optional[Sequence[jax.Device]] = None,
+    *,
+    axis_name: str = "batch",
+) -> Mesh:
+    """1-D mesh over ``devices`` for batch-axis (ensemble) data parallelism.
+
+    This is the same flat device view the 1-D strategies build internally;
+    ``repro.sim.ensemble`` shards the leading axis of stacked runs over it.
+    """
+    devs = np.asarray(list(devices) if devices is not None else jax.devices())
+    return Mesh(devs.reshape(devs.size), (axis_name,))
 
 
 def _round_up(n: int, m: int) -> int:
@@ -119,7 +138,7 @@ def _replicated(mesh: Mesh, order: int, kw) -> Evaluator:
 
     @jax.jit
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(axes), P(axes), P(axes)),
         out_specs=(P(axes), P(axes), P(axes), P(axes)),
@@ -155,7 +174,7 @@ def _two_level(mesh: Mesh, order: int, kw) -> Evaluator:
 
     @jax.jit
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(axes), P(axes), P(axes)),
         out_specs=(P(axes), P(axes), P(axes), P(axes)),
@@ -215,7 +234,7 @@ def _ring(mesh: Mesh, order: int, kw) -> Evaluator:
 
     @jax.jit
     @functools.partial(
-        jax.shard_map,
+        _shard_map,
         mesh=mesh,
         in_specs=(P(axes), P(axes), P(axes)),
         out_specs=(P(axes), P(axes), P(axes), P(axes)),

@@ -44,6 +44,7 @@ _COMP_RE = re.compile(r"^(ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\)\s*->\s*.+\s*\{")
 _INSTR_RE = re.compile(
     r"^\s*(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*(.+?)\s([a-z][a-z0-9\-]*)\(")
 _CALLS_RE = re.compile(r"calls=%([\w\.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%([\w\.\-]+)")
 _BODY_RE = re.compile(r"body=%([\w\.\-]+)")
 _COND_RE = re.compile(r"condition=%([\w\.\-]+)")
 _BRANCH_RE = re.compile(r"branch_computations=\{([^}]*)\}")
@@ -64,7 +65,7 @@ _EW8 = ("exponential", "exponential-minus-one", "log", "log-plus-one",
         "erf", "expm1", "log1p")
 _SKIP_BYTES = ("parameter", "get-tuple-element", "tuple", "bitcast",
                "constant", "while", "conditional", "after-all", "token",
-               "opt-barrier", "partition-id", "replica-id")
+               "opt-barrier", "partition-id", "replica-id", "call")
 _COLL_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
              "collective-permute")
 
@@ -162,6 +163,13 @@ def _multipliers(comps: Dict[str, Computation],
                 if mbr:
                     for ref in _OPERAND_RE.findall(mbr.group(1)):
                         edges[cname].append((ref, 1.0))
+            elif ins.opcode == "call":
+                # a real call region (CPU thunks wrap parallel loop bodies
+                # this way: call(...), to_apply=%parallel_...) — unlike the
+                # to_apply of reduce/sort/scatter, which stays a combiner
+                mapply = _TO_APPLY_RE.search(line)
+                if mapply:
+                    edges[cname].append((mapply.group(1), 1.0))
             else:
                 mcall = _CALLS_RE.search(line)
                 if mcall:

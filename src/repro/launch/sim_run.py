@@ -1,0 +1,119 @@
+"""Scenario/ensemble simulation launcher — the ``repro.sim`` front door.
+
+    PYTHONPATH=src python -m repro.launch.sim_run \
+        --scenario king --w0 6 --n 256 --t-end 0.1
+    PYTHONPATH=src python -m repro.launch.sim_run \
+        --scenario merger --ensemble 8 --devices 2 --strategy replicated
+
+Each invocation emits a one-line summary plus a JSON telemetry report
+(wall time, steps/s, interactions/s, modeled energy/EDP, per-run energy
+conservation) under ``experiments/sim/`` (override with ``--out``).
+
+``--devices k`` (k > 1) needs host-platform placeholder devices; the
+launcher sets XLA_FLAGS accordingly BEFORE importing jax, mirroring the
+paper's tt-run process-per-card launch.
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import sys
+
+
+def _parse_params(pairs):
+    """--param k=v (repeatable) -> dict with int/float coercion."""
+    out = {}
+    for pair in pairs or ():
+        if "=" not in pair:
+            raise SystemExit(f"--param expects k=v, got {pair!r}")
+        k, v = pair.split("=", 1)
+        try:
+            out[k] = int(v)
+        except ValueError:
+            try:
+                out[k] = float(v)
+            except ValueError:
+                out[k] = v
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--scenario", default="plummer",
+                    help="registry name (see repro.sim.scenarios.available)")
+    ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ensemble", type=int, default=1,
+                    help="batch B independent runs (seeds seed..seed+B-1)")
+    ap.add_argument("--t-end", type=float, default=1.0)
+    ap.add_argument("--dt", type=float, default=None,
+                    help="fixed step (single-run default: shared adaptive)")
+    ap.add_argument("--eta", type=float, default=0.02)
+    ap.add_argument("--order", type=int, default=6, choices=(4, 6))
+    ap.add_argument("--strategy", default="single",
+                    choices=("single", "replicated", "two_level",
+                             "mesh_sharded", "ring"))
+    ap.add_argument("--devices", type=int, default=1)
+    ap.add_argument("--impl", default=None,
+                    choices=(None, "pallas", "pallas_interpret", "xla",
+                             "fp64"))
+    ap.add_argument("--diag-every", type=int, default=16)
+    ap.add_argument("--w0", type=float, default=None,
+                    help="King concentration (sugar for --param w0=...)")
+    ap.add_argument("--param", action="append", metavar="K=V",
+                    help="scenario parameter, repeatable")
+    ap.add_argument("--out", default=None, help="JSON report path")
+    ap.add_argument("--no-validate", dest="validate", action="store_false",
+                    help="skip construction-time scenario diagnostics")
+    ap.add_argument("--list-scenarios", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.devices > 1 and "XLA_FLAGS" not in os.environ:
+        os.environ["XLA_FLAGS"] = (
+            f"--xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+
+    jax.config.update("jax_enable_x64", True)
+
+    from repro.sim import driver, scenarios, telemetry
+
+    if args.list_scenarios:
+        for name in scenarios.available():
+            spec = scenarios.get_spec(name)
+            print(f"{name:16s} {spec.description}  defaults={dict(spec.defaults)}")
+        return 0
+
+    params = _parse_params(args.param)
+    if args.w0 is not None:
+        params["w0"] = args.w0
+
+    cfg = driver.SimConfig(
+        scenario=args.scenario, n=args.n, seed=args.seed,
+        ensemble=args.ensemble, t_end=args.t_end, dt=args.dt, eta=args.eta,
+        order=args.order, strategy=args.strategy, devices=args.devices,
+        impl=args.impl, diag_every=args.diag_every, scenario_params=params,
+        validate_ic=args.validate,
+        out=args.out or telemetry.default_report_path(
+            {"scenario": args.scenario, "n": args.n,
+             "ensemble": args.ensemble, "strategy": args.strategy}),
+    )
+    report = driver.run(cfg)
+
+    print(f"[sim] scenario={args.scenario} n={args.n} "
+          f"ensemble={args.ensemble} strategy={args.strategy} "
+          f"devices={args.devices} order={args.order}")
+    print(f"[sim] t={report['t_final']:.4f} steps={report['steps']} "
+          f"wall={report['wall_s']:.2f}s "
+          f"steps/s={report['steps_per_s']:.1f} "
+          f"pairs/s={report['interactions_per_s']:.3e}")
+    print(f"[sim] |dE/E|={report['de_rel']:.3e} "
+          f"E_model={report['modeled']['energy_J']:.1f}J "
+          f"EDP={report['modeled']['edp_Js']:.1f}Js")
+    print(f"[sim] report -> {report.get('report_path', '(not written)')}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

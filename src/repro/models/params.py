@@ -290,7 +290,10 @@ def count_active(cfg: ArchConfig) -> int:
     embeddings/lm_head excluded (the 6ND convention)."""
     defs = param_defs(cfg)
     total = 0
-    for path, p in jax.tree.flatten_with_path(defs, is_leaf=is_def)[0]:
+    # jax.tree.flatten_with_path only exists on newer jax; tree_util's
+    # spelling works across the 0.4.x line too
+    for path, p in jax.tree_util.tree_flatten_with_path(
+            defs, is_leaf=is_def)[0]:
         keys = [getattr(k, "key", str(k)) for k in path]
         name = keys[-1]
         if keys[0] in ("embed", "lm_head"):

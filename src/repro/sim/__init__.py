@@ -1,0 +1,16 @@
+"""``repro.sim`` — scenario library, batched ensemble engine, telemetry.
+
+Three layers on top of the core Hermite/strategy machinery:
+
+* ``scenarios``  — a registry of named initial-condition generators behind a
+  common :class:`~repro.sim.scenarios.Scenario` dataclass, each validated by
+  construction-time diagnostics (centre-of-mass frame, virial ratio);
+* ``ensemble``   — packs B independent simulations into stacked
+  ``ParticleState`` arrays and runs the full predict-evaluate-correct loop
+  under ``jax.vmap`` with the batch axis sharded across devices;
+* ``driver`` / ``telemetry`` — a unified run loop (diagnostics cadence,
+  per-step wall time, modeled energy/EDP) emitting one JSON report per run,
+  wired into the ``repro.launch.sim_run`` CLI.
+"""
+
+from repro.sim import driver, ensemble, scenarios, telemetry  # noqa: F401

@@ -1,0 +1,219 @@
+"""Unified run loop over scenarios: single runs, strategies, and ensembles.
+
+One entry point, :func:`run`, drives either
+
+* a **single simulation** under any force-distribution strategy (the seed's
+  ``single`` evaluator or one of ``repro.core.strategies.STRATEGIES``), with
+  fixed or shared-adaptive (Aarseth) timestep and per-step telemetry; or
+* a **batched ensemble** of B independent runs (seeds ``seed .. seed+B-1``)
+  advanced in lockstep by ``repro.sim.ensemble`` — fixed dt when ``dt`` is
+  given, otherwise per-run shared-adaptive (Aarseth) dt — with the batch
+  axis sharded over the requested devices and per-chunk telemetry.
+
+Every run produces one JSON-ready report (wall time, steps/s,
+interactions/s, modeled energy/EDP, energy-conservation track).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Dict, Mapping, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hermite, nbody
+from repro.core.evaluate import make_evaluator
+from repro.core.strategies import STRATEGIES, make_strategy_evaluator
+from repro.sim import ensemble as ens
+from repro.sim import scenarios, telemetry
+
+MAX_STEPS = 200_000
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    scenario: str = "plummer"
+    n: int = 256
+    seed: int = 0
+    ensemble: int = 1
+    t_end: float = 1.0
+    dt: Optional[float] = None       # None => shared-adaptive (Aarseth)
+    eta: float = 0.02
+    order: int = 6
+    strategy: str = "single"
+    devices: int = 1
+    impl: Optional[str] = None
+    eps: float = 1e-7
+    diag_every: int = 16             # steps between diagnostics snapshots
+    scenario_params: Mapping[str, Any] = \
+        dataclasses.field(default_factory=dict)
+    validate_ic: bool = True
+    out: Optional[str] = None        # JSON report path (None => don't write)
+
+    def meta(self) -> Dict[str, Any]:
+        return {
+            "scenario": self.scenario, "n": self.n, "seed": self.seed,
+            "ensemble": self.ensemble, "strategy": self.strategy,
+            "t_end": self.t_end, "dt": self.dt, "order": self.order,
+            "params": dict(self.scenario_params),
+        }
+
+
+def _device_list(cfg: SimConfig):
+    devs = jax.devices()
+    if cfg.devices > len(devs):
+        raise ValueError(
+            f"requested {cfg.devices} devices, only {len(devs)} visible "
+            "(set XLA_FLAGS=--xla_force_host_platform_device_count before "
+            "importing jax — the sim_run CLI does this)")
+    return devs[: cfg.devices]
+
+
+def _build_states(cfg: SimConfig):
+    return [
+        scenarios.make(cfg.scenario, cfg.n, seed=cfg.seed + i,
+                       validate=cfg.validate_ic, **dict(cfg.scenario_params))
+        for i in range(cfg.ensemble)
+    ]
+
+
+def run(cfg: SimConfig) -> Dict[str, Any]:
+    """Run one configuration end-to-end and return its telemetry report."""
+    if cfg.ensemble < 1:
+        raise ValueError(f"ensemble={cfg.ensemble} must be >= 1")
+    report = (_run_ensemble if cfg.ensemble > 1 else _run_single)(cfg)
+    if cfg.out:
+        telemetry.write_report(report, cfg.out)
+        report["report_path"] = cfg.out
+    return report
+
+
+# --------------------------------------------------------------------------
+# single run (per-step telemetry, any strategy, adaptive or fixed dt)
+# --------------------------------------------------------------------------
+def _run_single(cfg: SimConfig) -> Dict[str, Any]:
+    state = _build_states(cfg)[0]
+    if cfg.strategy == "single":
+        if cfg.impl == "fp64":  # golden reference: a precision, not a kernel
+            evaluator = make_evaluator(precision="fp64", order=cfg.order,
+                                       eps=cfg.eps)
+        else:
+            evaluator = make_evaluator(order=cfg.order, eps=cfg.eps,
+                                       impl=cfg.impl)
+    elif cfg.strategy in STRATEGIES:
+        if cfg.impl == "fp64":
+            raise ValueError(
+                "impl='fp64' (golden reference) only runs under "
+                "strategy='single'")
+        evaluator = make_strategy_evaluator(
+            cfg.strategy, devices=_device_list(cfg), order=cfg.order,
+            eps=cfg.eps, impl=cfg.impl or "xla")
+    else:
+        raise ValueError(f"unknown strategy {cfg.strategy!r}")
+
+    recorder = telemetry.TelemetryRecorder(cfg.meta())
+    state = hermite.initialize(state, evaluator)
+    jax.block_until_ready(state.pos)
+    e0 = float(nbody.total_energy(state))
+    recorder.record_snapshot(0, 0.0, energy=e0, de_rel=0.0)
+
+    steps, h_prev = 0, None
+    while float(state.time) < cfg.t_end and steps < MAX_STEPS:
+        if cfg.dt is not None:
+            h = cfg.dt
+        else:
+            h = float(hermite.aarseth_dt(state, eta=cfg.eta))
+            if h_prev is not None:  # rate-limit dt changes (noise robustness)
+                h = min(max(h, 0.5 * h_prev), 2.0 * h_prev)
+            h_prev = h
+        h = min(h, cfg.t_end - float(state.time))
+        t0 = time.perf_counter()
+        state = hermite.step(state, jnp.asarray(h, state.dtype), evaluator,
+                             order=cfg.order)
+        jax.block_until_ready(state.pos)
+        steps += 1
+        recorder.record_step(steps, float(state.time),
+                             time.perf_counter() - t0)
+        if steps % cfg.diag_every == 0:
+            e = float(nbody.total_energy(state))
+            recorder.record_snapshot(steps, float(state.time), energy=e,
+                                     de_rel=abs((e - e0) / e0))
+
+    e1 = float(nbody.total_energy(state))
+    return recorder.finalize(
+        n_bodies=cfg.n, ensemble=1,
+        n_devices=cfg.devices if cfg.strategy != "single" else 1,
+        extra={"e0": e0, "e1": e1, "de_rel": abs((e1 - e0) / e0),
+               "t_final": float(state.time)})
+
+
+# --------------------------------------------------------------------------
+# batched ensemble (lockstep; fixed dt or per-run shared-adaptive dt)
+# --------------------------------------------------------------------------
+def _run_ensemble(cfg: SimConfig) -> Dict[str, Any]:
+    if cfg.strategy not in STRATEGIES and cfg.strategy != "single":
+        raise ValueError(f"unknown strategy {cfg.strategy!r}")
+    impl = cfg.impl or "xla"
+    devices = _device_list(cfg) if cfg.devices > 1 else None
+
+    batched = ens.stack_states(_build_states(cfg))
+    recorder = telemetry.TelemetryRecorder(cfg.meta())
+
+    kw = dict(order=cfg.order, eps=cfg.eps, impl=impl, devices=devices)
+    batched = ens.ensemble_initialize(batched, **kw)
+    jax.block_until_ready(batched.pos)
+    e0 = np.asarray(ens.batched_total_energy(batched), np.float64)
+    recorder.record_snapshot(0, 0.0, energy=e0.tolist(), de_rel=0.0)
+
+    def snapshot(done, t_sim, wall):
+        # one wall sample per chunk: lockstep ensembles sync at chunk ends
+        recorder.record_step(done, t_sim, wall)
+        e = np.asarray(ens.batched_total_energy(batched), np.float64)
+        recorder.record_snapshot(done, t_sim, energy=e.tolist(),
+                                 de_rel=float(np.abs((e - e0) / e0).max()))
+
+    if cfg.dt is not None:
+        n_steps = max(1, int(round(cfg.t_end / cfg.dt)))
+        done = 0
+        while done < n_steps:
+            chunk = min(cfg.diag_every, n_steps - done)
+            t0 = time.perf_counter()
+            batched = ens.ensemble_run(batched, n_steps=chunk, dt=cfg.dt,
+                                       **kw)
+            jax.block_until_ready(batched.pos)
+            done += chunk
+            snapshot(done, done * cfg.dt, time.perf_counter() - t0)
+        steps, t_final = n_steps, n_steps * cfg.dt
+    else:
+        # per-run shared-adaptive dt: each member steps at its own Aarseth
+        # criterion; finished members freeze until the whole batch is done
+        h_prev = n_taken = None
+        done = 0
+        while done * cfg.diag_every < MAX_STEPS:
+            t0 = time.perf_counter()
+            batched, h_prev, n_taken = ens.ensemble_run_adaptive(
+                batched, t_end=cfg.t_end, n_steps=cfg.diag_every,
+                h_prev=h_prev, n_taken=n_taken, eta=cfg.eta, **kw)
+            jax.block_until_ready(batched.pos)
+            done += 1
+            snapshot(int(np.max(np.asarray(n_taken))),
+                     float(np.min(np.asarray(batched.time))),
+                     time.perf_counter() - t0)
+            if float(np.min(np.asarray(batched.time))) >= cfg.t_end:
+                break
+        steps = int(np.max(np.asarray(n_taken)))
+        t_final = float(np.min(np.asarray(batched.time)))
+
+    e1 = np.asarray(ens.batched_total_energy(batched), np.float64)
+    de = np.abs((e1 - e0) / e0)
+    runs = [{"run": i, "seed": cfg.seed + i, "e0": float(e0[i]),
+             "e1": float(e1[i]), "de_rel": float(de[i])}
+            for i in range(cfg.ensemble)]
+    return recorder.finalize(
+        n_bodies=cfg.n, ensemble=cfg.ensemble, n_devices=max(cfg.devices, 1),
+        extra={"e0": e0.tolist(), "e1": e1.tolist(),
+               "de_rel": float(de.max()), "t_final": t_final,
+               "runs": runs})

@@ -1,0 +1,115 @@
+"""Per-run telemetry: wall-time accounting, modeled energy/EDP, JSON reports.
+
+The energy model is the one documented in ``benchmarks/common.py`` (paper
+Fig. 6 / Table 1 analysis); it is imported when the benchmarks package is on
+the path (repo-root execution) and mirrored locally otherwise so that
+``repro.sim`` stays importable as an installed package.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import statistics
+import time
+from typing import Any, Dict, List, Optional
+
+try:  # repo-root execution: reuse the documented model verbatim
+    from benchmarks.common import modeled_energy
+except ImportError:  # installed-package execution: mirrored constants
+    P_CHIP = 170.0
+    P_HOST = 250.0
+    IDLE_FRAC = 0.35
+
+    def modeled_energy(t_solution: float, n_chips: int, util: float) -> dict:
+        """Paper Fig. 6 energy model; E (J), peak power (W), EDP (J s)."""
+        p_chips = n_chips * P_CHIP * (IDLE_FRAC + (1 - IDLE_FRAC) * util)
+        p_total = P_HOST + p_chips
+        e = t_solution * p_total
+        return {"energy_J": e, "peak_W": p_total, "edp_Js": e * t_solution}
+
+
+#: Dominant-term device occupancy assumed for the modeled energy accounting
+#: (matches the util figure used by benchmarks/table1_strategies.py).
+DEFAULT_UTIL = 0.6
+
+
+@dataclasses.dataclass
+class StepSample:
+    step: int
+    t_sim: float
+    wall_s: float
+
+
+class TelemetryRecorder:
+    """Accumulates per-step wall times + diagnostics snapshots for one run."""
+
+    def __init__(self, meta: Optional[Dict[str, Any]] = None):
+        self.meta: Dict[str, Any] = dict(meta or {})
+        self.steps: List[StepSample] = []
+        self.snapshots: List[Dict[str, Any]] = []
+        self._t0 = time.perf_counter()
+
+    # ---------------------------------------------------------------- record
+    def record_step(self, step: int, t_sim: float, wall_s: float) -> None:
+        self.steps.append(StepSample(step=step, t_sim=t_sim, wall_s=wall_s))
+
+    def record_snapshot(self, step: int, t_sim: float, **values) -> None:
+        self.snapshots.append({"step": step, "t_sim": t_sim, **values})
+
+    # -------------------------------------------------------------- finalize
+    def finalize(self, *, n_bodies: int, ensemble: int = 1,
+                 n_devices: int = 1, util: float = DEFAULT_UTIL,
+                 extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+        """Assemble the JSON-ready report for this run."""
+        walls = [s.wall_s for s in self.steps]
+        wall_total = sum(walls) if walls else time.perf_counter() - self._t0
+        n_steps = self.steps[-1].step if self.steps else 0
+        # each Hermite-6 step sweeps all pairs twice (acc/jerk pass + snap)
+        interactions = 2.0 * n_steps * ensemble * float(n_bodies) ** 2
+        energy = modeled_energy(wall_total, n_devices, util)
+        report: Dict[str, Any] = {
+            **self.meta,
+            "n_bodies": n_bodies,
+            "ensemble": ensemble,
+            "devices": n_devices,
+            "steps": n_steps,
+            "wall_s": wall_total,
+            "steps_per_s": n_steps / wall_total if wall_total > 0 else 0.0,
+            "interactions_per_s":
+                interactions / wall_total if wall_total > 0 else 0.0,
+            "step_wall_s": {
+                "mean": statistics.fmean(walls) if walls else 0.0,
+                "median": statistics.median(walls) if walls else 0.0,
+                "max": max(walls) if walls else 0.0,
+            },
+            "modeled": {
+                "util": util,
+                "energy_J": energy["energy_J"],
+                "peak_W": energy["peak_W"],
+                "edp_Js": energy["edp_Js"],
+            },
+            "snapshots": self.snapshots,
+        }
+        if extra:
+            report.update(extra)
+        return report
+
+
+def write_report(report: Dict[str, Any], path: str) -> str:
+    """Persist a report dict as pretty-printed JSON; returns the path."""
+    parent = os.path.dirname(os.path.abspath(path))
+    os.makedirs(parent, exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(report, f, indent=1, default=float)
+    return path
+
+
+def default_report_path(meta: Dict[str, Any], root: str = ".") -> str:
+    """experiments/sim/<scenario>_n<N>[_eB]_<strategy>.json"""
+    bits = [str(meta.get("scenario", "run")), f"n{meta.get('n', 0)}"]
+    if int(meta.get("ensemble", 1)) > 1:
+        bits.append(f"e{meta['ensemble']}")
+    bits.append(str(meta.get("strategy", "single")))
+    return os.path.join(root, "experiments", "sim", "_".join(bits) + ".json")

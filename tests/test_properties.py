@@ -1,6 +1,9 @@
 """Hypothesis property tests on system invariants."""
 
-import hypothesis
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
 import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp

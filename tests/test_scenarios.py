@@ -1,0 +1,113 @@
+"""Scenario-library sanity: registry contract, COM frame, virial ratio,
+energy normalization, and construction-time validation."""
+
+import numpy as np
+import pytest
+
+from repro.sim import scenarios
+
+
+def _build(name, n=96, seed=3, **params):
+    if name == "two_body":
+        n = 2  # fixed analytic configuration; other n are rejected
+    return scenarios.make(name, n, seed=seed, **params)
+
+
+@pytest.mark.parametrize("name", scenarios.available())
+def test_scenario_builds_in_com_frame(name):
+    spec = scenarios.get_spec(name)
+    state = _build(name, n=max(96, spec.min_n))
+    d = scenarios.state_diagnostics(state)
+    assert d["com_pos"] < 1e-10, (name, d)
+    assert d["com_vel"] < 1e-10, (name, d)
+    assert np.isfinite(d["energy"]), (name, d)
+    assert d["energy"] < 0.0, (name, d)          # every scenario is bound
+    assert abs(d["total_mass"] - 1.0) < 1e-12, (name, d)
+    mass = np.asarray(state.mass)
+    assert (mass > 0).all(), name
+
+
+@pytest.mark.parametrize(
+    "name", [n for n in scenarios.available()
+             if scenarios.get_spec(n).equilibrium])
+def test_equilibrium_scenarios_near_virial(name):
+    state = _build(name, n=max(128, scenarios.get_spec(name).min_n))
+    q = scenarios.state_diagnostics(state)["virial_ratio"]
+    assert abs(q - 0.5) < scenarios.VIRIAL_TOL, (name, q)
+
+
+@pytest.mark.parametrize("name", ["king", "cold_collapse"])
+def test_rescaled_scenarios_hit_standard_energy(name):
+    state = _build(name, n=128)
+    e = scenarios.state_diagnostics(state)["energy"]
+    assert abs(e + 0.25) < 1e-10, (name, e)
+
+
+def test_king_concentration_increases_with_w0():
+    def core_radius(w0):
+        st = _build("king", n=512, seed=2, w0=w0)
+        r = np.sort(np.linalg.norm(np.asarray(st.pos), axis=1))
+        return r[len(r) // 10]                   # 10%-mass radius
+    assert core_radius(9.0) < core_radius(3.0)
+
+
+def test_cold_collapse_is_cold():
+    state = _build("cold_collapse", n=128)
+    assert scenarios.state_diagnostics(state)["kinetic"] < 1e-12
+    state = _build("cold_collapse", n=128, virial_ratio=0.1)
+    q = scenarios.state_diagnostics(state)["virial_ratio"]
+    assert abs(q - 0.1) < 0.02, q
+
+
+def test_merger_has_two_separated_clusters():
+    sep = 4.0
+    state = _build("merger", n=128, separation=sep)
+    pos = np.asarray(state.pos)
+    a, b = pos[:64].mean(0), pos[64:].mean(0)
+    assert abs(np.linalg.norm(a - b) - np.hypot(sep, 0.5)) < 0.5
+    # approaching along x
+    vel = np.asarray(state.vel)
+    assert vel[:64, 0].mean() < -0.05 and vel[64:, 0].mean() > 0.05
+
+
+def test_binary_plummer_contains_tight_pairs():
+    sma = 0.02
+    state = _build("binary_plummer", n=128, binary_frac=0.2, sma=sma)
+    pos = np.asarray(state.pos)
+    d = np.linalg.norm(pos[:, None] - pos[None, :], axis=-1)
+    d[np.diag_indices_from(d)] = np.inf
+    n_tight = (d.min(1) < 1.5 * sma).sum()
+    assert n_tight >= 2 * int(round(0.2 * 128 / 2)), n_tight
+
+
+def test_kepler_disk_is_thin_and_rotating():
+    state = _build("kepler_disk", n=128)
+    pos, vel = np.asarray(state.pos), np.asarray(state.vel)
+    assert np.abs(pos[1:, 2]).max() < 0.2       # thin
+    lz = pos[1:, 0] * vel[1:, 1] - pos[1:, 1] * vel[1:, 0]
+    assert (lz > 0).all()                       # coherent rotation
+
+
+def test_unknown_scenario_and_bad_params_raise():
+    with pytest.raises(scenarios.ScenarioError):
+        scenarios.make("no_such_model", 64)
+    with pytest.raises(scenarios.ScenarioError):
+        scenarios.make("king", 64, w0=99.0)
+    with pytest.raises(scenarios.ScenarioError):
+        scenarios.make("merger", 4)             # below min_n
+
+
+def test_validation_rejects_out_of_com_frame():
+    spec = scenarios.get_spec("plummer")
+    diag = {"com_pos": 1.0, "com_vel": 0.0, "kinetic": 0.25,
+            "potential": -0.5, "energy": -0.25, "virial_ratio": 0.5,
+            "total_mass": 1.0}
+    with pytest.raises(scenarios.ScenarioError):
+        scenarios._validate(spec, diag)
+
+
+def test_scenario_dataclass_reproducible():
+    s = scenarios.Scenario(name="king", n=64, seed=9, params={"w0": 4.0})
+    a, b = s.build(), s.build()
+    np.testing.assert_array_equal(np.asarray(a.pos), np.asarray(b.pos))
+    np.testing.assert_array_equal(np.asarray(a.vel), np.asarray(b.vel))
