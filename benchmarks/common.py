@@ -56,6 +56,14 @@ def run_subprocess(script: str, *, devices: int = 1, timeout: int = 1200,
     return res.stdout
 
 
+def stdout_field(out: str, key: str) -> float:
+    """Extract ``<key> <float>`` from a subprocess's stdout marker lines."""
+    for line in out.splitlines():
+        if line.startswith(key + " "):
+            return float(line.split()[-1])
+    raise RuntimeError(f"no {key} line in output:\n{out}")
+
+
 def modeled_energy(t_solution: float, n_chips: int, util: float) -> dict:
     """Paper Fig. 6 energy model; returns E (J), peak power (W), EDP (J s)."""
     p_chips = n_chips * P_CHIP * (IDLE_FRAC + (1 - IDLE_FRAC) * util)

@@ -48,13 +48,6 @@ print("WALL", time.perf_counter() - t0)
 """
 
 
-def _wall(out: str) -> float:
-    for line in out.splitlines():
-        if line.startswith("WALL"):
-            return float(line.split()[-1])
-    raise RuntimeError(f"no WALL line in output:\n{out}")
-
-
 def run(quick: bool = False):
     t_end = 0.125 if quick else 0.25
     rows = []
@@ -65,13 +58,13 @@ def run(quick: bool = False):
     for seed in range(B):
         out = common.run_subprocess(
             _DRIVER.format(n=N, seed=seed, ensemble=1, dt=DT, t_end=t_end))
-        seq_inner += _wall(out)
+        seq_inner += common.stdout_field(out, "WALL")
     seq_total = time.perf_counter() - t0
 
     t0 = time.perf_counter()
     out = common.run_subprocess(
         _DRIVER.format(n=N, seed=0, ensemble=B, dt=DT, t_end=t_end))
-    batch_inner = _wall(out)
+    batch_inner = common.stdout_field(out, "WALL")
     batch_total = time.perf_counter() - t0
 
     rows.append({
@@ -88,10 +81,10 @@ def run(quick: bool = False):
     warm_seq = 0.0
     out = common.run_subprocess(
         _WARM.format(n=N, ensemble=1, dt=DT, t_end=t_end))
-    warm_seq = B * _wall(out)
+    warm_seq = B * common.stdout_field(out, "WALL")
     out = common.run_subprocess(
         _WARM.format(n=N, ensemble=B, dt=DT, t_end=t_end))
-    warm_batch = _wall(out)
+    warm_batch = common.stdout_field(out, "WALL")
     rows.append({
         "mode": "warm_steady_state",
         "runs": B, "n": N, "t_end": t_end,

@@ -6,6 +6,7 @@
   fig5_scaling      : Fig. 5 (strong scaling 1/2/4 devices)
   fig6_energy       : Fig. 6 (energy-to-solution / peak power, EDP minimum)
   ensemble_throughput : batched B-run ensemble vs B sequential invocations
+  mixed_ensemble    : padded mixed-scenario batch vs sequential + dispersion
   lm_step           : LM-side reduced-config step microbench
   roofline_table    : dry-run roofline summary (EXPERIMENTS.md §Roofline)
 
@@ -27,7 +28,8 @@ def main() -> None:
 
     from benchmarks import (ensemble_throughput, fig4_validation,
                             fig5_scaling, fig6_energy, lm_step,
-                            roofline_table, table1_strategies)
+                            mixed_ensemble, roofline_table,
+                            table1_strategies)
 
     suites = {
         "fig4_validation": fig4_validation.run,
@@ -36,6 +38,7 @@ def main() -> None:
         "table1_strategies": table1_strategies.run,
         "table1_scenarios": table1_strategies.run_scenarios,
         "ensemble_throughput": ensemble_throughput.run,
+        "mixed_ensemble": mixed_ensemble.run,
         "lm_step": lm_step.run,
         "roofline_table": roofline_table.run,
     }

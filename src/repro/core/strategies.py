@@ -39,6 +39,29 @@ try:  # jax >= 0.5 exports shard_map at top level
 except AttributeError:  # 0.4.x: the experimental location
     from jax.experimental.shard_map import shard_map as _shard_map
 
+
+def _smap(mesh, in_specs, out_specs, impl: str = "xla"):
+    """shard_map decorator; replication checking disabled for Pallas impls.
+
+    ``pallas_call`` has no replication rule, so running the tiled kernel
+    inside a shard needs checking off (``check_rep=False`` on jax 0.4/0.5,
+    renamed ``check_vma`` later — both are tried).  For non-Pallas impls the
+    check stays ON: it still catches mis-specified collectives at trace time.
+    """
+
+    def deco(fn):
+        kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+        if not str(impl).startswith("pallas"):
+            return _shard_map(fn, **kw)
+        for flag in ({"check_rep": False}, {"check_vma": False}):
+            try:
+                return _shard_map(fn, **flag, **kw)
+            except TypeError:
+                continue
+        return _shard_map(fn, **kw)
+
+    return deco
+
 from repro.core.hermite import Evaluation, Evaluator
 from repro.kernels import nbody_force, ops
 
@@ -137,12 +160,8 @@ def _replicated(mesh: Mesh, order: int, kw) -> Evaluator:
     axes = mesh.axis_names
 
     @jax.jit
-    @functools.partial(
-        _shard_map,
-        mesh=mesh,
-        in_specs=(P(axes), P(axes), P(axes)),
-        out_specs=(P(axes), P(axes), P(axes), P(axes)),
-    )
+    @_smap(mesh, (P(axes), P(axes), P(axes)),
+           (P(axes), P(axes), P(axes), P(axes)), kw["impl"])
     def eval_padded(pos, vel, mass):
         # each device: local targets x full (gathered) source set
         gp = jax.lax.all_gather(pos, axes, axis=0, tiled=True)
@@ -173,12 +192,8 @@ def _two_level(mesh: Mesh, order: int, kw) -> Evaluator:
         return jax.lax.all_gather(x, "card", axis=0, tiled=True)
 
     @jax.jit
-    @functools.partial(
-        _shard_map,
-        mesh=mesh,
-        in_specs=(P(axes), P(axes), P(axes)),
-        out_specs=(P(axes), P(axes), P(axes), P(axes)),
-    )
+    @_smap(mesh, (P(axes), P(axes), P(axes)),
+           (P(axes), P(axes), P(axes), P(axes)), kw["impl"])
     def eval_padded(pos, vel, mass):
         gp, gv, gm = gather2(pos), gather2(vel), gather2(mass)
         acc, jerk, pot = ops.acc_jerk_pot_rect(pos, vel, gp, gv, gm, **kw)
@@ -233,12 +248,8 @@ def _ring(mesh: Mesh, order: int, kw) -> Evaluator:
         return jax.lax.ppermute(x, axes[0], perm)
 
     @jax.jit
-    @functools.partial(
-        _shard_map,
-        mesh=mesh,
-        in_specs=(P(axes), P(axes), P(axes)),
-        out_specs=(P(axes), P(axes), P(axes), P(axes)),
-    )
+    @_smap(mesh, (P(axes), P(axes), P(axes)),
+           (P(axes), P(axes), P(axes), P(axes)), kw["impl"])
     def eval_padded(pos, vel, mass):
         zeros3 = jnp.zeros_like(pos)
         zeros1 = jnp.zeros_like(mass)

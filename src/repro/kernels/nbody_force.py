@@ -31,7 +31,16 @@ and additionally consumes the pass-1 accelerations of both partners:
       out     : (N, 8) cols = [sx sy sz pad...]
 
 All math is FP32 (the paper's SFPU precision); padding particles carry m = 0
-so they contribute exactly zero.
+so they contribute exactly zero: every output term (acc, jerk, snap, pot) is
+a sum over source columns of ``m_j * f(...)`` with ``f`` finite under the
+zero-distance guard, so an m = 0 column is exactly annihilated.  This is the
+mask contract that lets ``core.strategies`` pad to block multiples and
+``sim.scenarios.build_padded`` pack ragged-N ensembles (tested by
+``tests/test_padding_invariance.py``).
+
+The kernel is also ``jax.vmap``-safe — batching a ``pallas_call`` prepends
+grid dimensions (and the interpreter follows the same rule), which is how
+``repro.sim.ensemble`` evaluates B stacked runs in one call.
 """
 
 from __future__ import annotations

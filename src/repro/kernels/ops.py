@@ -15,7 +15,20 @@ all-pairs is the special case targets == sources; a target that also appears
 in the source set self-cancels via the softened-zero-distance guard.
 
 Mixed precision follows the paper: evaluation in FP32, caller keeps FP64
-state. Padding particles have zero mass => exactly zero contribution.
+state.
+
+**Mask contract** (tested by ``tests/test_padding_invariance.py``): a source
+row with m = 0 contributes *exactly zero* acceleration, jerk, snap and
+potential to every target — so callers may freely pad the source set with
+zero-mass particles (block alignment here, device-count alignment in
+``core.strategies``, ragged-N batches in ``sim.scenarios.build_padded``)
+and the active particles' results stay invariant up to FP32 summation
+order.
+
+**vmap safety**: every wrapper is a pure shape-polymorphic function of its
+array arguments, and ``pallas_call`` batches by prepending a grid dimension,
+so ``jax.vmap`` lifts both the XLA fallback and the Pallas kernel (compiled
+or interpreted) over a leading batch axis — the ensemble engine's path.
 """
 
 from __future__ import annotations

@@ -4,6 +4,16 @@
         --scenario king --w0 6 --n 256 --t-end 0.1
     PYTHONPATH=src python -m repro.launch.sim_run \
         --scenario merger --ensemble 8 --devices 2 --strategy replicated
+    PYTHONPATH=src python -m repro.launch.sim_run \
+        --scenario king:256 merger:512 plummer:128 --pad auto --kernel pallas
+
+``--scenario`` takes either one registry name (homogeneous runs; ``name:N``
+is shorthand for ``--n N``) or several ``name:N`` tokens — a *mixed*
+ensemble, packed into one rectangular batch with zero-mass padding up to
+``--pad`` (``auto`` = largest member).  ``--kernel`` routes force evaluation through the reference
+all-pairs op (``ref``) or the tiled Pallas kernel (``pallas``; interpreted
+on CPU).  Mixed-run telemetry counts interactions with each run's
+``n_active``, never the padded N.
 
 Each invocation emits a one-line summary plus a JSON telemetry report
 (wall time, steps/s, interactions/s, modeled energy/EDP, per-run energy
@@ -40,9 +50,16 @@ def _parse_params(pairs):
 
 def main(argv=None):
     ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--scenario", default="plummer",
-                    help="registry name (see repro.sim.scenarios.available)")
+    ap.add_argument("--scenario", nargs="+", default=["plummer"],
+                    help="one registry name, or several name:N tokens for a "
+                         "mixed padded ensemble (e.g. king:256 merger:512)")
     ap.add_argument("--n", type=int, default=256)
+    ap.add_argument("--pad", default=None,
+                    help="mixed-ensemble padded size: 'auto' (largest member)"
+                         " or an integer N_max")
+    ap.add_argument("--kernel", default=None, choices=(None, "ref", "pallas"),
+                    help="force kernel: 'ref' (all-pairs XLA op) or 'pallas' "
+                         "(tiled kernel; interpret mode off-TPU)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ensemble", type=int, default=1,
                     help="batch B independent runs (seeds seed..seed+B-1)")
@@ -89,21 +106,55 @@ def main(argv=None):
     if args.w0 is not None:
         params["w0"] = args.w0
 
+    # one token => homogeneous path (name:N is shorthand for --n N, so the
+    # report keeps the real scenario label); several tokens => mixed padded
+    # ensemble, bare names inheriting --n
+    tokens = [scenarios.parse_mix_token(t) for t in args.scenario]
+    mixed = len(tokens) > 1
+    if mixed:
+        mix = tuple((name, n if n is not None else args.n)
+                    for name, n in tokens)
+        scenario_name, n_arg = "mixed", max(n for _, n in mix)
+    else:
+        mix = None
+        scenario_name = tokens[0][0]
+        n_arg = tokens[0][1] if tokens[0][1] is not None else args.n
+    pad = None
+    if args.pad is not None:
+        if not mixed:
+            raise SystemExit("--pad only applies to mixed name:N ensembles")
+        if args.pad != "auto":
+            try:
+                pad = int(args.pad)
+            except ValueError:
+                raise SystemExit(
+                    f"--pad expects 'auto' or an integer, got {args.pad!r}") \
+                    from None
+
     cfg = driver.SimConfig(
-        scenario=args.scenario, n=args.n, seed=args.seed,
+        scenario=scenario_name, n=n_arg, seed=args.seed,
         ensemble=args.ensemble, t_end=args.t_end, dt=args.dt, eta=args.eta,
         order=args.order, strategy=args.strategy, devices=args.devices,
-        impl=args.impl, diag_every=args.diag_every, scenario_params=params,
+        impl=args.impl, kernel=args.kernel, mix=mix, pad=pad,
+        diag_every=args.diag_every, scenario_params=params,
         validate_ic=args.validate,
         out=args.out or telemetry.default_report_path(
-            {"scenario": args.scenario, "n": args.n,
-             "ensemble": args.ensemble, "strategy": args.strategy}),
+            {"scenario": scenario_name, "n": n_arg,
+             "ensemble": args.ensemble if not mixed
+             else len(mix) * args.ensemble,
+             "strategy": args.strategy}),
     )
     report = driver.run(cfg)
 
-    print(f"[sim] scenario={args.scenario} n={args.n} "
-          f"ensemble={args.ensemble} strategy={args.strategy} "
-          f"devices={args.devices} order={args.order}")
+    desc = " ".join(f"{nm}:{n}" for nm, n in mix) if mixed \
+        else f"{scenario_name} n={n_arg}"
+    print(f"[sim] scenario={desc} "
+          f"ensemble={report['ensemble']} strategy={args.strategy} "
+          f"devices={args.devices} order={args.order}"
+          + (f" kernel={args.kernel}" if args.kernel else ""))
+    if mixed:
+        print(f"[sim] padded N_max={report['n_bodies']} "
+              f"n_active={report['n_active']}")
     print(f"[sim] t={report['t_final']:.4f} steps={report['steps']} "
           f"wall={report['wall_s']:.2f}s "
           f"steps/s={report['steps_per_s']:.1f} "

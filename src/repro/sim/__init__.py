@@ -7,7 +7,11 @@ Three layers on top of the core Hermite/strategy machinery:
   construction-time diagnostics (centre-of-mass frame, virial ratio);
 * ``ensemble``   — packs B independent simulations into stacked
   ``ParticleState`` arrays and runs the full predict-evaluate-correct loop
-  under ``jax.vmap`` with the batch axis sharded across devices;
+  under ``jax.vmap`` with the batch axis sharded across devices; mixed
+  scenarios of different N ride in one rectangular batch via zero-mass
+  padding + a per-run ``n_active`` mask, with force evaluation switchable
+  between the reference op and the tiled Pallas kernel (see
+  ``docs/ensembles.md``);
 * ``driver`` / ``telemetry`` — a unified run loop (diagnostics cadence,
   per-step wall time, modeled energy/EDP) emitting one JSON report per run,
   wired into the ``repro.launch.sim_run`` CLI.

@@ -8,7 +8,14 @@ One entry point, :func:`run`, drives either
 * a **batched ensemble** of B independent runs (seeds ``seed .. seed+B-1``)
   advanced in lockstep by ``repro.sim.ensemble`` — fixed dt when ``dt`` is
   given, otherwise per-run shared-adaptive (Aarseth) dt — with the batch
-  axis sharded over the requested devices and per-chunk telemetry.
+  axis sharded over the requested devices and per-chunk telemetry; or
+* a **mixed padded ensemble** (``mix=(("king", 256), ("merger", 512), ...)``)
+  of heterogeneous scenarios packed to one rectangular batch with zero-mass
+  padding (``repro.sim.scenarios.build_padded``).  Per-run diagnostics
+  (energy drift, virial ratio) and telemetry interaction counts honour the
+  per-run ``n_active`` mask, and force evaluation routes through the
+  ``kernel`` switch: ``"ref"`` (all-pairs XLA op) or ``"pallas"`` (the tiled
+  kernel — compiled on TPU, interpreted on CPU).
 
 Every run produces one JSON-ready report (wall time, steps/s,
 interactions/s, modeled energy/EDP, energy-conservation track).
@@ -18,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Dict, Mapping, Optional
+from typing import Any, Dict, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -46,6 +53,9 @@ class SimConfig:
     strategy: str = "single"
     devices: int = 1
     impl: Optional[str] = None
+    kernel: Optional[str] = None     # "ref" | "pallas" (excludes impl)
+    mix: Optional[Tuple[Tuple[str, int], ...]] = None  # heterogeneous batch
+    pad: Optional[int] = None        # padded N_max (None => auto = max N)
     eps: float = 1e-7
     diag_every: int = 16             # steps between diagnostics snapshots
     scenario_params: Mapping[str, Any] = \
@@ -54,12 +64,23 @@ class SimConfig:
     out: Optional[str] = None        # JSON report path (None => don't write)
 
     def meta(self) -> Dict[str, Any]:
-        return {
+        meta = {
             "scenario": self.scenario, "n": self.n, "seed": self.seed,
             "ensemble": self.ensemble, "strategy": self.strategy,
             "t_end": self.t_end, "dt": self.dt, "order": self.order,
             "params": dict(self.scenario_params),
         }
+        if self.mix is not None:
+            meta["scenario"] = "mixed"
+            meta["mix"] = [list(m) for m in self.mix]
+            meta["pad"] = self.pad
+            # the dataclass default n is meaningless for a mix; report the
+            # requested N_max so meta agrees with the batch's n_bodies
+            meta["n"] = self.pad if self.pad is not None \
+                else max(n for _, n in self.mix)
+        if self.kernel is not None:
+            meta["kernel"] = self.kernel
+        return meta
 
 
 def _device_list(cfg: SimConfig):
@@ -84,7 +105,12 @@ def run(cfg: SimConfig) -> Dict[str, Any]:
     """Run one configuration end-to-end and return its telemetry report."""
     if cfg.ensemble < 1:
         raise ValueError(f"ensemble={cfg.ensemble} must be >= 1")
-    report = (_run_ensemble if cfg.ensemble > 1 else _run_single)(cfg)
+    if cfg.mix is not None:
+        report = _run_mixed(cfg)
+    elif cfg.ensemble > 1:
+        report = _run_ensemble(cfg)
+    else:
+        report = _run_single(cfg)
     if cfg.out:
         telemetry.write_report(report, cfg.out)
         report["report_path"] = cfg.out
@@ -96,21 +122,24 @@ def run(cfg: SimConfig) -> Dict[str, Any]:
 # --------------------------------------------------------------------------
 def _run_single(cfg: SimConfig) -> Dict[str, Any]:
     state = _build_states(cfg)[0]
+    # None lets make_evaluator pick the backend default; an explicit
+    # impl+kernel pair is a conflict (e.g. fp64 vs a kernel switch)
+    impl = ens.resolve_eval_impl(cfg.impl, cfg.kernel, default=None)
     if cfg.strategy == "single":
-        if cfg.impl == "fp64":  # golden reference: a precision, not a kernel
+        if impl == "fp64":  # golden reference: a precision, not a kernel
             evaluator = make_evaluator(precision="fp64", order=cfg.order,
                                        eps=cfg.eps)
         else:
             evaluator = make_evaluator(order=cfg.order, eps=cfg.eps,
-                                       impl=cfg.impl)
+                                       impl=impl)
     elif cfg.strategy in STRATEGIES:
-        if cfg.impl == "fp64":
+        if impl == "fp64":
             raise ValueError(
                 "impl='fp64' (golden reference) only runs under "
                 "strategy='single'")
         evaluator = make_strategy_evaluator(
             cfg.strategy, devices=_device_list(cfg), order=cfg.order,
-            eps=cfg.eps, impl=cfg.impl or "xla")
+            eps=cfg.eps, impl=impl or "xla")
     else:
         raise ValueError(f"unknown strategy {cfg.strategy!r}")
 
@@ -151,18 +180,66 @@ def _run_single(cfg: SimConfig) -> Dict[str, Any]:
 
 
 # --------------------------------------------------------------------------
-# batched ensemble (lockstep; fixed dt or per-run shared-adaptive dt)
+# batched ensembles (lockstep; fixed dt or per-run shared-adaptive dt)
 # --------------------------------------------------------------------------
 def _run_ensemble(cfg: SimConfig) -> Dict[str, Any]:
+    """Homogeneous ensemble: B copies of one scenario, seeds seed..seed+B-1."""
+    batched = ens.stack_states(_build_states(cfg))
+    n_active = [cfg.n] * cfg.ensemble
+    runs_meta = [{"run": i, "scenario": cfg.scenario, "n": cfg.n,
+                  "seed": cfg.seed + i} for i in range(cfg.ensemble)]
+    return _run_batched(cfg, batched, n_active, runs_meta)
+
+
+def _mix_params(cfg: SimConfig) -> Dict[str, Dict[str, Any]]:
+    """Distribute flat CLI params over the mix: each scenario takes the keys
+    its registry spec accepts; a key no scenario accepts raises (same
+    contract as the homogeneous path, where build() rejects it)."""
+    flat = dict(cfg.scenario_params)
+    out: Dict[str, Dict[str, Any]] = {}
+    claimed = set()
+    for name, _ in cfg.mix:
+        spec = scenarios.get_spec(name)
+        kw = {k: v for k, v in flat.items() if k in spec.defaults}
+        claimed.update(kw)
+        if kw:
+            out[name] = kw
+    orphans = set(flat) - claimed
+    if orphans:
+        raise scenarios.ScenarioError(
+            f"parameter(s) {sorted(orphans)} not accepted by any scenario "
+            f"in the mix {[name for name, _ in cfg.mix]}")
+    return out
+
+
+def _run_mixed(cfg: SimConfig) -> Dict[str, Any]:
+    """Heterogeneous padded ensemble: one rectangular (B, N_max, ...) batch
+    of different scenarios/N, zero-mass padding, per-run n_active mask."""
+    specs = scenarios.make_mix(cfg.mix, seed=cfg.seed, repeat=cfg.ensemble,
+                               params=_mix_params(cfg))
+    batched, n_active = scenarios.build_padded(
+        specs, n_max=cfg.pad, validate=cfg.validate_ic)
+    runs_meta = [{"run": i, "scenario": s.name, "n": s.n, "seed": s.seed}
+                 for i, s in enumerate(specs)]
+    return _run_batched(cfg, batched, [int(a) for a in np.asarray(n_active)],
+                        runs_meta)
+
+
+def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
+                 ) -> Dict[str, Any]:
+    """Shared lockstep loop: mask-aware engine calls, per-run diagnostics
+    (energy drift, virial ratio) and n_active-honest telemetry."""
     if cfg.strategy not in STRATEGIES and cfg.strategy != "single":
         raise ValueError(f"unknown strategy {cfg.strategy!r}")
-    impl = cfg.impl or "xla"
+    impl = ens.resolve_eval_impl(cfg.impl, cfg.kernel)
     devices = _device_list(cfg) if cfg.devices > 1 else None
+    b = ens.batch_size(batched)
+    n_max = batched.pos.shape[1]
 
-    batched = ens.stack_states(_build_states(cfg))
     recorder = telemetry.TelemetryRecorder(cfg.meta())
-
-    kw = dict(order=cfg.order, eps=cfg.eps, impl=impl, devices=devices)
+    na = jnp.asarray(n_active, jnp.int32)
+    kw = dict(n_active=na, order=cfg.order, eps=cfg.eps, impl=impl,
+              devices=devices)
     batched = ens.ensemble_initialize(batched, **kw)
     jax.block_until_ready(batched.pos)
     e0 = np.asarray(ens.batched_total_energy(batched), np.float64)
@@ -175,6 +252,7 @@ def _run_ensemble(cfg: SimConfig) -> Dict[str, Any]:
         recorder.record_snapshot(done, t_sim, energy=e.tolist(),
                                  de_rel=float(np.abs((e - e0) / e0).max()))
 
+    per_run_steps = None
     if cfg.dt is not None:
         n_steps = max(1, int(round(cfg.t_end / cfg.dt)))
         done = 0
@@ -186,7 +264,7 @@ def _run_ensemble(cfg: SimConfig) -> Dict[str, Any]:
             jax.block_until_ready(batched.pos)
             done += chunk
             snapshot(done, done * cfg.dt, time.perf_counter() - t0)
-        steps, t_final = n_steps, n_steps * cfg.dt
+        t_final = n_steps * cfg.dt
     else:
         # per-run shared-adaptive dt: each member steps at its own Aarseth
         # criterion; finished members freeze until the whole batch is done
@@ -204,16 +282,19 @@ def _run_ensemble(cfg: SimConfig) -> Dict[str, Any]:
                      time.perf_counter() - t0)
             if float(np.min(np.asarray(batched.time))) >= cfg.t_end:
                 break
-        steps = int(np.max(np.asarray(n_taken)))
+        per_run_steps = [int(c) for c in np.asarray(n_taken)]
         t_final = float(np.min(np.asarray(batched.time)))
 
     e1 = np.asarray(ens.batched_total_energy(batched), np.float64)
     de = np.abs((e1 - e0) / e0)
-    runs = [{"run": i, "seed": cfg.seed + i, "e0": float(e0[i]),
-             "e1": float(e1[i]), "de_rel": float(de[i])}
-            for i in range(cfg.ensemble)]
+    virial = np.asarray(ens.batched_virial_ratio(batched), np.float64)
+    runs = [{**runs_meta[i], "e0": float(e0[i]), "e1": float(e1[i]),
+             "de_rel": float(de[i]), "virial_ratio": float(virial[i]),
+             **({"steps": per_run_steps[i]} if per_run_steps else {})}
+            for i in range(b)]
     return recorder.finalize(
-        n_bodies=cfg.n, ensemble=cfg.ensemble, n_devices=max(cfg.devices, 1),
+        n_bodies=n_max, ensemble=b, n_devices=max(cfg.devices, 1),
+        n_active=n_active, per_run_steps=per_run_steps,
         extra={"e0": e0.tolist(), "e1": e1.tolist(),
                "de_rel": float(de.max()), "t_final": t_final,
                "runs": runs})

@@ -11,8 +11,21 @@ hardware the way one large-N run does.
 Because the runs are independent there is *no cross-run communication*: all
 of the paper's distribution strategies coincide on the batch axis (the
 strategy label is accepted for CLI symmetry and recorded in telemetry).
-Per-run force evaluation uses the pure-XLA kernels (``impl="xla"``, the
-vmappable path) or the FP64 golden reference (``impl="fp64"``).
+
+**Kernels.** Per-run force evaluation routes through either the reference
+all-pairs op (``kernel="ref"``, i.e. ``impl="xla"``), the tiled Pallas
+kernel (``kernel="pallas"`` — compiled on TPU, ``interpret=True`` elsewhere;
+``pallas_call`` is vmap-safe, the batch axis simply prepends a grid
+dimension), or the FP64 golden reference (``impl="fp64"``).
+
+**Masking (ragged batches).** Heterogeneous mixes are packed by
+``repro.sim.scenarios.build_padded`` into a rectangular ``(B, N_max, ...)``
+batch plus a per-run ``n_active`` vector.  Rows ``>= n_active[b]`` are
+padding: zero mass makes them invisible as force *sources* (a kernel
+invariant, property-tested), and the engine's per-member mask zeroes their
+evaluated derivatives so they are inert as *targets* — frozen in place, with
+no influence on the per-run Aarseth timestep (zero acc/jerk/snap falls into
+the ``num > 0`` guard) nor on mass-weighted energy diagnostics.
 """
 
 from __future__ import annotations
@@ -26,11 +39,47 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import hermite, nbody
 from repro.core.evaluate import make_evaluator
+from repro.core.hermite import Evaluation
 from repro.core.nbody import ParticleState
 from repro.core.strategies import STRATEGIES, make_batch_mesh
+from repro.kernels import ops
 
 BATCH_AXIS = "ensemble"
-ENSEMBLE_IMPLS = ("xla", "fp64")
+#: vmap-safe evaluation paths (the Pallas kernel batches by grid extension)
+ENSEMBLE_IMPLS = ("xla", "fp64", "pallas", "pallas_interpret")
+#: user-facing force-kernel switch: "ref" (all-pairs XLA op) | "pallas"
+KERNELS = ("ref", "pallas")
+
+
+def resolve_kernel(kernel: Optional[str]) -> str:
+    """Map the user-facing ``kernel`` switch to an evaluation ``impl``.
+
+    ``"ref"`` is the blocked all-pairs XLA op; ``"pallas"`` is the tiled
+    kernel — compiled where Mosaic can lower (TPU), interpreted elsewhere so
+    the same kernel body is validated on CPU.
+    """
+    if kernel in (None, "ref"):
+        return "xla"
+    if kernel == "pallas":
+        return ops.default_impl()
+    raise ValueError(f"unknown kernel {kernel!r}; one of {KERNELS}")
+
+
+def resolve_eval_impl(impl: Optional[str], kernel: Optional[str], *,
+                      default: Optional[str] = "xla") -> Optional[str]:
+    """Resolve the (``impl``, ``kernel``) pair to one evaluation impl.
+
+    The user-facing ``kernel`` switch and the low-level ``impl`` are
+    mutually exclusive when both are explicit: silently preferring one
+    could e.g. turn a requested ``impl="fp64"`` golden-reference run into
+    FP32 with no trace in the report.
+    """
+    if kernel is not None:
+        if impl is not None:
+            raise ValueError(
+                f"pass either impl={impl!r} or kernel={kernel!r}, not both")
+        return resolve_kernel(kernel)
+    return impl if impl is not None else default
 
 
 # --------------------------------------------------------------------------
@@ -56,8 +105,20 @@ def batch_size(batched: ParticleState) -> int:
 
 
 def batched_total_energy(batched: ParticleState) -> jax.Array:
-    """(B,) total energy per ensemble member."""
+    """(B,) total energy per ensemble member.
+
+    Mass-weighted, so zero-mass padding rows contribute nothing — padded and
+    unpadded batches of the same runs report identical energies.
+    """
     return jax.vmap(nbody.total_energy)(batched)
+
+
+def batched_virial_ratio(batched: ParticleState) -> jax.Array:
+    """(B,) virial ratio T/|U| per member (mass-weighted: padding-blind)."""
+    t = jax.vmap(nbody.kinetic_energy)(batched)
+    u = jax.vmap(nbody.potential_energy)(batched)
+    tiny = jnp.asarray(jnp.finfo(t.dtype).tiny, t.dtype)  # fp32-safe clamp
+    return t / jnp.maximum(jnp.abs(u), tiny)
 
 
 # --------------------------------------------------------------------------
@@ -70,7 +131,28 @@ def _inner_evaluator(order: int, eps: float, impl: str):
         raise ValueError(
             f"ensemble impl must be one of {ENSEMBLE_IMPLS} (the vmappable "
             f"evaluation paths); got {impl!r}")
-    return make_evaluator(order=order, eps=eps, impl="xla")
+    return make_evaluator(order=order, eps=eps, impl=impl)
+
+
+def _mask_evaluator(ev, n_active):
+    """Zero the evaluated derivatives of padding rows (>= ``n_active``).
+
+    Sources with m = 0 already contribute zero force (kernel invariant);
+    masking the *outputs* additionally freezes padding rows as targets, so
+    they never drift into the active set and never tighten the per-run
+    Aarseth timestep.  With ``n_active == N`` the mask is all-ones and the
+    multiply is an exact identity.
+    """
+
+    def evaluate(pos, vel, mass) -> Evaluation:
+        out = ev(pos, vel, mass)
+        active = jnp.arange(pos.shape[0]) < n_active
+        m3 = active.astype(out.acc.dtype)[:, None]
+        return Evaluation(acc=out.acc * m3, jerk=out.jerk * m3,
+                          snap=out.snap * m3,
+                          pot=out.pot * active.astype(out.pot.dtype))
+
+    return evaluate
 
 
 def _constrain(tree, mesh):
@@ -90,19 +172,24 @@ def _engine(order: int, eps: float, impl: str, mesh):
     ev = _inner_evaluator(order, eps, impl)
 
     @jax.jit
-    def init(batched: ParticleState) -> ParticleState:
-        batched = _constrain(batched, mesh)
-        out = jax.vmap(lambda s: hermite.initialize(s, ev))(batched)
+    def init(batched: ParticleState, n_active) -> ParticleState:
+        batched, n_active = _constrain((batched, n_active), mesh)
+        out = jax.vmap(
+            lambda s, na: hermite.initialize(s, _mask_evaluator(ev, na))
+        )(batched, n_active)
         return _constrain(out, mesh)
 
     @functools.partial(jax.jit, static_argnames=("n_steps",))
-    def run(batched: ParticleState, dt, n_steps: int) -> ParticleState:
-        batched = _constrain(batched, mesh)
+    def run(batched: ParticleState, n_active, dt, n_steps: int
+            ) -> ParticleState:
+        batched, n_active = _constrain((batched, n_active), mesh)
 
         def body(s, _):
             s1 = jax.vmap(
-                lambda m: hermite.step(m, dt.astype(m.dtype), ev, order=order)
-            )(s)
+                lambda m, na: hermite.step(m, dt.astype(m.dtype),
+                                           _mask_evaluator(ev, na),
+                                           order=order)
+            )(s, n_active)
             return _constrain(s1, mesh), None
 
         out, _ = jax.lax.scan(body, batched, None, length=n_steps)
@@ -136,9 +223,23 @@ def _batch_mesh(devices) -> Optional[object]:
     return make_batch_mesh(devices, axis_name=BATCH_AXIS)
 
 
+def _as_n_active(batched: ParticleState, n_active) -> jax.Array:
+    """Normalize ``n_active`` to a (B,) int32 vector (default: all active)."""
+    b, n = batched.pos.shape[0], batched.pos.shape[1]
+    if n_active is None:
+        return jnp.full((b,), n, jnp.int32)
+    n_active = jnp.asarray(n_active, jnp.int32)
+    if n_active.shape != (b,):
+        raise ValueError(
+            f"n_active must have shape ({b},) for a B={b} batch; "
+            f"got {n_active.shape}")
+    return n_active
+
+
 def ensemble_initialize(
     batched: ParticleState,
     *,
+    n_active=None,
     order: int = 6,
     eps: float = 1e-7,
     impl: str = "xla",
@@ -147,8 +248,10 @@ def ensemble_initialize(
     """Bootstrap derivatives for every ensemble member (batched t=0 pass)."""
     mesh = _batch_mesh(devices)
     init, _ = _engine(order, eps, impl, mesh)
-    padded, b = _pad_batch(batched, mesh.size if mesh else 1)
-    out = init(padded)
+    n_active = _as_n_active(batched, n_active)
+    (padded, na), b = _pad_batch((batched, n_active),
+                                 mesh.size if mesh else 1)
+    out = init(padded, na)
     return jax.tree_util.tree_map(lambda x: x[:b], out)
 
 
@@ -157,6 +260,7 @@ def ensemble_run(
     *,
     n_steps: int,
     dt: float,
+    n_active=None,
     order: int = 6,
     eps: float = 1e-7,
     impl: str = "xla",
@@ -165,8 +269,10 @@ def ensemble_run(
     """Advance an *initialized* batched state by ``n_steps`` fixed-dt steps."""
     mesh = _batch_mesh(devices)
     _, run = _engine(order, eps, impl, mesh)
-    padded, b = _pad_batch(batched, mesh.size if mesh else 1)
-    out = run(padded, jnp.asarray(dt, batched.pos.dtype), n_steps)
+    n_active = _as_n_active(batched, n_active)
+    (padded, na), b = _pad_batch((batched, n_active),
+                                 mesh.size if mesh else 1)
+    out = run(padded, na, jnp.asarray(dt, batched.pos.dtype), n_steps)
     return jax.tree_util.tree_map(lambda x: x[:b], out)
 
 
@@ -183,28 +289,31 @@ def _adaptive_engine(order: int, eps: float, impl: str, mesh,
     """
     ev = _inner_evaluator(order, eps, impl)
 
-    def one_step(s, hp, t_end):
+    def one_step(s, hp, na, t_end):
         remaining = t_end - s.time
         active = remaining > 0.0
+        # padding rows carry zero derivatives (masked evaluator), so they
+        # fall into aarseth_dt's num > 0 guard and never tighten the step
         h = hermite.aarseth_dt(s, eta=eta, dt_max=dt_max)
         # rate-limit dt changes (noise robustness; hp <= 0 marks "first step")
         h = jnp.where(hp > 0.0,
                       jnp.minimum(jnp.maximum(h, 0.5 * hp), 2.0 * hp), h)
         h = jnp.minimum(h, jnp.maximum(remaining, 1e-12))
         h_safe = jnp.where(active, h, jnp.ones_like(h))  # corrector / h^3
-        s1 = hermite.step(s, h_safe.astype(s.dtype), ev, order=order)
+        s1 = hermite.step(s, h_safe.astype(s.dtype), _mask_evaluator(ev, na),
+                          order=order)
         s1 = jax.tree_util.tree_map(
             lambda new, old: jnp.where(active, new, old), s1, s)
         return s1, jnp.where(active, h, hp), active
 
     @functools.partial(jax.jit, static_argnames=("n_steps",))
-    def run(batched, h_prev, n_taken, t_end, n_steps: int):
-        batched = _constrain(batched, mesh)
+    def run(batched, h_prev, n_taken, n_active, t_end, n_steps: int):
+        batched, n_active = _constrain((batched, n_active), mesh)
 
         def body(carry, _):
             s, hp, cnt = carry
-            s1, hp1, active = jax.vmap(one_step, in_axes=(0, 0, None))(
-                s, hp, t_end)
+            s1, hp1, active = jax.vmap(one_step, in_axes=(0, 0, 0, None))(
+                s, hp, n_active, t_end)
             return (_constrain(s1, mesh), hp1,
                     cnt + active.astype(cnt.dtype)), None
 
@@ -222,6 +331,7 @@ def ensemble_run_adaptive(
     n_steps: int,
     h_prev: Optional[jax.Array] = None,
     n_taken: Optional[jax.Array] = None,
+    n_active=None,
     eta: float = 0.02,
     dt_max: float = 0.0625,
     order: int = 6,
@@ -242,7 +352,8 @@ def ensemble_run_adaptive(
         h_prev = jnp.zeros(batch_size(batched), dtype)
     if n_taken is None:
         n_taken = jnp.zeros(batch_size(batched), jnp.int32)
-    carry, b = _pad_batch((batched, h_prev, n_taken),
+    n_active = _as_n_active(batched, n_active)
+    carry, b = _pad_batch((batched, h_prev, n_taken, n_active),
                           mesh.size if mesh else 1)
     out, hp, cnt = run(*carry, jnp.asarray(t_end, dtype), n_steps)
     return tuple(jax.tree_util.tree_map(lambda x: x[:b], t)
@@ -254,9 +365,11 @@ def evolve_ensemble(
     *,
     n_steps: int,
     dt: float,
+    n_active=None,
     order: int = 6,
     eps: float = 1e-7,
-    impl: str = "xla",
+    impl: Optional[str] = None,
+    kernel: Optional[str] = None,
     devices: Optional[Sequence[jax.Device]] = None,
     strategy: str = "replicated",
 ) -> ParticleState:
@@ -264,13 +377,16 @@ def evolve_ensemble(
 
     ``strategy`` is validated against the known strategy names but — the runs
     being independent — only affects telemetry labeling, not the math.
+    Pass at most one of ``impl`` (low-level path, default "xla") and
+    ``kernel`` ("ref" | "pallas"); an explicit pair conflicts.
     """
     if strategy not in STRATEGIES and strategy != "single":
         raise ValueError(
             f"unknown strategy {strategy!r}; one of {('single',) + STRATEGIES}")
+    impl = resolve_eval_impl(impl, kernel)
     batched = states if isinstance(states, ParticleState) else \
         stack_states(list(states))
-    batched = ensemble_initialize(batched, order=order, eps=eps, impl=impl,
-                                  devices=devices)
-    return ensemble_run(batched, n_steps=n_steps, dt=dt, order=order,
-                        eps=eps, impl=impl, devices=devices)
+    kw = dict(n_active=n_active, order=order, eps=eps, impl=impl,
+              devices=devices)
+    batched = ensemble_initialize(batched, **kw)
+    return ensemble_run(batched, n_steps=n_steps, dt=dt, **kw)

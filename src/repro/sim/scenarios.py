@@ -11,14 +11,22 @@ The registry extends the seed's two hard-coded initial conditions
 shapes that related work shows can reorder the paper's strategy rankings:
 King models (W0-parameterised concentration), cold uniform-sphere collapse,
 two-cluster mergers, binary-rich clusters, and a Keplerian disk.
+
+Heterogeneous mixes: :func:`build_padded` stacks scenarios of *different* N
+(and different generators) into one rectangular ``(B, N_max, ...)`` batch by
+padding each member with zero-mass particles, returning the per-run
+``n_active`` vector that the ensemble engine's mask and the telemetry
+accounting honour (see :func:`pad_state` for the mask contract).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Any, Callable, Dict, Mapping, Tuple
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence, \
+    Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -233,6 +241,100 @@ def make(name: str, n: int, *, seed: int = 0, dtype=jnp.float64,
     """Convenience one-shot: ``make("king", 256, w0=6.0)``."""
     return build(Scenario(name=name, n=n, seed=seed, dtype=dtype,
                           params=params), validate=validate)
+
+
+# --------------------------------------------------------------------------
+# padded packing: heterogeneous scenarios into one rectangular batch
+# --------------------------------------------------------------------------
+def pad_state(state: ParticleState, n_max: int) -> ParticleState:
+    """Pad a state with zero-mass particles up to ``n_max`` rows.
+
+    Mask contract (tested by ``tests/test_padding_invariance.py``): a padding
+    row carries zero mass, zero velocity and zero derivatives, so it is
+
+    * **invisible as a source** — the kernels guarantee m = 0 rows contribute
+      exactly zero force, jerk, snap and potential to every other particle;
+    * **inert as a target** — the ensemble engine's mask zeroes its evaluated
+      derivatives, so it stays frozen at its (arbitrary) padding position and
+      never influences the shared-adaptive timestep;
+    * **invisible to diagnostics** — kinetic, potential and virial accounting
+      are mass-weighted, so energy drift counts only active particles.
+    """
+    n = state.pos.shape[0]
+    if n > n_max:
+        raise ScenarioError(f"cannot pad n={n} down to n_max={n_max}")
+
+    def pad(x):
+        if x.ndim == 0:                       # the scalar time leaf
+            return x
+        return jnp.pad(x, ((0, n_max - n),) + ((0, 0),) * (x.ndim - 1))
+
+    return jax.tree_util.tree_map(pad, state)
+
+
+def build_padded(specs: Sequence[Scenario], n_max: Optional[int] = None, *,
+                 validate: bool = True) -> Tuple[ParticleState, jax.Array]:
+    """Pack heterogeneous scenario specs into one ``(B, N_max, ...)`` batch.
+
+    Each spec is built independently (its own generator, N and seed), padded
+    with zero-mass particles to ``n_max`` (default: the largest member's N)
+    and stacked on a new leading batch axis.  Returns ``(batched, n_active)``
+    where ``n_active`` is the ``(B,)`` int32 vector of real particle counts —
+    the mask the ensemble engine and telemetry honour (see :func:`pad_state`
+    for the full contract).
+    """
+    specs = list(specs)
+    if not specs:
+        raise ScenarioError("build_padded needs at least one scenario spec")
+    states = [build(s, validate=validate) for s in specs]
+    ns = [int(s.pos.shape[0]) for s in states]
+    if n_max is None:
+        n_max = max(ns)
+    if n_max < max(ns):
+        raise ScenarioError(
+            f"n_max={n_max} below the largest member N={max(ns)}")
+    padded = [pad_state(s, n_max) for s in states]
+    batched = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *padded)
+    return batched, jnp.asarray(ns, jnp.int32)
+
+
+def parse_mix_token(token: str) -> Tuple[str, Optional[int]]:
+    """Parse one CLI scenario token ``name[:N]`` -> ``(name, n_or_None)``.
+
+    ``"king:256"`` -> ``("king", 256)``; a bare ``"king"`` leaves N to the
+    caller's ``--n`` default.  The name is validated against the registry.
+    """
+    name, sep, count = token.partition(":")
+    get_spec(name)  # raises ScenarioError with the available list
+    if not sep:
+        return name, None
+    try:
+        n = int(count)
+    except ValueError:
+        raise ScenarioError(
+            f"scenario token {token!r}: {count!r} is not an integer N") \
+            from None
+    return name, n
+
+
+def make_mix(mix: Sequence[Tuple[str, int]], *, seed: int = 0,
+             repeat: int = 1, dtype=jnp.float64,
+             params: Optional[Mapping[str, Any]] = None) -> List[Scenario]:
+    """Expand ``[(name, n), ...]`` into Scenario specs with distinct seeds.
+
+    ``repeat`` tiles the whole mix (seeds keep incrementing), so a 3-scenario
+    mix with ``repeat=2`` yields a B=6 padded batch.  Per-scenario ``params``
+    are looked up by name in ``params`` (a mapping name -> kwargs) when given.
+    """
+    specs: List[Scenario] = []
+    i = 0
+    for _ in range(max(1, repeat)):
+        for name, n in mix:
+            kw = dict((params or {}).get(name, {}))
+            specs.append(Scenario(name=name, n=n, seed=seed + i, dtype=dtype,
+                                  params=kw))
+            i += 1
+    return specs
 
 
 # --------------------------------------------------------------------------

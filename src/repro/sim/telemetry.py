@@ -61,19 +61,42 @@ class TelemetryRecorder:
     # -------------------------------------------------------------- finalize
     def finalize(self, *, n_bodies: int, ensemble: int = 1,
                  n_devices: int = 1, util: float = DEFAULT_UTIL,
+                 n_active: Optional[List[int]] = None,
+                 per_run_steps: Optional[List[int]] = None,
                  extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-        """Assemble the JSON-ready report for this run."""
+        """Assemble the JSON-ready report for this run.
+
+        For padded ensembles pass ``n_active`` (per-run real particle
+        counts): interaction throughput then counts ``n_active**2`` pairs per
+        run rather than the padded ``n_bodies**2``, so telemetry and the EDP
+        model never credit work done on zero-mass padding rows.
+        ``per_run_steps`` (e.g. adaptive-mode productive step counts) further
+        replaces the shared lockstep step count per run.
+        """
         walls = [s.wall_s for s in self.steps]
         wall_total = sum(walls) if walls else time.perf_counter() - self._t0
         n_steps = self.steps[-1].step if self.steps else 0
         # each Hermite-6 step sweeps all pairs twice (acc/jerk pass + snap)
-        interactions = 2.0 * n_steps * ensemble * float(n_bodies) ** 2
+        if n_active is not None:
+            acts = [float(a) for a in n_active]
+            steps_per_run = [float(s) for s in per_run_steps] \
+                if per_run_steps is not None else [float(n_steps)] * len(acts)
+            if len(steps_per_run) != len(acts):
+                raise ValueError(
+                    f"per_run_steps (len {len(steps_per_run)}) must match "
+                    f"n_active (len {len(acts)})")
+            interactions = 2.0 * sum(
+                st * a * a for st, a in zip(steps_per_run, acts))
+        else:
+            interactions = 2.0 * n_steps * ensemble * float(n_bodies) ** 2
         energy = modeled_energy(wall_total, n_devices, util)
         report: Dict[str, Any] = {
             **self.meta,
             "n_bodies": n_bodies,
             "ensemble": ensemble,
             "devices": n_devices,
+            **({"n_active": [int(a) for a in n_active]}
+               if n_active is not None else {}),
             "steps": n_steps,
             "wall_s": wall_total,
             "steps_per_s": n_steps / wall_total if wall_total > 0 else 0.0,

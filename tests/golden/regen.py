@@ -1,0 +1,74 @@
+"""Regenerate the committed golden-trajectory reference files.
+
+Run from the repo root after an *intentional* physics change:
+
+    PYTHONPATH=src python tests/golden/regen.py
+
+Each golden file records the final (pos, vel) of a short fixed-dt Hermite-6
+integration computed with the FP64 golden evaluator (pure-jnp oracle at host
+precision — no device kernel involved), plus the exact run recipe.  The
+regression test (``tests/test_golden_trajectories.py``) replays the recipe
+through every kernel/strategy combination and asserts agreement, so a silent
+physics change in any kernel refactor fails loudly.  Commit the regenerated
+JSON together with the change that motivated it.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.core import hermite  # noqa: E402
+from repro.core.evaluate import make_evaluator  # noqa: E402
+from repro.sim import scenarios  # noqa: E402
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+#: The committed golden cases: (filename, scenario recipe).
+CASES = {
+    "two_body.json": dict(scenario="two_body", n=2, seed=0,
+                          dt=1.0 / 256, n_steps=32, order=6, eps=1e-7),
+    "plummer16.json": dict(scenario="plummer", n=16, seed=42,
+                           dt=1.0 / 256, n_steps=32, order=6, eps=1e-7),
+}
+
+
+def integrate(meta: dict):
+    state = scenarios.make(meta["scenario"], meta["n"], seed=meta["seed"])
+    ev = make_evaluator(precision="fp64", order=meta["order"],
+                        eps=meta["eps"])
+    out = hermite.evolve_scan(state, ev, n_steps=meta["n_steps"],
+                              dt=meta["dt"], order=meta["order"])
+    return state, out
+
+
+def main():
+    for fname, meta in CASES.items():
+        state, out = integrate(meta)
+        doc = {
+            "meta": {**meta, "generator": "tests/golden/regen.py",
+                     "evaluator": "fp64 golden (kernels.ref at x64)"},
+            "pos0": np.asarray(state.pos, np.float64).tolist(),
+            "vel0": np.asarray(state.vel, np.float64).tolist(),
+            "mass": np.asarray(state.mass, np.float64).tolist(),
+            "pos": np.asarray(out.pos, np.float64).tolist(),
+            "vel": np.asarray(out.vel, np.float64).tolist(),
+            "energy": float(jnp.sum(
+                0.5 * out.mass * jnp.sum(out.vel**2, axis=1)
+                + 0.5 * out.mass * out.pot)),
+        }
+        path = os.path.join(HERE, fname)
+        with open(path, "w") as f:
+            json.dump(doc, f, indent=1)
+        print(f"wrote {path} (t_end={meta['dt'] * meta['n_steps']:.6f})")
+
+
+if __name__ == "__main__":
+    main()

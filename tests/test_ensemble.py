@@ -81,10 +81,15 @@ def test_adaptive_ensemble_reaches_t_end_and_conserves():
     assert (cnt > 0).all()
 
 
-def test_ensemble_rejects_unvmappable_impl():
+def test_ensemble_rejects_unknown_impl():
+    """pallas/pallas_interpret are vmap-safe since the padded-ensemble PR;
+    only genuinely unknown impls are rejected."""
     with pytest.raises(ValueError):
         ens.evolve_ensemble(ens.stack_states(_states(b=2)), n_steps=1,
-                            dt=1e-2, impl="pallas_interpret")
+                            dt=1e-2, impl="bogus")
+    with pytest.raises(ValueError):
+        ens.evolve_ensemble(ens.stack_states(_states(b=2)), n_steps=1,
+                            dt=1e-2, impl="pallas_marked")
 
 
 def test_driver_single_run_report(tmp_path):

@@ -1,0 +1,294 @@
+"""Mask-aware padded ensembles: packing, engine equivalence, kernel switch,
+driver telemetry honesty, and cross-strategy equivalence on a device mesh."""
+
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hermite
+from repro.core.evaluate import make_evaluator
+from repro.sim import driver, ensemble as ens, scenarios
+
+MIX = [("plummer", 24), ("king", 32), ("two_body", 2)]
+
+
+def _padded_batch(mix=None, seed=0):
+    specs = scenarios.make_mix(mix or MIX, seed=seed)
+    return specs, *scenarios.build_padded(specs)
+
+
+# --------------------------------------------------------------------------
+# packing
+# --------------------------------------------------------------------------
+def test_build_padded_shapes_and_mask():
+    specs, batched, n_active = _padded_batch()
+    assert batched.pos.shape == (3, 32, 3)
+    assert batched.mass.shape == (3, 32)
+    np.testing.assert_array_equal(np.asarray(n_active), [24, 32, 2])
+    # padding rows: zero mass, zero velocity (kinetic-blind), zero position
+    for i, n in enumerate([24, 32, 2]):
+        assert float(jnp.abs(batched.mass[i, n:]).sum()) == 0.0
+        assert float(jnp.abs(batched.vel[i, n:]).sum()) == 0.0
+    # active rows are the member's own particles, bit-identical
+    st = scenarios.build(specs[0])
+    np.testing.assert_array_equal(np.asarray(batched.pos[0, :24]),
+                                  np.asarray(st.pos))
+
+
+def test_build_padded_explicit_n_max_and_errors():
+    specs = scenarios.make_mix([("plummer", 16)])
+    batched, n_active = scenarios.build_padded(specs, n_max=64)
+    assert batched.pos.shape == (1, 64, 3)
+    with pytest.raises(scenarios.ScenarioError):
+        scenarios.build_padded(specs, n_max=8)   # below the largest member
+    with pytest.raises(scenarios.ScenarioError):
+        scenarios.build_padded([])
+
+
+def test_make_mix_repeat_and_seeds():
+    specs = scenarios.make_mix([("plummer", 16), ("king", 24)], seed=5,
+                               repeat=2)
+    assert [(s.name, s.n) for s in specs] == \
+        [("plummer", 16), ("king", 24)] * 2
+    assert [s.seed for s in specs] == [5, 6, 7, 8]
+
+
+def test_parse_mix_token():
+    assert scenarios.parse_mix_token("king:256") == ("king", 256)
+    assert scenarios.parse_mix_token("king") == ("king", None)
+    with pytest.raises(scenarios.ScenarioError):
+        scenarios.parse_mix_token("nope:12")
+    with pytest.raises(scenarios.ScenarioError):
+        scenarios.parse_mix_token("king:abc")
+    with pytest.raises(scenarios.ScenarioError):
+        scenarios.parse_mix_token("king:")   # trailing colon: N required
+
+
+# --------------------------------------------------------------------------
+# engine equivalence
+# --------------------------------------------------------------------------
+def test_padded_matches_unpadded_sequential():
+    """Each member of a mixed padded batch reproduces its own unpadded
+    sequential integration (fp32 summation-order tolerance)."""
+    specs, batched, n_active = _padded_batch()
+    out = ens.evolve_ensemble(batched, n_steps=4, dt=1e-2,
+                              n_active=n_active)
+    ev = make_evaluator(impl="xla")
+    for i, spec in enumerate(specs):
+        ref = hermite.evolve_scan(scenarios.build(spec), ev, n_steps=4,
+                                  dt=1e-2)
+        n = int(n_active[i])
+        np.testing.assert_allclose(np.asarray(out.pos[i, :n]),
+                                   np.asarray(ref.pos),
+                                   rtol=0, atol=1e-8)
+        np.testing.assert_allclose(np.asarray(out.vel[i, :n]),
+                                   np.asarray(ref.vel),
+                                   rtol=0, atol=1e-8)
+
+
+@pytest.mark.parametrize("kernel", ens.KERNELS)
+def test_kernel_switch_agrees(kernel):
+    """ref and pallas kernels agree on the padded path (and the switch
+    resolves to a vmappable impl)."""
+    _, batched, n_active = _padded_batch()
+    out = ens.evolve_ensemble(batched, n_steps=2, dt=1e-2,
+                              n_active=n_active, kernel=kernel)
+    ref = ens.evolve_ensemble(batched, n_steps=2, dt=1e-2,
+                              n_active=n_active, impl="xla")
+    np.testing.assert_allclose(np.asarray(out.pos), np.asarray(ref.pos),
+                               rtol=0, atol=1e-8)
+
+
+def test_resolve_kernel():
+    assert ens.resolve_kernel(None) == "xla"
+    assert ens.resolve_kernel("ref") == "xla"
+    assert ens.resolve_kernel("pallas") in ("pallas", "pallas_interpret")
+    with pytest.raises(ValueError):
+        ens.resolve_kernel("bogus")
+
+
+def test_explicit_impl_and_kernel_conflict():
+    """kernel must not silently override an explicit impl (an fp64 golden
+    request downgraded to fp32 would corrupt validation studies)."""
+    with pytest.raises(ValueError):
+        ens.resolve_eval_impl("fp64", "ref")
+    with pytest.raises(ValueError):
+        driver.run(driver.SimConfig(scenario="plummer", n=8, impl="fp64",
+                                    kernel="ref", t_end=0.01, dt=1.0 / 256))
+    with pytest.raises(ValueError):
+        driver.run(driver.SimConfig(mix=(("plummer", 8),), impl="fp64",
+                                    kernel="pallas", t_end=0.01,
+                                    dt=1.0 / 256))
+    # each alone stays valid
+    assert ens.resolve_eval_impl("fp64", None) == "fp64"
+    assert ens.resolve_eval_impl(None, "ref") == "xla"
+    assert ens.resolve_eval_impl(None, None) == "xla"
+    assert ens.resolve_eval_impl(None, None, default=None) is None
+
+
+def test_padding_rows_stay_frozen():
+    """Mask contract, fixed and adaptive dt: padding rows never move, never
+    gain derivatives, never accrue potential."""
+    _, batched, n_active = _padded_batch()
+    out = ens.evolve_ensemble(batched, n_steps=4, dt=1e-2,
+                              n_active=n_active)
+    for arr in (out.pos, out.vel, out.acc, out.jerk, out.snap, out.pot):
+        assert float(jnp.abs(arr[0, 24:]).sum()) == 0.0
+
+    init = ens.ensemble_initialize(batched, n_active=n_active)
+    state, h, cnt = ens.ensemble_run_adaptive(
+        init, t_end=0.03, n_steps=8, n_active=n_active)
+    assert float(jnp.abs(state.pos[0, 24:]).sum()) == 0.0
+    assert float(jnp.abs(state.acc[0, 24:]).sum()) == 0.0
+
+
+def test_adaptive_padded_matches_unpadded():
+    """Padding must not perturb the per-run Aarseth timestep: the same run,
+    padded and unpadded, takes the same steps to the same state."""
+    spec = [("plummer", 24)]
+    _, unpadded, na_u = _padded_batch(spec)           # N_max == 24
+    specs = scenarios.make_mix(spec)
+    padded, na_p = scenarios.build_padded(specs, n_max=40)
+
+    def drive(batched, na):
+        b = ens.ensemble_initialize(batched, n_active=na)
+        h = cnt = None
+        for _ in range(64):
+            b, h, cnt = ens.ensemble_run_adaptive(
+                b, t_end=0.0625, n_steps=8, h_prev=h, n_taken=cnt,
+                n_active=na)
+            if float(np.min(np.asarray(b.time))) >= 0.0625:
+                break
+        return b, np.asarray(cnt)
+
+    out_u, cnt_u = drive(unpadded, na_u)
+    out_p, cnt_p = drive(padded, na_p)
+    np.testing.assert_array_equal(cnt_u, cnt_p)
+    np.testing.assert_allclose(np.asarray(out_p.pos[0, :24]),
+                               np.asarray(out_u.pos[0]),
+                               rtol=0, atol=1e-7)
+
+
+def test_n_active_shape_validated():
+    _, batched, _ = _padded_batch()
+    with pytest.raises(ValueError):
+        ens.ensemble_initialize(batched, n_active=jnp.asarray([24]))
+
+
+# --------------------------------------------------------------------------
+# driver + telemetry honesty
+# --------------------------------------------------------------------------
+def test_driver_mixed_report_counts_active_interactions(tmp_path):
+    out = str(tmp_path / "mixed.json")
+    cfg = driver.SimConfig(mix=(("plummer", 24), ("king", 32),
+                                ("two_body", 2)),
+                           t_end=0.05, dt=1.0 / 256, diag_every=4, out=out)
+    report = driver.run(cfg)
+    assert report["scenario"] == "mixed"
+    assert report["n_bodies"] == 32                       # padded N_max
+    assert report["n_active"] == [24, 32, 2]
+    assert [r["scenario"] for r in report["runs"]] == \
+        ["plummer", "king", "two_body"]
+    # interactions/s must be built from n_active**2, not N_max**2
+    steps = report["steps"]
+    expected = 2.0 * steps * sum(n * n for n in [24, 32, 2])
+    overstated = 2.0 * steps * 3 * 32 * 32
+    counted = report["interactions_per_s"] * report["wall_s"]
+    assert math.isclose(counted, expected, rel_tol=1e-9)
+    assert counted < overstated
+    # per-run diagnostics exist and are honest about equilibrium
+    assert report["de_rel"] < 1e-3
+    king = report["runs"][1]
+    assert abs(king["virial_ratio"] - 0.5) < 0.2
+    two_body = report["runs"][2]
+    assert two_body["de_rel"] < 1e-5
+
+
+def test_driver_mixed_adaptive_uses_per_run_steps():
+    report = driver.run(driver.SimConfig(
+        mix=(("plummer", 16), ("two_body", 2)), t_end=0.03, diag_every=8))
+    per_run = [r["steps"] for r in report["runs"]]
+    assert all(s > 0 for s in per_run)
+    counted = report["interactions_per_s"] * report["wall_s"]
+    expected = 2.0 * (per_run[0] * 16 * 16 + per_run[1] * 2 * 2)
+    assert math.isclose(counted, expected, rel_tol=1e-9)
+
+
+def test_driver_mixed_rejects_orphan_params():
+    """A param no scenario in the mix accepts must raise, exactly like the
+    homogeneous path does (a typo'd sweep key must not silently no-op)."""
+    with pytest.raises(scenarios.ScenarioError):
+        driver.run(driver.SimConfig(
+            mix=(("king", 24), ("plummer", 16)), t_end=0.01, dt=1.0 / 256,
+            scenario_params={"bogus_param": 3}))
+    # a key accepted by ONE member still applies (and only to that member)
+    report = driver.run(driver.SimConfig(
+        mix=(("king", 24), ("plummer", 16)), t_end=0.01, dt=1.0 / 256,
+        diag_every=4, scenario_params={"w0": 4.0}))
+    assert report["params"] == {"w0": 4.0}
+
+
+def test_sim_run_cli_mixed(tmp_path, capsys):
+    """The name:N CLI front door end to end (mixed parse, pad, report)."""
+    from repro.launch import sim_run
+    out = str(tmp_path / "cli.json")
+    rc = sim_run.main(["--scenario", "plummer:24", "two_body:2",
+                       "--pad", "auto", "--kernel", "ref",
+                       "--t-end", "0.02", "--dt", "0.00390625",
+                       "--diag-every", "4", "--out", out])
+    assert rc == 0
+    printed = capsys.readouterr().out
+    assert "n_active=[24, 2]" in printed
+    with open(out) as f:
+        doc = json.load(f)
+    assert doc["scenario"] == "mixed" and doc["n_active"] == [24, 2]
+    assert doc["kernel"] == "ref" and doc["mix"] == [["plummer", 24],
+                                                     ["two_body", 2]]
+
+
+def test_sim_run_cli_single_token_stays_homogeneous(tmp_path):
+    """A lone name:N token is --n shorthand: real scenario label, no padding
+    machinery, so report consumers grouping by scenario see the truth."""
+    from repro.launch import sim_run
+    out = str(tmp_path / "single.json")
+    rc = sim_run.main(["--scenario", "plummer:24", "--t-end", "0.01",
+                       "--dt", "0.00390625", "--diag-every", "4",
+                       "--out", out])
+    assert rc == 0
+    with open(out) as f:
+        doc = json.load(f)
+    assert doc["scenario"] == "plummer" and doc["n_bodies"] == 24
+    assert "mix" not in doc and "n_active" not in doc
+
+
+def test_driver_mixed_kernel_pallas_smoke(tmp_path):
+    report = driver.run(driver.SimConfig(
+        mix=(("plummer", 16), ("two_body", 2)), kernel="pallas",
+        t_end=0.02, dt=1.0 / 256, diag_every=4))
+    assert report["kernel"] == "pallas"
+    assert report["de_rel"] < 1e-4
+
+
+# --------------------------------------------------------------------------
+# cross-strategy equivalence (2-device mesh; exercised by the CI matrix leg
+# that sets XLA_FLAGS=--xla_force_host_platform_device_count=2)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("strategy", ("replicated", "mesh_sharded", "ring"))
+def test_cross_strategy_padded_ensemble_2dev(strategy):
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices "
+                    "(XLA_FLAGS=--xla_force_host_platform_device_count=2)")
+    specs, batched, n_active = _padded_batch()
+    ref = ens.evolve_ensemble(batched, n_steps=3, dt=1e-2,
+                              n_active=n_active, strategy="single")
+    out = ens.evolve_ensemble(batched, n_steps=3, dt=1e-2,
+                              n_active=n_active, strategy=strategy,
+                              devices=jax.devices())
+    np.testing.assert_allclose(np.asarray(out.pos), np.asarray(ref.pos),
+                               rtol=0, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(out.vel), np.asarray(ref.vel),
+                               rtol=0, atol=1e-12)

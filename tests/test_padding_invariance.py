@@ -1,0 +1,154 @@
+"""Padding-invariance: zero-mass rows change NOTHING, at any padded size.
+
+The mask contract behind every padded path in the repo (kernel block
+alignment, strategy device alignment, ragged-N ensemble packing): forces,
+jerks, snaps, potentials and energies of the N active particles are
+identical — within FP32 summation-order tolerance — whether evaluated at N
+or padded to any N_max, for both the reference XLA op and the tiled Pallas
+kernel, including under ``jax.vmap``.  Property-based (hypothesis) variants
+sweep sizes when hypothesis is installed; the parameterized variants always
+run.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import nbody
+from repro.kernels import ops
+from repro.sim import ensemble as ens, scenarios
+
+F32 = jnp.float32
+# fp32 evaluation: padding only reassociates the source-axis reduction
+ATOL, RTOL = 2e-6, 2e-5
+IMPLS = ("xla", "pallas_interpret")
+
+
+def _cloud(n, seed):
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.standard_normal((n, 3)), F32)
+    vel = jnp.asarray(rng.standard_normal((n, 3)) * 0.1, F32)
+    mass = jnp.asarray(rng.uniform(0.5, 1.5, n) / n, F32)
+    return pos, vel, mass
+
+
+def _padded(pos, vel, mass, extra, seed):
+    """Append ``extra`` zero-mass rows at RANDOM positions (harsher than
+    zeros: any leak of a padding row's position into active results shows)."""
+    rng = np.random.default_rng(seed + 1)
+    ep = jnp.asarray(rng.standard_normal((extra, 3)) * 2.0, F32)
+    ev = jnp.asarray(rng.standard_normal((extra, 3)), F32)
+    return (jnp.concatenate([pos, ep]), jnp.concatenate([vel, ev]),
+            jnp.concatenate([mass, jnp.zeros((extra,), F32)]))
+
+
+def _check_invariant(n, extra, seed, impl, block=128):
+    pos, vel, mass = _cloud(n, seed)
+    pp, vp, mp = _padded(pos, vel, mass, extra, seed)
+    kw = dict(impl=impl, block_i=block, block_j=block)
+    a, j, p = ops.acc_jerk_pot_rect(pos, vel, pos, vel, mass, **kw)
+    ap, jp_, ppot = ops.acc_jerk_pot_rect(pp, vp, pp, vp, mp, **kw)
+    np.testing.assert_allclose(ap[:n], a, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(jp_[:n], j, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(ppot[:n], p, rtol=RTOL, atol=ATOL)
+    s = ops.snap_rect(pos, vel, a, pos, vel, a, mass, **kw)
+    sp = ops.snap_rect(pp, vp, ap, pp, vp, ap, mp, **kw)
+    np.testing.assert_allclose(sp[:n], s, rtol=10 * RTOL, atol=10 * ATOL)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("n,extra", [(32, 1), (48, 80), (100, 28), (2, 62)])
+def test_forces_invariant_under_padding(n, extra, impl):
+    _check_invariant(n, extra, seed=3, impl=impl)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+def test_forces_invariant_under_padding_vmapped(impl):
+    """The same invariance through jax.vmap (the ensemble engine's path)."""
+    b, n, extra = 3, 40, 24
+    unpadded, padded = [], []
+    for s in range(b):
+        pos, vel, mass = _cloud(n, 100 + s)
+        unpadded.append((pos, vel, mass))
+        padded.append(_padded(pos, vel, mass, extra, 100 + s))
+    stack = lambda xs: tuple(jnp.stack(z) for z in zip(*xs))  # noqa: E731
+    kw = dict(impl=impl, block_i=128, block_j=128)
+    f = jax.vmap(lambda p, v, m: ops.acc_jerk_pot_rect(p, v, p, v, m, **kw))
+    a, j, _ = f(*stack(unpadded))
+    ap, jp_, _ = f(*stack(padded))
+    np.testing.assert_allclose(ap[:, :n], a, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(jp_[:, :n], j, rtol=RTOL, atol=ATOL)
+
+
+def test_energies_invariant_under_padding():
+    """Mass-weighting annihilates padding rows EXACTLY (their mass and
+    masked pot are zero); the active rows' potentials carry only the fp32
+    reassociation noise of the evaluator's longer source reduction."""
+    state = scenarios.make("plummer", 24, seed=5)
+    padded = scenarios.pad_state(state, 40)
+    assert float(jnp.sum(padded.mass[24:])) == 0.0
+    batched, n_active = scenarios.build_padded(
+        [scenarios.Scenario(name="plummer", n=24, seed=5)], n_max=40)
+    init = ens.ensemble_initialize(batched, n_active=n_active)
+    assert float(jnp.abs(init.pot[0, 24:]).sum()) == 0.0   # masked targets
+    e_pad = float(ens.batched_total_energy(init)[0])
+    e_ref = float(nbody.total_energy(
+        ens.unstack_states(ens.ensemble_initialize(
+            ens.stack_states([state])))[0]))
+    assert np.isclose(e_pad, e_ref, rtol=1e-6, atol=1e-7)
+
+
+def test_massive_padding_row_is_detected():
+    """Canary: if a 'padding' particle DID carry mass, the active particles'
+    forces change well beyond tolerance — i.e. this suite can actually fail
+    when the m = 0 invariant is broken."""
+    n, extra = 32, 8
+    pos, vel, mass = _cloud(n, 7)
+    pp, vp, mp = _padded(pos, vel, mass, extra, 7)
+    a, _, _ = ops.acc_jerk_pot_rect(pos, vel, pos, vel, mass, impl="xla")
+    bad_m = mp.at[n].set(1.0 / n)  # one padding row gains mass
+    a_bad, _, _ = ops.acc_jerk_pot_rect(pp, vp, pp, vp, bad_m, impl="xla")
+    assert float(jnp.max(jnp.abs(a_bad[:n] - a))) > 100 * ATOL
+
+
+# --------------------------------------------------------------------------
+# hypothesis sweeps (defined only when hypothesis is installed — a module-
+# level importorskip would skip the always-run tests above too; CI has it)
+# --------------------------------------------------------------------------
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+except ImportError:  # pragma: no cover - exercised on minimal installs
+    hypothesis = None
+
+if hypothesis is not None:
+    COMMON = dict(deadline=None,
+                  suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+    @settings(max_examples=20, **COMMON)
+    @given(n=st.integers(2, 100), extra=st.integers(1, 100),
+           seed=st.integers(0, 10_000))
+    def test_padding_invariance_property_ref(n, extra, seed):
+        _check_invariant(n, extra, seed, "xla")
+
+    @settings(max_examples=8, **COMMON)
+    @given(n=st.integers(2, 80), extra=st.integers(1, 60),
+           seed=st.integers(0, 10_000))
+    def test_padding_invariance_property_pallas(n, extra, seed):
+        _check_invariant(n, extra, seed, "pallas_interpret")
+
+    @settings(max_examples=6, **COMMON)
+    @given(n=st.integers(4, 48), extra=st.integers(1, 40),
+           seed=st.integers(0, 10_000), b=st.integers(2, 4))
+    def test_padding_invariance_property_vmap(n, extra, seed, b):
+        stack = lambda xs: tuple(jnp.stack(z) for z in zip(*xs))  # noqa: E731
+        clouds = [_cloud(n, seed + s) for s in range(b)]
+        pads = [_padded(*c, extra, seed + s) for s, c in enumerate(clouds)]
+        f = jax.vmap(lambda p, v, m: ops.acc_jerk_pot_rect(
+            p, v, p, v, m, impl="xla"))
+        a, j, _ = f(*stack(clouds))
+        ap, jp_, _ = f(*stack(pads))
+        np.testing.assert_allclose(ap[:, :n], a, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(jp_[:, :n], j, rtol=RTOL, atol=ATOL)
