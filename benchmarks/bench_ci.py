@@ -1,0 +1,120 @@
+"""CI bench-smoke: the per-PR perf trajectory, consolidated to BENCH_ci.json.
+
+Three fast probes, one JSON artifact:
+
+1. ``ensemble_throughput`` (smoke mode) — batched vs sequential invocations;
+2. ``mixed_ensemble`` (smoke mode) — padded heterogeneous batch vs
+   per-scenario processes;
+3. a **stepper sweep** on ``binary_plummer`` (N=256, matched ``t_end``):
+   ``fixed`` / ``adaptive`` / ``block`` through the driver, recording
+   steps/s, interactions/s, |dE/E| and the *measured* per-run
+   force-evaluation counts — the block stepper's acceptance metric
+   (same-or-better energy error than shared-adaptive lockstep at >= 2x
+   fewer force evaluations; the block row runs at half the adaptive eta,
+   i.e. the matched-error operating point).
+
+The consolidated ``BENCH_ci.json`` is written at the repo root; the CI
+``bench-smoke`` job uploads it as a workflow artifact on every push, so
+perf regressions show up as a trajectory, not an anecdote.
+
+``python -m benchmarks.bench_ci`` (or via ``benchmarks.run --only bench_ci``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks import common
+
+#: The stepper-sweep workload: wide timestep dynamic range (tight binaries
+#: inside a Plummer sphere) — the case block timesteps exist for.
+SCENARIO = "binary_plummer"
+N = 256
+T_END = 0.25
+SEED = 0
+
+OUT_PATH = os.path.join(common.REPO, "BENCH_ci.json")
+
+_STEPPER = """
+from repro.sim import driver
+r = driver.run(driver.SimConfig(scenario={scenario!r}, n={n}, seed={seed},
+                                t_end={t_end}, stepper={stepper!r}, {extra}
+                                impl="xla", diag_every=64))
+print("WALL", r["wall_s"])
+print("STEPS", r["steps"])
+print("STEPS_PER_S", r["steps_per_s"])
+print("PAIRS_PER_S", r["interactions_per_s"])
+print("FORCE_EVALS", r["force_evals_total"])
+print("DE_REL", r["de_rel"])
+"""
+
+#: Per-stepper extra SimConfig fields.  The block row halves eta: block
+#: quantization rounds each particle's step down, so half the adaptive eta
+#: lands at the adaptive run's energy error with far fewer evaluations.
+STEPPER_CONFIGS = {
+    "fixed": "dt=1.0/256,",
+    "adaptive": "eta=0.02, dt_max=0.0625,",
+    "block": "eta=0.01, dt_max=0.0625, n_levels=12,",
+}
+
+
+def stepper_sweep(quick: bool = False):
+    rows = []
+    t_end = T_END / 2 if quick else T_END
+    for stepper, extra in STEPPER_CONFIGS.items():
+        out = common.run_subprocess(_STEPPER.format(
+            scenario=SCENARIO, n=N, seed=SEED, t_end=t_end, stepper=stepper,
+            extra=extra))
+        rows.append({
+            "stepper": stepper,
+            "scenario": SCENARIO, "n": N, "t_end": t_end, "seed": SEED,
+            "wall_s": round(common.stdout_field(out, "WALL"), 2),
+            "steps": int(common.stdout_field(out, "STEPS")),
+            "steps_per_s": round(common.stdout_field(out, "STEPS_PER_S"), 1),
+            "interactions_per_s":
+                f"{common.stdout_field(out, 'PAIRS_PER_S'):.3e}",
+            "force_evals": common.stdout_field(out, "FORCE_EVALS"),
+            "de_rel": f"{common.stdout_field(out, 'DE_REL'):.3e}",
+        })
+    by = {r["stepper"]: r for r in rows}
+    if "adaptive" in by and "block" in by:
+        ratio = by["adaptive"]["force_evals"] / by["block"]["force_evals"]
+        matched = (float(by["block"]["de_rel"])
+                   <= float(by["adaptive"]["de_rel"]))
+        print(f"# block vs adaptive: {ratio:.1f}x fewer force evals, "
+              f"|dE/E| {by['block']['de_rel']} vs {by['adaptive']['de_rel']} "
+              f"({'matched-or-better' if matched else 'NOT matched'}; "
+              f"bar: >= 2x at matched error -> "
+              f"{'PASS' if ratio >= 2.0 and matched else 'FAIL'})")
+    common.emit("stepper_modes", rows,
+                ["stepper", "scenario", "n", "t_end", "wall_s", "steps",
+                 "steps_per_s", "interactions_per_s", "force_evals",
+                 "de_rel"])
+    return rows
+
+
+def run(quick: bool = False, smoke: bool = True):
+    """Run all three probes and write the consolidated BENCH_ci.json."""
+    del smoke  # this module IS the smoke mode
+    from benchmarks import ensemble_throughput, mixed_ensemble
+
+    t0 = time.perf_counter()
+    doc = {
+        "suite": "bench_ci",
+        "unix_time": int(time.time()),
+        "ensemble_throughput": ensemble_throughput.run(smoke=True),
+        "mixed_ensemble": mixed_ensemble.run(smoke=True),
+        "stepper_modes": stepper_sweep(quick=quick),
+    }
+    doc["wall_s_total"] = round(time.perf_counter() - t0, 1)
+    with open(OUT_PATH, "w") as f:
+        json.dump(doc, f, indent=1)
+    print(f"# BENCH_ci.json written to {OUT_PATH} "
+          f"({doc['wall_s_total']:.0f}s total)")
+    return doc
+
+
+if __name__ == "__main__":
+    run()

@@ -12,7 +12,7 @@ from repro.data import SyntheticLM, batch_spec_for
 from repro.distributed.shardings import MeshRules
 from repro.launch.train import scaled_config
 from repro.models import config as C
-from repro.models import model, params as P
+from repro.models import params as P
 from repro.optim import AdamW
 from repro.train import make_train_step
 

@@ -7,31 +7,32 @@
   fig6_energy       : Fig. 6 (energy-to-solution / peak power, EDP minimum)
   ensemble_throughput : batched B-run ensemble vs B sequential invocations
   mixed_ensemble    : padded mixed-scenario batch vs sequential + dispersion
+  bench_ci          : CI smoke trajectory (steppers + ensembles) -> BENCH_ci
   lm_step           : LM-side reduced-config step microbench
   roofline_table    : dry-run roofline summary (EXPERIMENTS.md §Roofline)
 
-``python -m benchmarks.run [--quick] [--only NAME]``
+``python -m benchmarks.run [--quick] [--smoke] [--only NAME]``
+
+Every ``benchmarks/*.py`` module with a ``run()`` entry point must be
+registered in ``SUITES`` (``tests/test_block_stepper.py`` asserts the
+registry is complete), so one command reproduces the full suite.
 """
 
 from __future__ import annotations
 
 import argparse
+import inspect
 import time
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--quick", action="store_true",
-                    help="smaller N / fewer archs (CI mode)")
-    ap.add_argument("--only", default=None)
-    args = ap.parse_args()
-
-    from benchmarks import (ensemble_throughput, fig4_validation,
+def suites() -> dict:
+    """Name -> callable registry of every benchmark entry point."""
+    from benchmarks import (bench_ci, ensemble_throughput, fig4_validation,
                             fig5_scaling, fig6_energy, lm_step,
                             mixed_ensemble, roofline_table,
                             table1_strategies)
 
-    suites = {
+    return {
         "fig4_validation": fig4_validation.run,
         "fig5_scaling": fig5_scaling.run,
         "fig6_energy": fig6_energy.run,
@@ -39,13 +40,31 @@ def main() -> None:
         "table1_scenarios": table1_strategies.run_scenarios,
         "ensemble_throughput": ensemble_throughput.run,
         "mixed_ensemble": mixed_ensemble.run,
+        "bench_ci": bench_ci.run,
         "lm_step": lm_step.run,
         "roofline_table": roofline_table.run,
     }
-    names = [args.only] if args.only else list(suites)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="smaller N / fewer archs (CI mode)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="minimal smoke sizes where a suite supports them "
+                         "(the CI bench-smoke job's mode)")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    registry = suites()
+    names = [args.only] if args.only else list(registry)
     for name in names:
+        fn = registry[name]
+        kw = {"quick": args.quick}
+        if args.smoke and "smoke" in inspect.signature(fn).parameters:
+            kw["smoke"] = True
         t0 = time.perf_counter()
-        suites[name](quick=args.quick)
+        fn(**kw)
         print(f"# {name} done in {time.perf_counter() - t0:.1f}s\n")
 
 

@@ -37,7 +37,12 @@ Evaluator = Callable[[jax.Array, jax.Array, jax.Array], Evaluation]
 
 
 def predict(state: ParticleState, dt) -> tuple[jax.Array, jax.Array]:
-    """Taylor-series prediction of positions and velocities to t + dt."""
+    """Taylor-series prediction of positions and velocities to t + dt.
+
+    ``dt`` may be a scalar (lockstep) or an ``(N, 1)`` column of per-particle
+    horizons — the block-timestep engine predicts every particle from its own
+    last correction time to the shared substep time.
+    """
     h = dt
     x, v, a, j, s, c = (
         state.pos, state.vel, state.acc, state.jerk, state.snap, state.crackle
@@ -47,8 +52,25 @@ def predict(state: ParticleState, dt) -> tuple[jax.Array, jax.Array]:
     return xp, vp
 
 
+def predict_acc(state: ParticleState, dt) -> jax.Array:
+    """Taylor-predicted acceleration at t + dt (snap-pass source operand).
+
+    The 6th-order scheme's second pass needs a_j of *every* source; under
+    block timesteps inactive particles are not re-evaluated, so their
+    acceleration is predicted through crackle (Nitadori & Makino 2008, the
+    j-particle predictor).  ``dt`` broadcasts like :func:`predict`.
+    """
+    h = dt
+    return state.acc + h * (state.jerk
+                            + h * (state.snap / 2 + h * state.crackle / 6))
+
+
 def correct(state: ParticleState, ev: Evaluation, dt, *, order: int = 6):
-    """Two-point Hermite corrector; returns (pos, vel, crackle_at_t1)."""
+    """Two-point Hermite corrector; returns (pos, vel, crackle_at_t1).
+
+    Like :func:`predict`, ``dt`` may be scalar or an ``(N, 1)`` per-particle
+    column (each particle corrected over its own completed step).
+    """
     h = dt
     a0, j0, s0 = state.acc, state.jerk, state.snap
     a1 = ev.acc.astype(state.dtype)
@@ -112,9 +134,9 @@ def initialize(state: ParticleState, evaluator: Evaluator) -> ParticleState:
     )
 
 
-def aarseth_dt(state: ParticleState, *, eta: float = 0.02, dt_max=0.0625,
-               use_crackle: bool = False):
-    """Shared adaptive timestep (Aarseth criterion, min over particles).
+def aarseth_dt_particles(state: ParticleState, *, eta: float = 0.02,
+                         dt_max=0.0625, use_crackle: bool = False):
+    """Per-particle Aarseth timestep criterion — the ``(N,)`` vector.
 
     ``use_crackle=False`` (default) drops the 5th-derivative term from the
     denominator: the crackle is *reconstructed* from differences of FP32
@@ -122,6 +144,10 @@ def aarseth_dt(state: ParticleState, *, eta: float = 0.02, dt_max=0.0625,
     noise-dominated and feeding it back into the dt criterion causes a
     dt-collapse spiral under the paper's mixed-precision scheme.  The state
     itself is unaffected (crackle only enters prediction at O(h^5)/120).
+
+    Particles with zero derivatives (``num == 0`` — e.g. zero-mass padding
+    rows, whose evaluated derivatives the ensemble mask zeroes) fall back to
+    ``dt_max``, so they never tighten a shared step nor deepen a block level.
     """
     tiny = jnp.asarray(1e-30, state.dtype)
 
@@ -135,7 +161,48 @@ def aarseth_dt(state: ParticleState, *, eta: float = 0.02, dt_max=0.0625,
         den = den + j * norm(state.crackle)
     dt_i = eta * jnp.sqrt(num / jnp.maximum(den, tiny))
     dt_i = jnp.where(num > 0, dt_i, dt_max)
-    return jnp.minimum(jnp.min(dt_i), jnp.asarray(dt_max, state.dtype))
+    return jnp.minimum(dt_i, jnp.asarray(dt_max, state.dtype))
+
+
+def aarseth_dt(state: ParticleState, *, eta: float = 0.02, dt_max=0.0625,
+               use_crackle: bool = False):
+    """Shared adaptive timestep (Aarseth criterion, min over particles)."""
+    return jnp.min(aarseth_dt_particles(state, eta=eta, dt_max=dt_max,
+                                        use_crackle=use_crackle))
+
+
+def quantize_block_levels(dt_i, *, dt_max, n_levels: int):
+    """Quantize per-particle timesteps onto the power-of-two block hierarchy.
+
+    Level ``l`` steps at ``dt_max / 2**l``; a particle is assigned the
+    *coarsest* level whose step does not exceed its Aarseth ``dt_i``
+    (``l = ceil(log2(dt_max / dt_i))``), clipped to ``[0, n_levels - 1]`` —
+    so the quantized step only ever rounds *down* (never looser than the
+    criterion) except at the finest level, which floors the hierarchy the way
+    ``dt_min`` floors classic block-timestep codes.
+    """
+    dt_i = jnp.maximum(dt_i, jnp.asarray(jnp.finfo(dt_i.dtype).tiny,
+                                         dt_i.dtype))
+    lev = jnp.ceil(jnp.log2(dt_max / dt_i))
+    return jnp.clip(lev, 0, n_levels - 1).astype(jnp.int32)
+
+
+def block_level_dt(levels, dt_max):
+    """The step size ``dt_max / 2**level`` of each particle's block level."""
+    return dt_max * jnp.exp2(-levels.astype(jnp.result_type(float)))
+
+
+def block_active_mask(levels, k, *, n_levels: int):
+    """Active set at fine-substep ``k`` (1-based) of one ``dt_max`` macro-step.
+
+    A macro-step is ``2**(n_levels-1)`` substeps of the finest dt; a particle
+    at level ``l`` completes one of its own steps every ``2**(n_levels-1-l)``
+    substeps, i.e. it is predicted-evaluated-corrected exactly when ``k`` is
+    a multiple of its period.  At ``k = 2**(n_levels-1)`` every period
+    divides ``k``: the whole system synchronizes at the macro boundary.
+    """
+    period = jnp.asarray(2 ** (n_levels - 1), jnp.int32) >> levels
+    return (jnp.asarray(k, jnp.int32) % period) == 0
 
 
 def evolve(

@@ -11,9 +11,17 @@ TPU adaptation of the paper's Tensix read/compute/write pipeline (DESIGN.md §2)
   it.  TPUs broadcast natively, so we store each particle ONCE in a packed
   struct-of-arrays layout and broadcast inside the kernel (DESIGN.md §2.1):
 
-      tgt  : (N, 8)  rows = target particles,  cols = [x y z m vx vy vz pad]
+      tgt  : (N, 8)  rows = target particles,  cols = [x y z act vx vy vz pad]
       src  : (8, N)  rows = [x y z m vx vy vz pad], cols = source particles
       out  : (N, 8)  cols = [ax ay az jx jy jz pot pad]
+
+  Column 3 of the target block is the **activity mask** (1.0 = evaluate this
+  target; ``ops.pack_targets`` writes all-ones when no mask is given, 0.0 on
+  its alignment padding).  The block-timestep engine uses it to evaluate
+  forces only *on* the currently active block of targets while sources stay
+  full: each output row is scaled by its activity flag, and an i-block whose
+  targets are all inactive skips its compute entirely via ``pl.when`` — the
+  Tensix analogue would be the host simply not enqueueing that tile.
 
   A ``(BI, 8)`` target block meets an ``(8, BJ)`` source block and the whole
   (BI, BJ) interaction tile lives in VMEM registers/vregs.
@@ -59,6 +67,7 @@ DEFAULT_BLOCK_I = 256
 DEFAULT_BLOCK_J = 512
 
 _X, _Y, _Z, _M, _VX, _VY, _VZ = 0, 1, 2, 3, 4, 5, 6
+_ACT = _M  # target blocks carry the activity mask in the (unused) mass slot
 
 
 def _geometry(tgt, src, eps):
@@ -94,27 +103,33 @@ def _acc_jerk_kernel(tgt_ref, src_ref, out_ref, *, eps: float):
         out_ref[...] = jnp.zeros_like(out_ref)
 
     tgt = tgt_ref[...]
-    src = src_ref[...]
-    dx, dy, dz, d2, inv_r = _geometry(tgt, src, eps)
-    inv_r3 = inv_r * inv_r * inv_r
-    mj = src[_M : _M + 1, :]
-    t = mj * inv_r3                                     # t_j  (paper Alg. 3)
+    act = tgt[:, _ACT : _ACT + 1]                       # target activity mask
 
-    dvx, dvy, dvz = _dv(tgt, src)
-    rv = dx * dvx + dy * dvy + dz * dvz                 # v_r
-    q = (-3.0 * rv) / d2                                # A_ij * v_r
+    # an i-block with no active target contributes nothing: skip its compute
+    # (the grid still visits the step, but the VPU work is predicated away)
+    @pl.when(jnp.sum(act) > 0.0)
+    def _compute():
+        src = src_ref[...]
+        dx, dy, dz, d2, inv_r = _geometry(tgt, src, eps)
+        inv_r3 = inv_r * inv_r * inv_r
+        mj = src[_M : _M + 1, :]
+        t = mj * inv_r3                                 # t_j  (paper Alg. 3)
 
-    ax = jnp.sum(t * dx, axis=1)
-    ay = jnp.sum(t * dy, axis=1)
-    az = jnp.sum(t * dz, axis=1)
-    jx = jnp.sum(t * (dvx + q * dx), axis=1)
-    jy = jnp.sum(t * (dvy + q * dy), axis=1)
-    jz = jnp.sum(t * (dvz + q * dz), axis=1)
-    pot = -jnp.sum(mj * inv_r, axis=1)
-    zero = jnp.zeros_like(ax)
+        dvx, dvy, dvz = _dv(tgt, src)
+        rv = dx * dvx + dy * dvy + dz * dvz             # v_r
+        q = (-3.0 * rv) / d2                            # A_ij * v_r
 
-    partial = jnp.stack([ax, ay, az, jx, jy, jz, pot, zero], axis=1)
-    out_ref[...] += partial
+        ax = jnp.sum(t * dx, axis=1)
+        ay = jnp.sum(t * dy, axis=1)
+        az = jnp.sum(t * dz, axis=1)
+        jx = jnp.sum(t * (dvx + q * dx), axis=1)
+        jy = jnp.sum(t * (dvy + q * dy), axis=1)
+        jz = jnp.sum(t * (dvz + q * dz), axis=1)
+        pot = -jnp.sum(mj * inv_r, axis=1)
+        zero = jnp.zeros_like(ax)
+
+        partial = jnp.stack([ax, ay, az, jx, jy, jz, pot, zero], axis=1)
+        out_ref[...] += act * partial
 
 
 def _snap_kernel(tgt_ref, src_ref, tacc_ref, sacc_ref, out_ref, *, eps: float):
@@ -126,32 +141,37 @@ def _snap_kernel(tgt_ref, src_ref, tacc_ref, sacc_ref, out_ref, *, eps: float):
         out_ref[...] = jnp.zeros_like(out_ref)
 
     tgt = tgt_ref[...]
-    src = src_ref[...]
-    dx, dy, dz, d2, inv_r = _geometry(tgt, src, eps)
-    inv_r3 = inv_r * inv_r * inv_r
-    mj = src[_M : _M + 1, :]
-    t = mj * inv_r3
+    act = tgt[:, _ACT : _ACT + 1]                       # target activity mask
 
-    dvx, dvy, dvz = _dv(tgt, src)
-    dax = sacc_ref[0:1, :] - tacc_ref[:, 0:1]
-    day = sacc_ref[1:2, :] - tacc_ref[:, 1:2]
-    daz = sacc_ref[2:3, :] - tacc_ref[:, 2:3]
+    @pl.when(jnp.sum(act) > 0.0)
+    def _compute():
+        src = src_ref[...]
+        dx, dy, dz, d2, inv_r = _geometry(tgt, src, eps)
+        inv_r3 = inv_r * inv_r * inv_r
+        mj = src[_M : _M + 1, :]
+        t = mj * inv_r3
 
-    alpha = (dx * dvx + dy * dvy + dz * dvz) / d2
-    beta = (dvx * dvx + dvy * dvy + dvz * dvz
-            + dx * dax + dy * day + dz * daz) / d2 + alpha * alpha
+        dvx, dvy, dvz = _dv(tgt, src)
+        dax = sacc_ref[0:1, :] - tacc_ref[:, 0:1]
+        day = sacc_ref[1:2, :] - tacc_ref[:, 1:2]
+        daz = sacc_ref[2:3, :] - tacc_ref[:, 2:3]
 
-    # A0 / A1 / A2 chains, per component (paper Alg. 3 extended to snap).
-    a3, b3 = -3.0 * alpha, -3.0 * beta
-    px, py, pz = t * dx, t * dy, t * dz                       # A0
-    jx_, jy_, jz_ = t * dvx + a3 * px, t * dvy + a3 * py, t * dvz + a3 * pz
-    sx = jnp.sum(t * dax - 6.0 * alpha * jx_ + b3 * px, axis=1)
-    sy = jnp.sum(t * day - 6.0 * alpha * jy_ + b3 * py, axis=1)
-    sz = jnp.sum(t * daz - 6.0 * alpha * jz_ + b3 * pz, axis=1)
-    zero = jnp.zeros_like(sx)
+        alpha = (dx * dvx + dy * dvy + dz * dvz) / d2
+        beta = (dvx * dvx + dvy * dvy + dvz * dvz
+                + dx * dax + dy * day + dz * daz) / d2 + alpha * alpha
 
-    partial = jnp.stack([sx, sy, sz, zero, zero, zero, zero, zero], axis=1)
-    out_ref[...] += partial
+        # A0 / A1 / A2 chains, per component (paper Alg. 3 extended to snap).
+        a3, b3 = -3.0 * alpha, -3.0 * beta
+        px, py, pz = t * dx, t * dy, t * dz                   # A0
+        jx_, jy_, jz_ = t * dvx + a3 * px, t * dvy + a3 * py, t * dvz + a3 * pz
+        sx = jnp.sum(t * dax - 6.0 * alpha * jx_ + b3 * px, axis=1)
+        sy = jnp.sum(t * day - 6.0 * alpha * jy_ + b3 * py, axis=1)
+        sz = jnp.sum(t * daz - 6.0 * alpha * jz_ + b3 * pz, axis=1)
+        zero = jnp.zeros_like(sx)
+
+        partial = jnp.stack([sx, sy, sz, zero, zero, zero, zero, zero],
+                            axis=1)
+        out_ref[...] += act * partial
 
 
 def _grid_specs(n_t: int, n_s: int, block_i: int, block_j: int):

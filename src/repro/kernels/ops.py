@@ -25,6 +25,11 @@ zero-mass particles (block alignment here, device-count alignment in
 and the active particles' results stay invariant up to FP32 summation
 order.
 
+**Target-activity mask** (block timesteps): the rect wrappers take an
+optional ``mask_t`` over targets — inactive rows return exact zeros, sources
+stay full, and the Pallas kernel skips fully-inactive i-blocks via
+``pl.when``.  ``mask_t=None`` is the all-active identity.
+
 **vmap safety**: every wrapper is a pure shape-polymorphic function of its
 array arguments, and ``pallas_call`` batches by prepending a grid dimension,
 so ``jax.vmap`` lifts both the XLA fallback and the Pallas kernel (compiled
@@ -53,14 +58,20 @@ def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
 
 
-def pack_targets(pos, vel, n_pad: int):
-    """(N,3)x2 -> (n_pad, 8) target block [x y z 0 vx vy vz 0]."""
+def pack_targets(pos, vel, n_pad: int, mask=None):
+    """(N,3)x2 -> (n_pad, 8) target block [x y z act vx vy vz 0].
+
+    Column 3 (the slot sources use for mass) carries the target **activity
+    mask**: 1.0 = evaluate this row, 0.0 = skip (the kernel scales the row's
+    output by it and skips fully-inactive i-blocks).  ``mask=None`` means all
+    targets active; block-alignment padding rows are always inactive.
+    """
     n = pos.shape[0]
     f32 = jnp.float32
-    zero = jnp.zeros((n,), f32)
+    act = jnp.ones((n,), f32) if mask is None else jnp.asarray(mask, f32)
     cols = [
-        pos[:, 0], pos[:, 1], pos[:, 2], zero,
-        vel[:, 0], vel[:, 1], vel[:, 2], zero,
+        pos[:, 0], pos[:, 1], pos[:, 2], act,
+        vel[:, 0], vel[:, 1], vel[:, 2], jnp.zeros((n,), f32),
     ]
     tgt = jnp.stack([jnp.asarray(c, f32) for c in cols], axis=1)
     return jnp.pad(tgt, ((0, n_pad - n), (0, 0)))
@@ -90,16 +101,30 @@ def pack_acc_sources(acc, n_pad: int):
     return a
 
 
+def _mask_rows(mask_t, *arrays):
+    """Zero the rows of each array where the target mask is inactive."""
+    m = jnp.asarray(mask_t, arrays[0].dtype)
+    return tuple(a * (m[:, None] if a.ndim == 2 else m) for a in arrays)
+
+
 @partial(jax.jit, static_argnames=("eps", "block_i", "block_j", "impl"))
 def acc_jerk_pot_rect(
     pos_t, vel_t, pos_s, vel_s, mass_s,
     *,
+    mask_t=None,
     eps: float = 1e-7,
     block_i: int = nbody_force.DEFAULT_BLOCK_I,
     block_j: int = nbody_force.DEFAULT_BLOCK_J,
     impl: str = "pallas",
 ):
-    """(acc, jerk, pot) of N_t targets due to N_s sources, FP32."""
+    """(acc, jerk, pot) of N_t targets due to N_s sources, FP32.
+
+    ``mask_t`` (optional ``(N_t,)`` activity mask) restricts evaluation to
+    the active *targets* — the block-timestep hot path.  Sources stay full.
+    Inactive rows return exact zeros; in the Pallas path a fully-inactive
+    i-block skips its compute, in the XLA path the mask zeroes the outputs
+    (dense XLA cannot skip, so the saving there is accounting-only).
+    """
     if impl in ("xla", "pallas_marked"):
         f32 = jnp.float32
         args = (
@@ -109,12 +134,16 @@ def acc_jerk_pot_rect(
         )
         if impl == "pallas_marked":
             with jax.named_scope("PALLAS_VMEM_REGION"):
-                return ref.acc_jerk_pot_rect(*args, eps=eps)
-        return ref.acc_jerk_pot_rect(*args, eps=eps)
+                acc, jerk, pot = ref.acc_jerk_pot_rect(*args, eps=eps)
+        else:
+            acc, jerk, pot = ref.acc_jerk_pot_rect(*args, eps=eps)
+        if mask_t is not None:
+            acc, jerk, pot = _mask_rows(mask_t, acc, jerk, pot)
+        return acc, jerk, pot
     n_t, n_s = pos_t.shape[0], pos_s.shape[0]
     nt_pad = _round_up(n_t, block_i)
     ns_pad = _round_up(n_s, block_j)
-    tgt = pack_targets(pos_t, vel_t, nt_pad)
+    tgt = pack_targets(pos_t, vel_t, nt_pad, mask_t)
     src = pack_sources(pos_s, vel_s, mass_s, ns_pad)
     out = nbody_force.acc_jerk_pot_packed(
         tgt, src, eps=eps, block_i=block_i, block_j=block_j,
@@ -127,12 +156,18 @@ def acc_jerk_pot_rect(
 def snap_rect(
     pos_t, vel_t, acc_t, pos_s, vel_s, acc_s, mass_s,
     *,
+    mask_t=None,
     eps: float = 1e-7,
     block_i: int = nbody_force.DEFAULT_BLOCK_I,
     block_j: int = nbody_force.DEFAULT_BLOCK_J,
     impl: str = "pallas",
 ):
-    """Snap of N_t targets due to N_s sources (second Hermite pass), FP32."""
+    """Snap of N_t targets due to N_s sources (second Hermite pass), FP32.
+
+    ``mask_t`` restricts the pass to active targets (see
+    :func:`acc_jerk_pot_rect`); ``acc_s`` must then hold the *predicted*
+    acceleration of inactive sources (the caller blends evaluated/predicted).
+    """
     if impl in ("xla", "pallas_marked"):
         f32 = jnp.float32
         args = (
@@ -143,12 +178,16 @@ def snap_rect(
         )
         if impl == "pallas_marked":
             with jax.named_scope("PALLAS_VMEM_REGION"):
-                return ref.snap_rect(*args, eps=eps)
-        return ref.snap_rect(*args, eps=eps)
+                snp = ref.snap_rect(*args, eps=eps)
+        else:
+            snp = ref.snap_rect(*args, eps=eps)
+        if mask_t is not None:
+            (snp,) = _mask_rows(mask_t, snp)
+        return snp
     n_t, n_s = pos_t.shape[0], pos_s.shape[0]
     nt_pad = _round_up(n_t, block_i)
     ns_pad = _round_up(n_s, block_j)
-    tgt = pack_targets(pos_t, vel_t, nt_pad)
+    tgt = pack_targets(pos_t, vel_t, nt_pad, mask_t)
     src = pack_sources(pos_s, vel_s, mass_s, ns_pad)
     tacc = pack_acc_targets(acc_t, nt_pad)
     sacc = pack_acc_sources(acc_s, ns_pad)

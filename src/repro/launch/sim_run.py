@@ -15,6 +15,14 @@ all-pairs op (``ref``) or the tiled Pallas kernel (``pallas``; interpreted
 on CPU).  Mixed-run telemetry counts interactions with each run's
 ``n_active``, never the padded N.
 
+``--stepper {fixed,adaptive,block}`` selects the timestep mode:
+``fixed`` (``--dt``), ``adaptive`` (shared Aarseth lockstep, capped at
+``--dt-max``), or ``block`` (hierarchical per-particle power-of-two levels,
+``--dt-max`` x ``--levels``; see docs/ensembles.md).  Telemetry reports the
+*measured* per-run force-evaluation counts in every mode — in block mode
+only the active targets of each event are evaluated, so the count is far
+below ``steps * N**2`` on scenarios with a wide timestep dynamic range.
+
 Each invocation emits a one-line summary plus a JSON telemetry report
 (wall time, steps/s, interactions/s, modeled energy/EDP, per-run energy
 conservation) under ``experiments/sim/`` (override with ``--out``).
@@ -66,6 +74,17 @@ def main(argv=None):
     ap.add_argument("--t-end", type=float, default=1.0)
     ap.add_argument("--dt", type=float, default=None,
                     help="fixed step (single-run default: shared adaptive)")
+    ap.add_argument("--stepper", default=None,
+                    choices=(None, "fixed", "adaptive", "block"),
+                    help="timestep mode: fixed dt, shared-adaptive (Aarseth) "
+                         "lockstep, or hierarchical per-particle block "
+                         "timesteps (default: fixed when --dt is given, "
+                         "else adaptive)")
+    ap.add_argument("--dt-max", type=float, default=0.0625,
+                    help="coarsest timestep (adaptive cap / block level 0)")
+    ap.add_argument("--levels", type=int, default=8,
+                    help="block-timestep hierarchy depth (finest step is "
+                         "dt_max / 2**(levels-1))")
     ap.add_argument("--eta", type=float, default=0.02)
     ap.add_argument("--order", type=int, default=6, choices=(4, 6))
     ap.add_argument("--strategy", default="single",
@@ -133,7 +152,9 @@ def main(argv=None):
 
     cfg = driver.SimConfig(
         scenario=scenario_name, n=n_arg, seed=args.seed,
-        ensemble=args.ensemble, t_end=args.t_end, dt=args.dt, eta=args.eta,
+        ensemble=args.ensemble, t_end=args.t_end, dt=args.dt,
+        stepper=args.stepper, dt_max=args.dt_max, n_levels=args.levels,
+        eta=args.eta,
         order=args.order, strategy=args.strategy, devices=args.devices,
         impl=args.impl, kernel=args.kernel, mix=mix, pad=pad,
         diag_every=args.diag_every, scenario_params=params,
@@ -150,7 +171,8 @@ def main(argv=None):
         else f"{scenario_name} n={n_arg}"
     print(f"[sim] scenario={desc} "
           f"ensemble={report['ensemble']} strategy={args.strategy} "
-          f"devices={args.devices} order={args.order}"
+          f"devices={args.devices} order={args.order} "
+          f"stepper={report.get('stepper', 'fixed')}"
           + (f" kernel={args.kernel}" if args.kernel else ""))
     if mixed:
         print(f"[sim] padded N_max={report['n_bodies']} "
@@ -158,7 +180,9 @@ def main(argv=None):
     print(f"[sim] t={report['t_final']:.4f} steps={report['steps']} "
           f"wall={report['wall_s']:.2f}s "
           f"steps/s={report['steps_per_s']:.1f} "
-          f"pairs/s={report['interactions_per_s']:.3e}")
+          f"pairs/s={report['interactions_per_s']:.3e}"
+          + (f" force_evals={report['force_evals_total']:.3e}"
+             if "force_evals_total" in report else ""))
     print(f"[sim] |dE/E|={report['de_rel']:.3e} "
           f"E_model={report['modeled']['energy_J']:.1f}J "
           f"EDP={report['modeled']['edp_Js']:.1f}Js")

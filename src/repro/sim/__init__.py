@@ -10,8 +10,9 @@ Three layers on top of the core Hermite/strategy machinery:
   under ``jax.vmap`` with the batch axis sharded across devices; mixed
   scenarios of different N ride in one rectangular batch via zero-mass
   padding + a per-run ``n_active`` mask, with force evaluation switchable
-  between the reference op and the tiled Pallas kernel (see
-  ``docs/ensembles.md``);
+  between the reference op and the tiled Pallas kernel, and three stepper
+  modes — fixed dt, per-run shared-adaptive lockstep, and hierarchical
+  per-particle block timesteps (see ``docs/ensembles.md``);
 * ``driver`` / ``telemetry`` — a unified run loop (diagnostics cadence,
   per-step wall time, modeled energy/EDP) emitting one JSON report per run,
   wired into the ``repro.launch.sim_run`` CLI.

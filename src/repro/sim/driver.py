@@ -6,8 +6,10 @@ One entry point, :func:`run`, drives either
   ``single`` evaluator or one of ``repro.core.strategies.STRATEGIES``), with
   fixed or shared-adaptive (Aarseth) timestep and per-step telemetry; or
 * a **batched ensemble** of B independent runs (seeds ``seed .. seed+B-1``)
-  advanced in lockstep by ``repro.sim.ensemble`` — fixed dt when ``dt`` is
-  given, otherwise per-run shared-adaptive (Aarseth) dt — with the batch
+  advanced by ``repro.sim.ensemble`` under one of three steppers — ``fixed``
+  (shared dt), ``adaptive`` (per-run shared Aarseth lockstep) or ``block``
+  (hierarchical per-particle block timesteps inside each member; a single
+  run with ``stepper="block"`` routes here as a B=1 batch) — with the batch
   axis sharded over the requested devices and per-chunk telemetry; or
 * a **mixed padded ensemble** (``mix=(("king", 256), ("merger", 512), ...)``)
   of heterogeneous scenarios packed to one rectangular batch with zero-mass
@@ -47,7 +49,11 @@ class SimConfig:
     seed: int = 0
     ensemble: int = 1
     t_end: float = 1.0
-    dt: Optional[float] = None       # None => shared-adaptive (Aarseth)
+    dt: Optional[float] = None       # fixed step (stepper="fixed")
+    stepper: Optional[str] = None    # "fixed" | "adaptive" | "block"
+    #   (None infers: "fixed" when dt is given, else "adaptive")
+    dt_max: float = 0.0625           # coarsest step (adaptive + block)
+    n_levels: int = 8                # block-timestep hierarchy depth
     eta: float = 0.02
     order: int = 6
     strategy: str = "single"
@@ -63,13 +69,39 @@ class SimConfig:
     validate_ic: bool = True
     out: Optional[str] = None        # JSON report path (None => don't write)
 
+    def resolved_stepper(self) -> str:
+        """Resolve (stepper, dt) to one of ``ensemble.STEPPERS``.
+
+        An explicit ``stepper`` must be consistent with ``dt``: fixed mode
+        needs a step, the adaptive/block modes choose their own (``dt_max``
+        caps them) — a silently ignored ``dt`` would misreport the run.
+        """
+        stepper = self.stepper or ("fixed" if self.dt is not None
+                                   else "adaptive")
+        if stepper not in ens.STEPPERS:
+            raise ValueError(
+                f"unknown stepper {stepper!r}; one of {ens.STEPPERS}")
+        if stepper == "fixed" and self.dt is None:
+            raise ValueError("stepper='fixed' needs an explicit dt")
+        if stepper != "fixed" and self.dt is not None:
+            raise ValueError(
+                f"stepper={stepper!r} chooses its own timestep; dt={self.dt} "
+                "would be ignored (use dt_max to cap it)")
+        return stepper
+
     def meta(self) -> Dict[str, Any]:
         meta = {
             "scenario": self.scenario, "n": self.n, "seed": self.seed,
             "ensemble": self.ensemble, "strategy": self.strategy,
             "t_end": self.t_end, "dt": self.dt, "order": self.order,
+            "stepper": self.resolved_stepper(),
             "params": dict(self.scenario_params),
         }
+        if meta["stepper"] == "block":
+            meta["dt_max"] = self.dt_max
+            meta["n_levels"] = self.n_levels
+        if meta["stepper"] == "adaptive":
+            meta["dt_max"] = self.dt_max
         if self.mix is not None:
             meta["scenario"] = "mixed"
             meta["mix"] = [list(m) for m in self.mix]
@@ -105,9 +137,12 @@ def run(cfg: SimConfig) -> Dict[str, Any]:
     """Run one configuration end-to-end and return its telemetry report."""
     if cfg.ensemble < 1:
         raise ValueError(f"ensemble={cfg.ensemble} must be >= 1")
+    stepper = cfg.resolved_stepper()
     if cfg.mix is not None:
         report = _run_mixed(cfg)
-    elif cfg.ensemble > 1:
+    elif cfg.ensemble > 1 or stepper == "block":
+        # the block engine lives in the (vmapped) ensemble path; a single
+        # block run is just a B=1 batch
         report = _run_ensemble(cfg)
     else:
         report = _run_single(cfg)
@@ -154,7 +189,8 @@ def _run_single(cfg: SimConfig) -> Dict[str, Any]:
         if cfg.dt is not None:
             h = cfg.dt
         else:
-            h = float(hermite.aarseth_dt(state, eta=cfg.eta))
+            h = float(hermite.aarseth_dt(state, eta=cfg.eta,
+                                         dt_max=cfg.dt_max))
             if h_prev is not None:  # rate-limit dt changes (noise robustness)
                 h = min(max(h, 0.5 * h_prev), 2.0 * h_prev)
             h_prev = h
@@ -175,6 +211,7 @@ def _run_single(cfg: SimConfig) -> Dict[str, Any]:
     return recorder.finalize(
         n_bodies=cfg.n, ensemble=1,
         n_devices=cfg.devices if cfg.strategy != "single" else 1,
+        per_run_pairs=[float(steps) * cfg.n * cfg.n],
         extra={"e0": e0, "e1": e1, "de_rel": abs((e1 - e0) / e0),
                "t_final": float(state.time)})
 
@@ -252,8 +289,9 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
         recorder.record_snapshot(done, t_sim, energy=e.tolist(),
                                  de_rel=float(np.abs((e - e0) / e0).max()))
 
+    stepper = cfg.resolved_stepper()
     per_run_steps = None
-    if cfg.dt is not None:
+    if stepper == "fixed":
         n_steps = max(1, int(round(cfg.t_end / cfg.dt)))
         done = 0
         while done < n_steps:
@@ -265,7 +303,8 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
             done += chunk
             snapshot(done, done * cfg.dt, time.perf_counter() - t0)
         t_final = n_steps * cfg.dt
-    else:
+        per_run_pairs = [float(n_steps) * a * a for a in n_active]
+    elif stepper == "adaptive":
         # per-run shared-adaptive dt: each member steps at its own Aarseth
         # criterion; finished members freeze until the whole batch is done
         h_prev = n_taken = None
@@ -274,7 +313,8 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
             t0 = time.perf_counter()
             batched, h_prev, n_taken = ens.ensemble_run_adaptive(
                 batched, t_end=cfg.t_end, n_steps=cfg.diag_every,
-                h_prev=h_prev, n_taken=n_taken, eta=cfg.eta, **kw)
+                h_prev=h_prev, n_taken=n_taken, eta=cfg.eta,
+                dt_max=cfg.dt_max, **kw)
             jax.block_until_ready(batched.pos)
             done += 1
             snapshot(int(np.max(np.asarray(n_taken))),
@@ -284,17 +324,42 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
                 break
         per_run_steps = [int(c) for c in np.asarray(n_taken)]
         t_final = float(np.min(np.asarray(batched.time)))
+        per_run_pairs = [float(s) * a * a
+                         for s, a in zip(per_run_steps, n_active)]
+    else:
+        # hierarchical block timesteps: each member's active block is
+        # evaluated per event; the engine *measures* its pairwise work
+        carry = None
+        done = 0
+        while done * cfg.diag_every < MAX_STEPS:
+            t0 = time.perf_counter()
+            batched, carry = ens.ensemble_run_block(
+                batched, t_end=cfg.t_end, n_events=cfg.diag_every,
+                dt_max=cfg.dt_max, n_levels=cfg.n_levels, carry=carry,
+                eta=cfg.eta, **kw)
+            jax.block_until_ready(batched.pos)
+            done += 1
+            snapshot(int(np.max(np.asarray(carry.n_events))),
+                     float(np.min(np.asarray(batched.time))),
+                     time.perf_counter() - t0)
+            if float(np.min(np.asarray(batched.time))) >= cfg.t_end:
+                break
+        per_run_steps = [int(c) for c in np.asarray(carry.n_events)]
+        t_final = float(np.min(np.asarray(batched.time)))
+        per_run_pairs = [float(p) for p in np.asarray(carry.n_pairs)]
 
     e1 = np.asarray(ens.batched_total_energy(batched), np.float64)
     de = np.abs((e1 - e0) / e0)
     virial = np.asarray(ens.batched_virial_ratio(batched), np.float64)
     runs = [{**runs_meta[i], "e0": float(e0[i]), "e1": float(e1[i]),
              "de_rel": float(de[i]), "virial_ratio": float(virial[i]),
+             "force_evals": per_run_pairs[i],
              **({"steps": per_run_steps[i]} if per_run_steps else {})}
             for i in range(b)]
     return recorder.finalize(
         n_bodies=n_max, ensemble=b, n_devices=max(cfg.devices, 1),
         n_active=n_active, per_run_steps=per_run_steps,
+        per_run_pairs=per_run_pairs,
         extra={"e0": e0.tolist(), "e1": e1.tolist(),
                "de_rel": float(de.max()), "t_final": t_final,
                "runs": runs})

@@ -63,6 +63,7 @@ class TelemetryRecorder:
                  n_devices: int = 1, util: float = DEFAULT_UTIL,
                  n_active: Optional[List[int]] = None,
                  per_run_steps: Optional[List[int]] = None,
+                 per_run_pairs: Optional[List[float]] = None,
                  extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
         """Assemble the JSON-ready report for this run.
 
@@ -72,12 +73,22 @@ class TelemetryRecorder:
         model never credit work done on zero-mass padding rows.
         ``per_run_steps`` (e.g. adaptive-mode productive step counts) further
         replaces the shared lockstep step count per run.
+
+        ``per_run_pairs`` is the strongest form: the *measured* per-run
+        pairwise force-evaluation count (per Hermite pass).  The block
+        stepper evaluates only its active targets each substep, so its cost
+        is not ``steps * n_active**2`` — when counts are given they override
+        the step-based estimate entirely, and the report carries them as
+        ``force_evals`` / ``force_evals_total``.
         """
         walls = [s.wall_s for s in self.steps]
         wall_total = sum(walls) if walls else time.perf_counter() - self._t0
         n_steps = self.steps[-1].step if self.steps else 0
         # each Hermite-6 step sweeps all pairs twice (acc/jerk pass + snap)
-        if n_active is not None:
+        if per_run_pairs is not None:
+            force_evals = [float(p) for p in per_run_pairs]
+            interactions = 2.0 * sum(force_evals)
+        elif n_active is not None:
             acts = [float(a) for a in n_active]
             steps_per_run = [float(s) for s in per_run_steps] \
                 if per_run_steps is not None else [float(n_steps)] * len(acts)
@@ -85,9 +96,10 @@ class TelemetryRecorder:
                 raise ValueError(
                     f"per_run_steps (len {len(steps_per_run)}) must match "
                     f"n_active (len {len(acts)})")
-            interactions = 2.0 * sum(
-                st * a * a for st, a in zip(steps_per_run, acts))
+            force_evals = [st * a * a for st, a in zip(steps_per_run, acts)]
+            interactions = 2.0 * sum(force_evals)
         else:
+            force_evals = None
             interactions = 2.0 * n_steps * ensemble * float(n_bodies) ** 2
         energy = modeled_energy(wall_total, n_devices, util)
         report: Dict[str, Any] = {
@@ -97,6 +109,9 @@ class TelemetryRecorder:
             "devices": n_devices,
             **({"n_active": [int(a) for a in n_active]}
                if n_active is not None else {}),
+            **({"force_evals": force_evals,
+                "force_evals_total": sum(force_evals)}
+               if force_evals is not None else {}),
             "steps": n_steps,
             "wall_s": wall_total,
             "steps_per_s": n_steps / wall_total if wall_total > 0 else 0.0,

@@ -27,31 +27,48 @@ import numpy as np  # noqa: E402
 
 from repro.core import hermite  # noqa: E402
 from repro.core.evaluate import make_evaluator  # noqa: E402
+from repro.sim import ensemble as ens  # noqa: E402
 from repro.sim import scenarios  # noqa: E402
 
 HERE = os.path.dirname(os.path.abspath(__file__))
 
-#: The committed golden cases: (filename, scenario recipe).
+#: The committed golden cases: (filename, scenario recipe).  ``mode="block"``
+#: cases run the hierarchical block-timestep engine (B=1 batch) instead of
+#: the fixed-dt scan; their recipe pins (dt_max, n_levels, eta, t_end) and
+#: the recorded ``n_events`` fingerprints the level schedule itself — a
+#: kernel whose timestep quantization drifts fails on the event count before
+#: it fails on positions.
 CASES = {
     "two_body.json": dict(scenario="two_body", n=2, seed=0,
                           dt=1.0 / 256, n_steps=32, order=6, eps=1e-7),
     "plummer16.json": dict(scenario="plummer", n=16, seed=42,
                            dt=1.0 / 256, n_steps=32, order=6, eps=1e-7),
+    "binary_plummer_block.json": dict(
+        scenario="binary_plummer", n=24, seed=1, mode="block",
+        dt_max=1.0 / 64, n_levels=4, t_end=0.0625, eta=0.02, order=6,
+        eps=1e-7),
 }
 
 
 def integrate(meta: dict):
     state = scenarios.make(meta["scenario"], meta["n"], seed=meta["seed"])
+    if meta.get("mode") == "block":
+        batched, carry = ens.evolve_ensemble_block(
+            [state], t_end=meta["t_end"], dt_max=meta["dt_max"],
+            n_levels=meta["n_levels"], eta=meta["eta"], order=meta["order"],
+            eps=meta["eps"], impl="fp64")
+        out = jax.tree_util.tree_map(lambda x: x[0], batched)
+        return state, out, int(carry.n_events[0])
     ev = make_evaluator(precision="fp64", order=meta["order"],
                         eps=meta["eps"])
     out = hermite.evolve_scan(state, ev, n_steps=meta["n_steps"],
                               dt=meta["dt"], order=meta["order"])
-    return state, out
+    return state, out, None
 
 
 def main():
     for fname, meta in CASES.items():
-        state, out = integrate(meta)
+        state, out, n_events = integrate(meta)
         doc = {
             "meta": {**meta, "generator": "tests/golden/regen.py",
                      "evaluator": "fp64 golden (kernels.ref at x64)"},
@@ -64,10 +81,14 @@ def main():
                 0.5 * out.mass * jnp.sum(out.vel**2, axis=1)
                 + 0.5 * out.mass * out.pot)),
         }
+        if n_events is not None:
+            doc["n_events"] = n_events
         path = os.path.join(HERE, fname)
         with open(path, "w") as f:
             json.dump(doc, f, indent=1)
-        print(f"wrote {path} (t_end={meta['dt'] * meta['n_steps']:.6f})")
+        t_end = meta["t_end"] if "t_end" in meta \
+            else meta["dt"] * meta["n_steps"]
+        print(f"wrote {path} (t_end={t_end:.6f})")
 
 
 if __name__ == "__main__":
