@@ -7,11 +7,21 @@ Three fast probes, one JSON artifact:
    per-scenario processes;
 3. a **stepper sweep** on ``binary_plummer`` (N=256, matched ``t_end``):
    ``fixed`` / ``adaptive`` / ``block`` through the driver, recording
-   steps/s, interactions/s, |dE/E| and the *measured* per-run
-   force-evaluation counts — the block stepper's acceptance metric
-   (same-or-better energy error than shared-adaptive lockstep at >= 2x
-   fewer force evaluations; the block row runs at half the adaptive eta,
-   i.e. the matched-error operating point).
+   steps/s, interactions/s, wall time per event/step, |dE/E| and the
+   *measured* per-run force-evaluation counts — the block stepper's
+   acceptance metric (same-or-better energy error than shared-adaptive
+   lockstep at >= 2x fewer force evaluations; the block row runs at half
+   the adaptive eta, i.e. the matched-error operating point);
+4. a **compaction sweep** on the same workload (seeds 0-2): the block
+   stepper with ``compaction=none`` (masked full grid, ``pl.when``-skipped
+   i-blocks still enqueued) vs ``compaction=gather`` (active targets
+   gathered to a dense block-aligned buffer, grid shrunk to the live
+   block).  Both runs are bit-for-bit identical physics, so the rows
+   isolate the *launch* cost: grid tiles per macro step (bar: >= 2x fewer)
+   and median wall per event (bar: no worse; >= 1.5x better on this
+   workload, whose mean active fraction is well under 25%).  Wall time is
+   taken from the median diag chunk so first-chunk compilation does not
+   pollute the ratio.
 
 The consolidated ``BENCH_ci.json`` is written at the repo root; the CI
 ``bench-smoke`` job uploads it as a workflow artifact on every push, so
@@ -37,17 +47,23 @@ SEED = 0
 
 OUT_PATH = os.path.join(common.REPO, "BENCH_ci.json")
 
+#: diag chunk length shared by the sweep template and the per-event math
+#: (the median chunk wall / DIAG_EVERY is the compile-free wall per event)
+DIAG_EVERY = 64
+
 _STEPPER = """
 from repro.sim import driver
 r = driver.run(driver.SimConfig(scenario={scenario!r}, n={n}, seed={seed},
                                 t_end={t_end}, stepper={stepper!r}, {extra}
-                                impl="xla", diag_every=64))
+                                impl="xla", diag_every={diag_every}))
 print("WALL", r["wall_s"])
 print("STEPS", r["steps"])
 print("STEPS_PER_S", r["steps_per_s"])
 print("PAIRS_PER_S", r["interactions_per_s"])
 print("FORCE_EVALS", r["force_evals_total"])
 print("DE_REL", r["de_rel"])
+print("MEDIAN_CHUNK", r["step_wall_s"]["median"])
+print("GRID_TILES", r.get("grid_tiles_total", 0.0))
 """
 
 #: Per-stepper extra SimConfig fields.  The block row halves eta: block
@@ -66,12 +82,18 @@ def stepper_sweep(quick: bool = False):
     for stepper, extra in STEPPER_CONFIGS.items():
         out = common.run_subprocess(_STEPPER.format(
             scenario=SCENARIO, n=N, seed=SEED, t_end=t_end, stepper=stepper,
-            extra=extra))
+            extra=extra, diag_every=DIAG_EVERY))
+        steps = int(common.stdout_field(out, "STEPS"))
+        wall = common.stdout_field(out, "WALL")
         rows.append({
             "stepper": stepper,
             "scenario": SCENARIO, "n": N, "t_end": t_end, "seed": SEED,
-            "wall_s": round(common.stdout_field(out, "WALL"), 2),
-            "steps": int(common.stdout_field(out, "STEPS")),
+            "wall_s": round(wall, 2),
+            "steps": steps,
+            # median diag chunk / DIAG_EVERY: the compile-free per-event
+            # wall, same protocol as the compaction sweep's ratio
+            "wall_per_event_s": round(
+                common.stdout_field(out, "MEDIAN_CHUNK") / DIAG_EVERY, 6),
             "steps_per_s": round(common.stdout_field(out, "STEPS_PER_S"), 1),
             "interactions_per_s":
                 f"{common.stdout_field(out, 'PAIRS_PER_S'):.3e}",
@@ -90,8 +112,76 @@ def stepper_sweep(quick: bool = False):
               f"{'PASS' if ratio >= 2.0 and matched else 'FAIL'})")
     common.emit("stepper_modes", rows,
                 ["stepper", "scenario", "n", "t_end", "wall_s", "steps",
-                 "steps_per_s", "interactions_per_s", "force_evals",
-                 "de_rel"])
+                 "wall_per_event_s", "steps_per_s", "interactions_per_s",
+                 "force_evals", "de_rel"])
+    return rows
+
+
+#: The compaction A/B: identical physics (bit-for-bit), different launch.
+#: block_i=32 gives the 256-particle grid 8 i-tiles for compaction to drop;
+#: DIAG_EVERY-event chunks make the median chunk a compile-free wall sample.
+_COMPACTION_EXTRA = ("eta=0.01, dt_max=0.0625, n_levels=12, "
+                     "compaction={compaction!r}, block_i=32, block_j=256,")
+
+
+def compaction_sweep(quick: bool = False):
+    """Masked vs compacted block stepper on ``binary_plummer`` N=256.
+
+    Acceptance bars (printed, recorded in the rows): >= 2x fewer grid tiles
+    per macro step, median wall per event no worse — and >= 1.5x better
+    here, where the mean active fraction sits well under 25% (the hardening
+    binary owns most events).
+    """
+    rows = []
+    t_end = T_END / 2 if quick else T_END
+    seeds = (SEED,) if quick else (0, 1, 2)
+    for seed in seeds:
+        by = {}
+        for compaction in ("none", "gather"):
+            extra = _COMPACTION_EXTRA.format(compaction=compaction)
+            out = common.run_subprocess(_STEPPER.format(
+                scenario=SCENARIO, n=N, seed=seed, t_end=t_end,
+                stepper="block", extra=extra, diag_every=DIAG_EVERY))
+            events = int(common.stdout_field(out, "STEPS"))
+            by[compaction] = {
+                "events": events,
+                "wall_s": common.stdout_field(out, "WALL"),
+                # median diag chunk: excludes the compile chunk
+                "wall_per_event_s":
+                    common.stdout_field(out, "MEDIAN_CHUNK") / DIAG_EVERY,
+                "grid_tiles": common.stdout_field(out, "GRID_TILES"),
+                "force_evals": common.stdout_field(out, "FORCE_EVALS"),
+                "de_rel": common.stdout_field(out, "DE_REL"),
+            }
+        none, gather = by["none"], by["gather"]
+        # both runs share the event schedule, so totals compare directly
+        tiles_ratio = none["grid_tiles"] / gather["grid_tiles"]
+        speedup = none["wall_per_event_s"] / gather["wall_per_event_s"]
+        active_frac = none["force_evals"] / (none["events"] * N * N)
+        ok = (tiles_ratio >= 2.0 and speedup >= 1.0
+              and (active_frac > 0.25 or speedup >= 1.5))
+        print(f"# compaction seed={seed}: {tiles_ratio:.1f}x fewer tiles, "
+              f"{speedup:.1f}x wall/event, active_frac={active_frac:.3f} "
+              f"(bars: >=2x tiles, >=1x wall, >=1.5x at <=25% active -> "
+              f"{'PASS' if ok else 'FAIL'})")
+        rows.append({
+            "scenario": SCENARIO, "n": N, "t_end": t_end, "seed": seed,
+            "events": none["events"],
+            "wall_per_event_none_s": round(none["wall_per_event_s"], 6),
+            "wall_per_event_gather_s": round(gather["wall_per_event_s"], 6),
+            "speedup": round(speedup, 2),
+            "tiles_none": none["grid_tiles"],
+            "tiles_gather": gather["grid_tiles"],
+            "tiles_ratio": round(tiles_ratio, 2),
+            "active_frac": round(active_frac, 4),
+            "de_rel_match": none["de_rel"] == gather["de_rel"],
+            "pass": ok,
+        })
+    common.emit("block_compaction", rows,
+                ["scenario", "n", "t_end", "seed", "events",
+                 "wall_per_event_none_s", "wall_per_event_gather_s",
+                 "speedup", "tiles_none", "tiles_gather", "tiles_ratio",
+                 "active_frac", "de_rel_match", "pass"])
     return rows
 
 
@@ -107,6 +197,7 @@ def run(quick: bool = False, smoke: bool = True):
         "ensemble_throughput": ensemble_throughput.run(smoke=True),
         "mixed_ensemble": mixed_ensemble.run(smoke=True),
         "stepper_modes": stepper_sweep(quick=quick),
+        "block_compaction": compaction_sweep(quick=quick),
     }
     doc["wall_s_total"] = round(time.perf_counter() - t0, 1)
     with open(OUT_PATH, "w") as f:

@@ -1,18 +1,156 @@
 """Evaluator factories: the FP32 force-evaluation stage of the Hermite loop.
 
-``make_evaluator`` builds the single-device evaluator (the paper's one-chip
-configuration); the multi-device strategies live in
-``repro.core.strategies`` and share the same ``Evaluator`` signature.
+``make_block_evaluator`` is the single implementation body: an active-target
+evaluator (per-target activity mask, sources stay full) with an optional
+**compaction** layer that gathers the active targets into a dense,
+block-aligned buffer before launching the kernels.  ``make_evaluator`` — the
+lockstep evaluator used by the fixed/adaptive paths and the paper's one-chip
+configuration — is the all-ones-mask special case of the same body (pinned
+exact by ``test_mask_all_ones_is_identity``).  The multi-device strategies
+live in ``repro.core.strategies`` and share the ``Evaluator`` signature.
+
+Compaction (``compaction="gather"``): at each call the active targets are
+gathered (via a caller-supplied permutation putting active rows first) into
+a buffer of one of a few static capacities (``ops.capacity_buckets``), both
+kernels run on a ``ceil(cap/BI) x N/BJ`` grid instead of ``N/BI x N/BJ``,
+and the outputs scatter back to particle slots.  The capacity bucket is
+picked by a traced index dispatched through ``lax.switch`` over pre-lowered
+instances, so XLA only ever sees static shapes; under ``jax.vmap`` the
+caller must pass the bucket index *unbatched* (``in_axes=None`` — e.g. the
+max active count across the batch) so the switch stays a real branch instead
+of degrading to an execute-all-branches select.
 """
 
 from __future__ import annotations
 
 from typing import Optional
 
+import jax
 import jax.numpy as jnp
 
 from repro.core.hermite import Evaluation, Evaluator
 from repro.kernels import nbody_force, ops
+
+#: compaction modes of the block evaluator
+COMPACTIONS = ("none", "gather")
+
+
+def make_block_evaluator(
+    *,
+    eps: float = 1e-7,
+    order: int = 6,
+    impl: Optional[str] = None,
+    block_i: int = nbody_force.DEFAULT_BLOCK_I,
+    block_j: int = nbody_force.DEFAULT_BLOCK_J,
+    precision: str = "fp32",  # "fp32" (paper device precision) | "fp64" golden
+    compaction: str = "none",
+):
+    """Active-target evaluator for the hierarchical block-timestep scheme.
+
+    Pass 1 computes acc/jerk/potential *on the active targets only* (sources
+    stay full).  The 6th-order snap pass needs the acceleration of every
+    source at the current time; inactive sources were not evaluated, so
+    their Taylor-predicted acceleration ``acc_pred`` (Nitadori & Makino 2008
+    j-particle predictor) substitutes — active sources use the fresh pass-1
+    value.  With an all-ones mask this reduces exactly to the lockstep
+    evaluator (evaluated accelerations are used everywhere).
+
+    Signatures by ``compaction``:
+
+    * ``"none"`` — ``evaluate(pos, vel, acc_pred, mass, mask_t)``: the dense
+      masked launch (inactive i-blocks are ``pl.when``-skipped but their
+      tiles are still enqueued).
+    * ``"gather"`` — ``evaluate(pos, vel, acc_pred, mass, mask_t, perm,
+      cap_idx)``: ``perm`` orders active targets first (``jnp.argsort`` of
+      the negated mask), ``cap_idx`` selects the static capacity bucket
+      (``ops.capacity_buckets(n, block_i)``) — it must bound the true active
+      count, and must be unbatched under ``vmap``.  Output is bit-for-bit
+      the ``"none"`` result: each target row is a row-local reduction over
+      identical source blocks in identical order, whatever i-block it
+      occupies.
+
+    ``precision="fp64"`` is the golden-reference mode (pure-jnp oracle at
+    host precision, no kernel) used for validation and convergence tests;
+    it supports both compaction modes through the same gather/scatter path.
+    """
+    if compaction not in COMPACTIONS:
+        raise ValueError(
+            f"compaction must be one of {COMPACTIONS}; got {compaction!r}")
+
+    # rect1/rect2: the two Hermite passes in rectangular (targets x sources)
+    # form with the activity mask applied — the only layer that differs
+    # between the FP32 kernels and the FP64 oracle.
+    if precision == "fp64":
+        from repro.kernels import ref
+
+        def cast(x):
+            return jnp.asarray(x)
+
+        def rect1(pt, vt, ps, vs, m, mask_c):
+            acc, jerk, pot = ref.acc_jerk_pot_rect(pt, vt, ps, vs, m, eps=eps)
+            m3 = mask_c[:, None]
+            return (jnp.where(m3, acc, 0.0), jnp.where(m3, jerk, 0.0),
+                    jnp.where(mask_c, pot, 0.0))
+
+        def rect2(pt, vt, at, ps, vs, as_, m, mask_c):
+            snp = ref.snap_rect(pt, vt, at, ps, vs, as_, m, eps=eps)
+            return jnp.where(mask_c[:, None], snp, 0.0)
+    else:
+        impl_ = impl or ops.default_impl()
+        kw = dict(eps=eps, block_i=block_i, block_j=block_j, impl=impl_)
+
+        def cast(x):
+            return jnp.asarray(x, jnp.float32)
+
+        def rect1(pt, vt, ps, vs, m, mask_c):
+            return ops.acc_jerk_pot_rect(pt, vt, ps, vs, m, mask_t=mask_c,
+                                         **kw)
+
+        def rect2(pt, vt, at, ps, vs, as_, m, mask_c):
+            return ops.snap_rect(pt, vt, at, ps, vs, as_, m, mask_t=mask_c,
+                                 **kw)
+
+    if compaction == "none":
+
+        def evaluate(pos, vel, acc_pred, mass, mask_t) -> Evaluation:
+            p, v, m = cast(pos), cast(vel), cast(mass)
+            acc, jerk, pot = rect1(p, v, p, v, m, mask_t)
+            if order >= 6:
+                acc_s = jnp.where(mask_t[:, None], acc, cast(acc_pred))
+                snp = rect2(p, v, acc, p, v, acc_s, m, mask_t)
+            else:
+                snp = jnp.zeros_like(acc)
+            return Evaluation(acc=acc, jerk=jerk, snap=snp, pot=pot)
+
+        return evaluate
+
+    def evaluate_gather(pos, vel, acc_pred, mass, mask_t, perm,
+                        cap_idx) -> Evaluation:
+        n = pos.shape[0]
+        caps = ops.capacity_buckets(n, block_i)
+        p, v, m, ap = cast(pos), cast(vel), cast(mass), cast(acc_pred)
+
+        def make_branch(cap: int):
+            def branch(p, v, ap, m, mask_t, perm) -> Evaluation:
+                p_c, v_c, mask_c = ops.compact_targets(perm, cap,
+                                                       p, v, mask_t)
+                acc_c, jerk_c, pot_c = rect1(p_c, v_c, p, v, m, mask_c)
+                acc, jerk, pot = ops.scatter_outputs(perm, cap, n,
+                                                     acc_c, jerk_c, pot_c)
+                if order >= 6:
+                    acc_s = jnp.where(mask_t[:, None], acc, ap)
+                    snp_c = rect2(p_c, v_c, acc_c, p, v, acc_s, m, mask_c)
+                    (snp,) = ops.scatter_outputs(perm, cap, n, snp_c)
+                else:
+                    snp = jnp.zeros_like(acc)
+                return Evaluation(acc=acc, jerk=jerk, snap=snp, pot=pot)
+
+            return branch
+
+        return jax.lax.switch(cap_idx, [make_branch(c) for c in caps],
+                              p, v, ap, m, mask_t, perm)
+
+    return evaluate_gather
 
 
 def make_evaluator(
@@ -24,98 +162,24 @@ def make_evaluator(
     block_j: int = nbody_force.DEFAULT_BLOCK_J,
     precision: str = "fp32",  # "fp32" (paper device precision) | "fp64" golden
 ) -> Evaluator:
-    """Single-device evaluator (Pallas kernel or XLA fallback).
+    """Single-device lockstep evaluator (Pallas kernel or XLA fallback).
+
+    The all-ones-mask specialization of :func:`make_block_evaluator` — the
+    identity the block stepper degenerates to in lockstep, pinned exact by
+    ``test_mask_all_ones_is_identity`` (the kernel's activity column is 1.0
+    either way, so the packed operands are bitwise identical).  The blended
+    snap-source acceleration reduces to the fresh pass-1 value everywhere,
+    so the zero ``acc_pred`` placeholder is never read.
 
     ``precision="fp64"`` is the golden-reference mode (pure-jnp oracle at
     host precision, no kernel) used for validation and convergence tests.
     """
-    if precision == "fp64":
-        from repro.kernels import ref
-
-        def evaluate_golden(pos, vel, mass) -> Evaluation:
-            acc, jerk, pot = ref.acc_jerk_pot_rect(pos, vel, pos, vel, mass, eps=eps)
-            if order >= 6:
-                snp = ref.snap_rect(pos, vel, acc, pos, vel, acc, mass, eps=eps)
-            else:
-                snp = jnp.zeros_like(acc)
-            return Evaluation(acc=acc, jerk=jerk, snap=snp, pot=pot)
-
-        return evaluate_golden
-
-    impl_ = impl or ops.default_impl()
-    kw = dict(eps=eps, block_i=block_i, block_j=block_j, impl=impl_)
+    block_eval = make_block_evaluator(
+        eps=eps, order=order, impl=impl, block_i=block_i, block_j=block_j,
+        precision=precision)
 
     def evaluate(pos, vel, mass) -> Evaluation:
-        f32 = jnp.float32
-        p, v, m = jnp.asarray(pos, f32), jnp.asarray(vel, f32), jnp.asarray(mass, f32)
-        acc, jerk, pot = ops.acc_jerk_pot_rect(p, v, p, v, m, **kw)
-        if order >= 6:
-            snp = ops.snap_rect(p, v, acc, p, v, acc, m, **kw)
-        else:
-            snp = jnp.zeros_like(acc)
-        return Evaluation(acc=acc, jerk=jerk, snap=snp, pot=pot)
-
-    return evaluate
-
-
-# Block evaluator signature: (pos, vel, acc_pred, mass, mask_t) -> Evaluation
-# with per-target activity mask; acc_pred supplies the snap pass's source
-# accelerations for targets that were NOT evaluated this substep.
-def make_block_evaluator(
-    *,
-    eps: float = 1e-7,
-    order: int = 6,
-    impl: Optional[str] = None,
-    block_i: int = nbody_force.DEFAULT_BLOCK_I,
-    block_j: int = nbody_force.DEFAULT_BLOCK_J,
-    precision: str = "fp32",
-):
-    """Active-target evaluator for the hierarchical block-timestep scheme.
-
-    Pass 1 computes acc/jerk/potential *on the active targets only* (sources
-    stay full).  The 6th-order snap pass needs the acceleration of every
-    source at the current time; inactive sources were not evaluated, so
-    their Taylor-predicted acceleration ``acc_pred`` (Nitadori & Makino 2008
-    j-particle predictor) substitutes — active sources use the fresh pass-1
-    value.  With an all-ones mask this reduces exactly to the lockstep
-    evaluator (evaluated accelerations are used everywhere).
-    """
-    if precision == "fp64":
-        from repro.kernels import ref
-
-        def evaluate_golden(pos, vel, acc_pred, mass, mask_t) -> Evaluation:
-            m3 = mask_t[:, None]
-            acc, jerk, pot = ref.acc_jerk_pot_rect(pos, vel, pos, vel, mass,
-                                                   eps=eps)
-            acc = jnp.where(m3, acc, 0.0)
-            jerk = jnp.where(m3, jerk, 0.0)
-            pot = jnp.where(mask_t, pot, 0.0)
-            if order >= 6:
-                acc_s = jnp.where(m3, acc, acc_pred)
-                snp = jnp.where(m3, ref.snap_rect(pos, vel, acc, pos, vel,
-                                                  acc_s, mass, eps=eps), 0.0)
-            else:
-                snp = jnp.zeros_like(acc)
-            return Evaluation(acc=acc, jerk=jerk, snap=snp, pot=pot)
-
-        return evaluate_golden
-
-    impl_ = impl or ops.default_impl()
-    kw = dict(eps=eps, block_i=block_i, block_j=block_j, impl=impl_)
-
-    def evaluate(pos, vel, acc_pred, mass, mask_t) -> Evaluation:
-        f32 = jnp.float32
-        p, v, m = (jnp.asarray(pos, f32), jnp.asarray(vel, f32),
-                   jnp.asarray(mass, f32))
-        acc, jerk, pot = ops.acc_jerk_pot_rect(p, v, p, v, m, mask_t=mask_t,
-                                               **kw)
-        if order >= 6:
-            acc_s = jnp.where(mask_t[:, None], acc,
-                              jnp.asarray(acc_pred, f32))
-            snp = ops.snap_rect(p, v, acc, p, v, acc_s, m, mask_t=mask_t,
-                                **kw)
-        else:
-            snp = jnp.zeros_like(acc)
-        return Evaluation(acc=acc, jerk=jerk, snap=snp, pot=pot)
+        mask = jnp.ones(pos.shape[0], bool)
+        return block_eval(pos, vel, jnp.zeros_like(pos), mass, mask)
 
     return evaluate

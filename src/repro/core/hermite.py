@@ -192,6 +192,46 @@ def block_level_dt(levels, dt_max):
     return dt_max * jnp.exp2(-levels.astype(jnp.result_type(float)))
 
 
+def block_level_occupancy(levels, *, n_levels: int, mask=None):
+    """Per-level occupancy bound: entry ``t`` counts particles at levels >= t.
+
+    A tick of the block schedule activates a particle iff its period divides
+    the tick, i.e. iff its level is at least the tick's threshold level
+    ``n_levels - 1 - trailing_zeros(tick)`` (t_last is always a multiple of
+    the particle's period — promotion is commensurate, demotion lands on
+    doubled-period ticks).  Entry ``t`` of the returned ``(n_levels,)`` vector
+    is therefore the *largest active set any tick with threshold ``t`` can
+    see* — the analytic a-priori bound on the compaction layer's capacity
+    buckets (the engine itself sizes each event's bucket from the tighter
+    *measured* active count; this bound is what a host-side tile scheduler
+    could use before the levels are known on-device, and the property suite
+    asserts it dominates every tick of the schedule).  Entry 0 (every
+    particle) is the macro-boundary synchronization.
+
+    ``mask`` (optional bool ``(N,)``) restricts the count to real particles,
+    excluding zero-mass padding rows.
+    """
+    lev = levels[None, :] >= jnp.arange(n_levels, dtype=levels.dtype)[:, None]
+    if mask is not None:
+        lev = lev & mask[None, :]
+    return jnp.sum(lev, axis=1).astype(jnp.int32)
+
+
+def auto_n_levels(dt_i, *, dt_max, max_levels: int = 8):
+    """Hierarchy depth that resolves the tightest of the given Aarseth
+    timesteps, clamped to ``[1, max_levels]``.
+
+    ``--levels auto`` sizes each ensemble member's hierarchy from its
+    *initial* dt distribution instead of a fixed CLI value: the finest level
+    needed is ``ceil(log2(dt_max / min_i dt_i))``, so the returned depth is
+    that level plus one.  Zero-derivative padding rows report ``dt_i =
+    dt_max`` (see :func:`aarseth_dt_particles`) and never deepen the
+    hierarchy.
+    """
+    lev = quantize_block_levels(dt_i, dt_max=dt_max, n_levels=max_levels)
+    return jnp.max(lev) + 1
+
+
 def block_active_mask(levels, k, *, n_levels: int):
     """Active set at fine-substep ``k`` (1-based) of one ``dt_max`` macro-step.
 

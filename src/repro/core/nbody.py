@@ -8,7 +8,6 @@ delegated to the FP32 device kernels (``repro.kernels``).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

@@ -26,7 +26,6 @@ all-pairs summation is order-invariant in the source index.
 
 from __future__ import annotations
 
-import functools
 from typing import Optional, Sequence
 
 import jax

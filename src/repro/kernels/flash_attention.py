@@ -84,8 +84,8 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     @pl.when(ki == nk - 1)
     def _finish():
         bq = acc_ref.shape[0]
-        l = jnp.maximum(l_ref[...], 1e-30)[..., None]
-        out = (acc_ref[...] / l).reshape(bq, groups * head_dim)
+        lsum = jnp.maximum(l_ref[...], 1e-30)[..., None]
+        out = (acc_ref[...] / lsum).reshape(bq, groups * head_dim)
         o_ref[0] = out.astype(o_ref.dtype)
 
 

@@ -174,7 +174,24 @@ def _snap_kernel(tgt_ref, src_ref, tacc_ref, sacc_ref, out_ref, *, eps: float):
         out_ref[...] += act * partial
 
 
+def grid_tiles(n_t: int, n_s: int, block_i: int, block_j: int) -> int:
+    """Number of (i-block, j-block) grid tiles one kernel launch enqueues.
+
+    This is the unit the compaction layer shrinks: a launch over ``n_t``
+    targets costs ``ceil(n_t/BI) * ceil(n_s/BJ)`` tiles whether or not
+    ``pl.when`` predicates some of them away — the Tensix analogue is the
+    host enqueueing a tile descriptor per (i, j) pair.  Gathering the active
+    targets into a dense ``cap``-row buffer replaces ``n_t = N`` with
+    ``n_t = cap`` so the tiles are *not enqueued at all* (telemetry reports
+    this count per run as ``grid_tiles``).
+    """
+    return -(-n_t // block_i) * -(-n_s // block_j)
+
+
 def _grid_specs(n_t: int, n_s: int, block_i: int, block_j: int):
+    # n_t is independent of n_s (rectangular contract): the compaction layer
+    # exploits exactly this by shrinking the target extent to the gathered
+    # active block while sources stay full.
     grid = (n_t // block_i, n_s // block_j)
     tgt_spec = pl.BlockSpec((block_i, 8), lambda i, j: (i, 0))
     src_spec = pl.BlockSpec((8, block_j), lambda i, j: (0, j))

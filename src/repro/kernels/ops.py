@@ -38,7 +38,6 @@ or interpreted) over a leading batch axis — the ensemble engine's path.
 
 from __future__ import annotations
 
-import math
 from functools import partial
 
 import jax
@@ -105,6 +104,75 @@ def _mask_rows(mask_t, *arrays):
     """Zero the rows of each array where the target mask is inactive."""
     m = jnp.asarray(mask_t, arrays[0].dtype)
     return tuple(a * (m[:, None] if a.ndim == 2 else m) for a in arrays)
+
+
+# --------------------------------------------------------------------------
+# active-target compaction (gather/scatter around the rect kernels)
+# --------------------------------------------------------------------------
+# The block-timestep engine's activity mask lets the kernels *skip* inactive
+# i-blocks, but the grid is still launched at the full N/BI target extent.
+# Compaction converts the skipped work into launches that never happen:
+# gather the active targets into a dense, block-aligned buffer of one of a
+# few static capacities, run the rect kernels on a ceil(cap/BI) x N/BJ grid
+# (sources stay full, so physics is unchanged), and scatter the outputs back
+# to their particle slots.  Every per-target output row is a row-local sum
+# over the same source blocks in the same order, so the compacted result is
+# bit-for-bit the masked dense result (tests/test_compaction.py).
+
+
+def capacity_buckets(n: int, block_i: int) -> tuple:
+    """Static capacity schedule for ``n`` targets: block-aligned powers of
+    two ``(BI, 2*BI, 4*BI, ..., ceil(n/BI)*BI)``.
+
+    Each event picks the smallest bucket holding its active count (see
+    :func:`bucket_index`) and dispatches via ``lax.switch`` over kernels
+    pre-lowered at these sizes — XLA only ever sees static target extents.
+    """
+    n_pad = _round_up(n, block_i)
+    caps = []
+    c = block_i
+    while c < n_pad:
+        caps.append(c)
+        c *= 2
+    caps.append(n_pad)
+    return tuple(caps)
+
+
+def bucket_index(n_active, caps) -> jax.Array:
+    """Index of the smallest capacity bucket with ``caps[i] >= n_active``.
+
+    ``n_active`` may be traced; ``caps`` is the static ascending schedule
+    from :func:`capacity_buckets` (its last entry is ``>= n``, so the result
+    is always in range — buckets can never underestimate the active count).
+    """
+    return jnp.searchsorted(jnp.asarray(caps, jnp.int32),
+                            jnp.asarray(n_active, jnp.int32), side="left")
+
+
+def compact_targets(perm, cap: int, *rows):
+    """Gather the first ``cap`` permuted rows of each per-target array.
+
+    ``perm`` puts active rows first (e.g. ``jnp.argsort(~mask)``), so with
+    ``cap >= n_active`` the gathered buffer holds every active target
+    followed by inactive fill rows (whose outputs the activity mask zeroes).
+    ``cap`` is static — each capacity bucket is its own lowered computation.
+    """
+    idx = perm[: min(cap, perm.shape[0])]
+    return tuple(r[idx] for r in rows)
+
+
+def scatter_outputs(perm, cap: int, n: int, *outs):
+    """Scatter compacted kernel outputs back to their particle slots.
+
+    Rows outside the gathered set stay exactly zero — the same contract as
+    the masked dense evaluation (inactive targets return exact zeros), so
+    ``scatter_outputs`` after :func:`compact_targets` is the identity on
+    active rows and zero elsewhere.
+    """
+    idx = perm[: min(cap, perm.shape[0])]
+    return tuple(
+        jnp.zeros((n,) + o.shape[1:], o.dtype).at[idx].set(o) for o in outs
+    )
 
 
 @partial(jax.jit, static_argnames=("eps", "block_i", "block_j", "impl"))

@@ -18,10 +18,15 @@ on CPU).  Mixed-run telemetry counts interactions with each run's
 ``--stepper {fixed,adaptive,block}`` selects the timestep mode:
 ``fixed`` (``--dt``), ``adaptive`` (shared Aarseth lockstep, capped at
 ``--dt-max``), or ``block`` (hierarchical per-particle power-of-two levels,
-``--dt-max`` x ``--levels``; see docs/ensembles.md).  Telemetry reports the
-*measured* per-run force-evaluation counts in every mode — in block mode
+``--dt-max`` x ``--levels``; ``--levels auto`` sizes the hierarchy from the
+initial Aarseth dt distribution; see docs/ensembles.md).  Telemetry reports
+the *measured* per-run force-evaluation counts in every mode — in block mode
 only the active targets of each event are evaluated, so the count is far
 below ``steps * N**2`` on scenarios with a wide timestep dynamic range.
+``--compaction gather`` additionally gathers each event's active targets
+into a dense block-aligned buffer so the kernel grid *shrinks* to the live
+block instead of masking it — telemetry then shows ``grid_tiles`` falling
+with the active set (``--block-i/--block-j`` tune the tile shape).
 
 Each invocation emits a one-line summary plus a JSON telemetry report
 (wall time, steps/s, interactions/s, modeled energy/EDP, per-run energy
@@ -82,9 +87,23 @@ def main(argv=None):
                          "else adaptive)")
     ap.add_argument("--dt-max", type=float, default=0.0625,
                     help="coarsest timestep (adaptive cap / block level 0)")
-    ap.add_argument("--levels", type=int, default=8,
+    ap.add_argument("--levels", default="8",
                     help="block-timestep hierarchy depth (finest step is "
-                         "dt_max / 2**(levels-1))")
+                         "dt_max / 2**(levels-1)), or 'auto' to size each "
+                         "member from its initial Aarseth dt distribution "
+                         "(clamped to [1, 8])")
+    ap.add_argument("--compaction", default="none",
+                    choices=("none", "gather"),
+                    help="block stepper only: gather each event's active "
+                         "targets into a dense block-aligned buffer and "
+                         "launch the kernels on the shrunk grid (bit-for-bit "
+                         "the masked result, far fewer tiles enqueued)")
+    ap.add_argument("--block-i", type=int, default=None,
+                    help="kernel target-tile rows (block stepper; default: "
+                         "kernel's own — small N wants a smaller tile so "
+                         "compaction has tiles to drop)")
+    ap.add_argument("--block-j", type=int, default=None,
+                    help="kernel source-tile columns (block stepper)")
     ap.add_argument("--eta", type=float, default=0.02)
     ap.add_argument("--order", type=int, default=6, choices=(4, 6))
     ap.add_argument("--strategy", default="single",
@@ -125,6 +144,16 @@ def main(argv=None):
     if args.w0 is not None:
         params["w0"] = args.w0
 
+    if args.levels == "auto":
+        n_levels = None
+    else:
+        try:
+            n_levels = int(args.levels)
+        except ValueError:
+            raise SystemExit(
+                f"--levels expects an integer or 'auto', got {args.levels!r}"
+            ) from None
+
     # one token => homogeneous path (name:N is shorthand for --n N, so the
     # report keeps the real scenario label); several tokens => mixed padded
     # ensemble, bare names inheriting --n
@@ -153,8 +182,9 @@ def main(argv=None):
     cfg = driver.SimConfig(
         scenario=scenario_name, n=n_arg, seed=args.seed,
         ensemble=args.ensemble, t_end=args.t_end, dt=args.dt,
-        stepper=args.stepper, dt_max=args.dt_max, n_levels=args.levels,
-        eta=args.eta,
+        stepper=args.stepper, dt_max=args.dt_max, n_levels=n_levels,
+        compaction=args.compaction, block_i=args.block_i,
+        block_j=args.block_j, eta=args.eta,
         order=args.order, strategy=args.strategy, devices=args.devices,
         impl=args.impl, kernel=args.kernel, mix=mix, pad=pad,
         diag_every=args.diag_every, scenario_params=params,
@@ -182,7 +212,9 @@ def main(argv=None):
           f"steps/s={report['steps_per_s']:.1f} "
           f"pairs/s={report['interactions_per_s']:.3e}"
           + (f" force_evals={report['force_evals_total']:.3e}"
-             if "force_evals_total" in report else ""))
+             if "force_evals_total" in report else "")
+          + (f" grid_tiles={report['grid_tiles_total']:.3e}"
+             if "grid_tiles_total" in report else ""))
     print(f"[sim] |dE/E|={report['de_rel']:.3e} "
           f"E_model={report['modeled']['energy_J']:.1f}J "
           f"EDP={report['modeled']['edp_Js']:.1f}Js")

@@ -53,7 +53,11 @@ class SimConfig:
     stepper: Optional[str] = None    # "fixed" | "adaptive" | "block"
     #   (None infers: "fixed" when dt is given, else "adaptive")
     dt_max: float = 0.0625           # coarsest step (adaptive + block)
-    n_levels: int = 8                # block-timestep hierarchy depth
+    n_levels: Optional[int] = 8      # block hierarchy depth (None => auto:
+    #   per-member from the initial Aarseth dt distribution, clamped [1, 8])
+    compaction: str = "none"         # "none" | "gather" (block stepper only)
+    block_i: Optional[int] = None    # kernel tile shape override (block
+    block_j: Optional[int] = None    #   stepper; None => kernel defaults)
     eta: float = 0.02
     order: int = 6
     strategy: str = "single"
@@ -87,6 +91,19 @@ class SimConfig:
             raise ValueError(
                 f"stepper={stepper!r} chooses its own timestep; dt={self.dt} "
                 "would be ignored (use dt_max to cap it)")
+        if self.compaction != "none" and stepper != "block":
+            raise ValueError(
+                f"compaction={self.compaction!r} only applies to the block "
+                "stepper (the lockstep modes evaluate every target)")
+        if (self.block_i or self.block_j) and stepper != "block":
+            raise ValueError(
+                "block_i/block_j tile overrides only reach the block "
+                f"stepper's kernels; stepper={stepper!r} would silently "
+                "run at the kernel defaults")
+        if self.n_levels is None and stepper != "block":
+            raise ValueError(
+                "n_levels=None (--levels auto) sizes the block hierarchy; "
+                f"stepper={stepper!r} has no levels to size")
         return stepper
 
     def meta(self) -> Dict[str, Any]:
@@ -99,7 +116,8 @@ class SimConfig:
         }
         if meta["stepper"] == "block":
             meta["dt_max"] = self.dt_max
-            meta["n_levels"] = self.n_levels
+            meta["n_levels"] = self.n_levels    # None until auto-resolved
+            meta["compaction"] = self.compaction
         if meta["stepper"] == "adaptive":
             meta["dt_max"] = self.dt_max
         if self.mix is not None:
@@ -290,7 +308,7 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
                                  de_rel=float(np.abs((e - e0) / e0).max()))
 
     stepper = cfg.resolved_stepper()
-    per_run_steps = None
+    per_run_steps = per_run_tiles = None
     if stepper == "fixed":
         n_steps = max(1, int(round(cfg.t_end / cfg.dt)))
         done = 0
@@ -329,14 +347,23 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
     else:
         # hierarchical block timesteps: each member's active block is
         # evaluated per event; the engine *measures* its pairwise work
+        # and the kernel grid tiles it launched (what compaction shrinks)
+        n_levels = cfg.n_levels
+        if n_levels is None:  # auto: size each member's hierarchy from its
+            # initial Aarseth dt distribution, run the batch at the deepest
+            per_member = _auto_levels(cfg, batched)
+            n_levels = max(per_member)
+            recorder.meta["n_levels"] = n_levels
+            recorder.meta["n_levels_auto"] = per_member
         carry = None
         done = 0
         while done * cfg.diag_every < MAX_STEPS:
             t0 = time.perf_counter()
             batched, carry = ens.ensemble_run_block(
                 batched, t_end=cfg.t_end, n_events=cfg.diag_every,
-                dt_max=cfg.dt_max, n_levels=cfg.n_levels, carry=carry,
-                eta=cfg.eta, **kw)
+                dt_max=cfg.dt_max, n_levels=n_levels, carry=carry,
+                eta=cfg.eta, compaction=cfg.compaction,
+                block_i=cfg.block_i, block_j=cfg.block_j, **kw)
             jax.block_until_ready(batched.pos)
             done += 1
             snapshot(int(np.max(np.asarray(carry.n_events))),
@@ -347,6 +374,7 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
         per_run_steps = [int(c) for c in np.asarray(carry.n_events)]
         t_final = float(np.min(np.asarray(batched.time)))
         per_run_pairs = [float(p) for p in np.asarray(carry.n_pairs)]
+        per_run_tiles = [float(t) for t in np.asarray(carry.n_tiles)]
 
     e1 = np.asarray(ens.batched_total_energy(batched), np.float64)
     de = np.abs((e1 - e0) / e0)
@@ -354,12 +382,24 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
     runs = [{**runs_meta[i], "e0": float(e0[i]), "e1": float(e1[i]),
              "de_rel": float(de[i]), "virial_ratio": float(virial[i]),
              "force_evals": per_run_pairs[i],
-             **({"steps": per_run_steps[i]} if per_run_steps else {})}
+             **({"steps": per_run_steps[i]} if per_run_steps else {}),
+             **({"grid_tiles": per_run_tiles[i]} if per_run_tiles else {})}
             for i in range(b)]
     return recorder.finalize(
         n_bodies=n_max, ensemble=b, n_devices=max(cfg.devices, 1),
         n_active=n_active, per_run_steps=per_run_steps,
-        per_run_pairs=per_run_pairs,
+        per_run_pairs=per_run_pairs, per_run_tiles=per_run_tiles,
         extra={"e0": e0.tolist(), "e1": e1.tolist(),
                "de_rel": float(de.max()), "t_final": t_final,
                "runs": runs})
+
+
+def _auto_levels(cfg: SimConfig, batched) -> list:
+    """Per-member block hierarchy depth from the initial (post-initialize)
+    Aarseth dt distribution, clamped to [1, 8] (``--levels auto``)."""
+    dt_i = jax.vmap(
+        lambda s: hermite.aarseth_dt_particles(s, eta=cfg.eta,
+                                               dt_max=cfg.dt_max))(batched)
+    depth = jax.vmap(
+        lambda d: hermite.auto_n_levels(d, dt_max=cfg.dt_max))(dt_i)
+    return [int(d) for d in np.asarray(depth)]

@@ -23,7 +23,12 @@ dimension), or the FP64 golden reference (``impl="fp64"``).
 (``ensemble_run_adaptive``), and hierarchical block timesteps
 (``ensemble_run_block``) — per-particle power-of-two levels inside each
 member, only the active block evaluated per substep, measured per-run
-force-evaluation counts returned for telemetry.
+force-evaluation and grid-tile counts returned for telemetry.  The block
+stepper's ``compaction="gather"`` mode additionally gathers each event's
+active targets into a dense block-aligned buffer (static capacity buckets,
+``lax.switch``-dispatched) so the kernel grid *shrinks* to the live block
+instead of masking it — bit-for-bit identical physics, far fewer tiles
+launched (see ``core.evaluate.make_block_evaluator``).
 
 **Masking (ragged batches).** Heterogeneous mixes are packed by
 ``repro.sim.scenarios.build_padded`` into a rectangular ``(B, N_max, ...)``
@@ -50,7 +55,7 @@ from repro.core.evaluate import make_block_evaluator, make_evaluator
 from repro.core.hermite import Evaluation
 from repro.core.nbody import ParticleState
 from repro.core.strategies import STRATEGIES, make_batch_mesh
-from repro.kernels import ops
+from repro.kernels import nbody_force, ops
 
 BATCH_AXIS = "ensemble"
 #: vmap-safe evaluation paths (the Pallas kernel batches by grid extension)
@@ -373,14 +378,17 @@ def ensemble_run_adaptive(
 # --------------------------------------------------------------------------
 # hierarchical block-timestep engine (per-particle power-of-two levels)
 # --------------------------------------------------------------------------
-def _block_inner_evaluator(order: int, eps: float, impl: str):
+def _block_inner_evaluator(order: int, eps: float, impl: str,
+                           compaction: str, block_i: int, block_j: int):
+    kw = dict(order=order, eps=eps, compaction=compaction,
+              block_i=block_i, block_j=block_j)
     if impl == "fp64":
-        return make_block_evaluator(precision="fp64", order=order, eps=eps)
+        return make_block_evaluator(precision="fp64", **kw)
     if impl not in ENSEMBLE_IMPLS:
         raise ValueError(
             f"ensemble impl must be one of {ENSEMBLE_IMPLS} (the vmappable "
             f"evaluation paths); got {impl!r}")
-    return make_block_evaluator(order=order, eps=eps, impl=impl)
+    return make_block_evaluator(impl=impl, **kw)
 
 
 class BlockCarry(NamedTuple):
@@ -389,7 +397,9 @@ class BlockCarry(NamedTuple):
     ``t_last``/``levels`` are ``(B, N)`` integer ticks / block levels,
     ``dt_macro`` the ``(B,)`` current macro length, ``n_pairs`` the ``(B,)``
     accumulated pairwise force evaluations (per Hermite pass), ``n_events``
-    the ``(B,)`` productive event count.
+    the ``(B,)`` productive event count, ``n_tiles`` the ``(B,)`` accumulated
+    kernel grid tiles launched (both Hermite passes) — the count compaction
+    shrinks while ``n_pairs`` stays the same.
     """
 
     t_last: jax.Array
@@ -397,11 +407,13 @@ class BlockCarry(NamedTuple):
     dt_macro: jax.Array
     n_pairs: jax.Array
     n_events: jax.Array
+    n_tiles: jax.Array
 
 
 @functools.lru_cache(maxsize=64)
 def _block_engine(order: int, eps: float, impl: str, mesh,
-                  eta: float, dt_max: float, n_levels: int):
+                  eta: float, dt_max: float, n_levels: int,
+                  compaction: str, block_i: int, block_j: int):
     """Hierarchical block-timestep engine (Aarseth dt -> power-of-two levels).
 
     Time is organized in **macro-steps** of ``dt_macro = min(dt_max,
@@ -427,8 +439,10 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
     requantized from scratch, and per-member diagnostics (energy, virial)
     are exact.
     """
-    bev = _block_inner_evaluator(order, eps, impl)
+    bev = _block_inner_evaluator(order, eps, impl, compaction,
+                                 block_i, block_j)
     n_sub = 2 ** (n_levels - 1)
+    n_passes = 2 if order >= 6 else 1
 
     def _macro_init(s, dt_macro):
         """Fresh levels for a member synchronized at its macro start."""
@@ -446,7 +460,12 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
         t_last = jnp.zeros(s.pos.shape[0], jnp.int32)
         return t_last, levels, dt_macro
 
-    def member_event(s, t_last, levels, dt_macro, na, t_end):
+    # One event is split in three stages so the compaction layer can pick its
+    # capacity bucket *between* the per-member vmaps: the bucket index must
+    # be shared across the batch (an unbatched lax.switch operand stays a
+    # real branch under vmap; a batched one degrades to running every
+    # branch), so it is the max active count over the live members.
+    def member_pre(s, t_last, levels, dt_macro, na, t_end):
         dtype = s.pos.dtype
         live = (t_end - s.time) > 0.0
         real = jnp.arange(s.pos.shape[0]) < na
@@ -459,7 +478,16 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
 
         xp, vp = hermite.predict(s, h)
         ap = hermite.predict_acc(s, h)
-        ev = bev(xp, vp, ap, s.mass, active)
+        # active targets first (argsort of the negated mask); row order
+        # within the gathered buffer is irrelevant to the row-local kernel
+        # math, the permutation only densifies the launch
+        perm = jnp.argsort(~active, stable=True)
+        return live, t_next, active, h, xp, vp, ap, perm
+
+    def member_post(s, ev, live, t_next, active, h, t_last, levels,
+                    dt_macro, na, t_end):
+        dtype = s.pos.dtype
+        period = jnp.asarray(n_sub, jnp.int32) >> levels
         # an active particle last corrected exactly its own step ago, so the
         # prediction horizon IS the corrector interval
         x1, v1, crk = hermite.correct(s, ev, h, order=order)
@@ -508,15 +536,47 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
     @functools.partial(jax.jit, static_argnames=("n_events",))
     def run(batched, carry: BlockCarry, n_active, t_end, n_events: int):
         batched, n_active = _constrain((batched, n_active), mesh)
+        n = batched.pos.shape[1]
+        # counter dtype: host precision when x64 is on (exact integer adds
+        # far past float32's 2**24 window), silently float32 otherwise
+        count_dtype = jax.dtypes.canonicalize_dtype(jnp.float64)
+        j_tiles = nbody_force.grid_tiles(1, n, 1, block_j)
+        if compaction == "gather":
+            caps = ops.capacity_buckets(n, block_i)
+            # tiles enqueued per event at each capacity (both Hermite passes)
+            tiles_by_cap = jnp.asarray(
+                [(c // block_i) * j_tiles * n_passes for c in caps],
+                count_dtype)
+        else:
+            # the masked dense launch always enqueues the full grid, however
+            # many i-blocks pl.when predicates away
+            full_tiles = nbody_force.grid_tiles(n, n, block_i, block_j) \
+                * n_passes
 
         def body(acc, _):
             s, c = acc
-            s1, t_last, levels, dt_macro, dp, live = jax.vmap(
-                member_event, in_axes=(0, 0, 0, 0, 0, None))(
+            live, t_next, active, h, xp, vp, ap, perm = jax.vmap(
+                member_pre, in_axes=(0, 0, 0, 0, 0, None))(
                     s, c.t_last, c.levels, c.dt_macro, n_active, t_end)
+            if compaction == "gather":
+                n_act = jnp.sum(active, axis=1).astype(jnp.int32)
+                cap_idx = ops.bucket_index(
+                    jnp.max(jnp.where(live, n_act, 0)), caps)
+                ev = jax.vmap(bev, in_axes=(0, 0, 0, 0, 0, 0, None))(
+                    xp, vp, ap, s.mass, active, perm, cap_idx)
+                tiles_event = tiles_by_cap[cap_idx]
+            else:
+                ev = jax.vmap(bev)(xp, vp, ap, s.mass, active)
+                tiles_event = jnp.asarray(full_tiles, count_dtype)
+            s1, t_last, levels, dt_macro, dp, live = jax.vmap(
+                member_post, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None))(
+                    s, ev, live, t_next, active, h, c.t_last, c.levels,
+                    c.dt_macro, n_active, t_end)
             c1 = BlockCarry(t_last=t_last, levels=levels, dt_macro=dt_macro,
                             n_pairs=c.n_pairs + dp,
-                            n_events=c.n_events + live.astype(jnp.int32))
+                            n_events=c.n_events + live.astype(jnp.int32),
+                            n_tiles=c.n_tiles + jnp.where(live, tiles_event,
+                                                          0.0))
             return (_constrain(s1, mesh), c1), None
 
         (batched, carry), _ = jax.lax.scan(body, (batched, carry), None,
@@ -528,10 +588,14 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
         t_last, levels, dt_macro = jax.vmap(
             member_init, in_axes=(0, 0, None))(batched, n_active, t_end)
         b = t_last.shape[0]
+        # counters accumulate at host precision (exact integer adds far past
+        # float32's 2**24 window; silently float32 when x64 is disabled)
+        count_dtype = jax.dtypes.canonicalize_dtype(jnp.float64)
         return BlockCarry(
             t_last=t_last, levels=levels, dt_macro=dt_macro,
-            n_pairs=jnp.zeros(b, batched.pos.dtype),
-            n_events=jnp.zeros(b, jnp.int32))
+            n_pairs=jnp.zeros(b, count_dtype),
+            n_events=jnp.zeros(b, jnp.int32),
+            n_tiles=jnp.zeros(b, count_dtype))
 
     return init, run
 
@@ -549,6 +613,9 @@ def ensemble_run_block(
     order: int = 6,
     eps: float = 1e-7,
     impl: str = "xla",
+    compaction: str = "none",
+    block_i: Optional[int] = None,
+    block_j: Optional[int] = None,
     devices: Optional[Sequence[jax.Device]] = None,
 ):
     """Advance an initialized batch by up to ``n_events`` block events each.
@@ -557,12 +624,27 @@ def ensemble_run_block(
     ``batched.time.min() >= t_end`` (a member's ``time`` advances at its
     macro boundaries).  ``carry.n_pairs`` accumulates the per-run pairwise
     force evaluations actually performed (per Hermite pass) — the measured
-    cost telemetry reports; ``carry.n_events`` counts productive events.
+    cost telemetry reports; ``carry.n_events`` counts productive events;
+    ``carry.n_tiles`` the kernel grid tiles launched (both passes).
+
+    ``compaction="gather"`` gathers each event's active targets into a
+    dense block-aligned buffer sized from a static capacity schedule and
+    launches the kernels on the shrunk ``ceil(cap/BI) x N/BJ`` grid
+    (bit-for-bit the masked dense result; the capacity bucket is shared
+    across the batch, so mixed batches pay for their widest member).
+    ``block_i``/``block_j`` override the kernel tile shape (default: the
+    kernel's own); the compaction win is bounded by ``N / block_i``, so
+    small-N runs want a smaller ``block_i`` than the all-pairs default.
     """
     if n_levels < 1:
         raise ValueError(f"n_levels={n_levels} must be >= 1")
+    # an unknown compaction mode fails in make_block_evaluator (same
+    # ValueError) when the engine is first built — no duplicate check here
     mesh = _batch_mesh(devices)
-    init, run = _block_engine(order, eps, impl, mesh, eta, dt_max, n_levels)
+    init, run = _block_engine(
+        order, eps, impl, mesh, eta, dt_max, n_levels, compaction,
+        block_i or nbody_force.DEFAULT_BLOCK_I,
+        block_j or nbody_force.DEFAULT_BLOCK_J)
     n_active = _as_n_active(batched, n_active)
     t_end_ = jnp.asarray(t_end, batched.pos.dtype)
     if carry is None:
@@ -589,6 +671,9 @@ def evolve_ensemble_block(
     eps: float = 1e-7,
     impl: Optional[str] = None,
     kernel: Optional[str] = None,
+    compaction: str = "none",
+    block_i: Optional[int] = None,
+    block_j: Optional[int] = None,
     devices: Optional[Sequence[jax.Device]] = None,
     n_events: int = 256,
     max_chunks: int = 100_000,
@@ -606,7 +691,8 @@ def evolve_ensemble_block(
     for _ in range(max_chunks):
         batched, carry = ensemble_run_block(
             batched, t_end=t_end, n_events=n_events, dt_max=dt_max,
-            n_levels=n_levels, carry=carry, eta=eta, **kw)
+            n_levels=n_levels, carry=carry, eta=eta, compaction=compaction,
+            block_i=block_i, block_j=block_j, **kw)
         if float(jnp.min(batched.time)) >= t_end:
             break
     return batched, carry

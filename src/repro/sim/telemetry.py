@@ -64,6 +64,7 @@ class TelemetryRecorder:
                  n_active: Optional[List[int]] = None,
                  per_run_steps: Optional[List[int]] = None,
                  per_run_pairs: Optional[List[float]] = None,
+                 per_run_tiles: Optional[List[float]] = None,
                  extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
         """Assemble the JSON-ready report for this run.
 
@@ -80,6 +81,13 @@ class TelemetryRecorder:
         is not ``steps * n_active**2`` — when counts are given they override
         the step-based estimate entirely, and the report carries them as
         ``force_evals`` / ``force_evals_total``.
+
+        ``per_run_tiles`` reports the kernel grid tiles *launched* per run
+        (both Hermite passes) as ``grid_tiles`` / ``grid_tiles_total`` —
+        next to ``force_evals`` this shows whether algorithmic savings
+        reached the launch schedule: the masked block path shrinks
+        ``force_evals`` but launches the full grid every event, the
+        compaction path shrinks both.
         """
         walls = [s.wall_s for s in self.steps]
         wall_total = sum(walls) if walls else time.perf_counter() - self._t0
@@ -112,6 +120,9 @@ class TelemetryRecorder:
             **({"force_evals": force_evals,
                 "force_evals_total": sum(force_evals)}
                if force_evals is not None else {}),
+            **({"grid_tiles": [float(t) for t in per_run_tiles],
+                "grid_tiles_total": float(sum(per_run_tiles))}
+               if per_run_tiles is not None else {}),
             "steps": n_steps,
             "wall_s": wall_total,
             "steps_per_s": n_steps / wall_total if wall_total > 0 else 0.0,

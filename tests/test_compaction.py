@@ -1,0 +1,263 @@
+"""Active-target compaction: gather/scatter primitives, capacity schedule,
+engine equivalence, auto level sizing, and tiles telemetry.
+
+Locks the tentpole contracts of the compaction layer:
+
+* ``scatter_outputs`` after ``compact_targets`` is the identity on active
+  rows and exactly zero on inactive rows (hypothesis-swept);
+* the capacity schedule never underestimates an active count, and the
+  per-level occupancy bound dominates every tick's true active set;
+* ``compaction="gather"`` reproduces ``compaction="none"`` **bit-for-bit**
+  on the committed block golden trajectory, for both FP32 kernels and the
+  FP64 oracle, and launches strictly fewer grid tiles;
+* ``--levels auto`` derives the hierarchy depth from the initial Aarseth dt
+  distribution, clamped to [1, 8];
+* driver/telemetry plumbing (``compaction`` validation, ``grid_tiles``).
+"""
+
+import json
+import os
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hermite
+from repro.core.evaluate import make_block_evaluator, make_evaluator
+from repro.kernels import nbody_force, ops
+from repro.sim import driver, ensemble as ens, scenarios
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "binary_plummer_block.json")
+
+
+# --------------------------------------------------------------------------
+# gather/scatter primitives
+# --------------------------------------------------------------------------
+def test_scatter_gather_identity_basic():
+    rng = np.random.default_rng(0)
+    n = 24
+    x = jnp.asarray(rng.standard_normal((n, 3)))
+    mask = jnp.asarray(rng.uniform(size=n) < 0.4)
+    perm = jnp.argsort(~mask, stable=True)
+    caps = ops.capacity_buckets(n, 8)
+    cap = caps[int(ops.bucket_index(mask.sum(), caps))]
+    (x_c, m_c) = ops.compact_targets(perm, cap, x, mask)
+    (back,) = ops.scatter_outputs(perm, cap, n, x_c * m_c[:, None])
+    m = np.asarray(mask)
+    np.testing.assert_array_equal(np.asarray(back)[m], np.asarray(x)[m])
+    assert not np.asarray(back)[~m].any()
+
+
+def test_scatter_gather_property():
+    """scatter o gather == identity on active rows, zero elsewhere — for any
+    mask, permutation order, and capacity bucket that bounds the count."""
+    pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(0, 2**31 - 1), st.integers(2, 40), st.integers(1, 16))
+    def run(seed, n, block_i):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((n, 3)))
+        mask = jnp.asarray(rng.uniform(size=n) < rng.uniform())
+        caps = ops.capacity_buckets(n, block_i)
+        n_act = int(mask.sum())
+        cap = caps[int(ops.bucket_index(n_act, caps))]
+        assert cap >= n_act  # the bucket bounds the active count
+        perm = jnp.argsort(~mask, stable=True)
+        # every active row lands inside the gathered window
+        assert set(np.asarray(perm[:min(cap, n)])) >= set(np.flatnonzero(np.asarray(mask)))
+        x_c, m_c = ops.compact_targets(perm, cap, x, mask)
+        (back,) = ops.scatter_outputs(perm, cap, n, x_c * m_c[:, None])
+        m = np.asarray(mask)
+        np.testing.assert_array_equal(np.asarray(back)[m], np.asarray(x)[m])
+        assert not np.asarray(back)[~m].any()
+
+    run()
+
+
+# --------------------------------------------------------------------------
+# capacity schedule + occupancy bound
+# --------------------------------------------------------------------------
+def test_capacity_buckets_block_aligned_and_cover():
+    assert ops.capacity_buckets(256, 32) == (32, 64, 128, 256)
+    assert ops.capacity_buckets(24, 8) == (8, 16, 24)
+    assert ops.capacity_buckets(24, 256) == (256,)
+    assert ops.capacity_buckets(100, 16) == (16, 32, 64, 112)
+    for n, bi in ((256, 32), (100, 16), (24, 8), (7, 8)):
+        caps = ops.capacity_buckets(n, bi)
+        assert caps[-1] >= n                      # covers every active count
+        assert all(c % bi == 0 for c in caps)     # block-aligned launches
+
+
+def test_bucket_never_underestimates():
+    """For every possible active count the selected bucket holds it."""
+    for n, bi in ((256, 32), (100, 16), (24, 8)):
+        caps = ops.capacity_buckets(n, bi)
+        idx = np.asarray(ops.bucket_index(jnp.arange(n + 1), caps))
+        chosen = np.asarray(caps)[idx]
+        assert (chosen >= np.arange(n + 1)).all()
+
+
+def test_occupancy_bounds_dominate_schedule():
+    """Entry t of the occupancy vector caps the active set of every tick
+    whose threshold is t — across a simulated block schedule."""
+    rng = np.random.default_rng(3)
+    n_levels, n = 4, 32
+    levels = jnp.asarray(rng.integers(0, n_levels, n), jnp.int32)
+    occ = np.asarray(hermite.block_level_occupancy(levels,
+                                                   n_levels=n_levels))
+    assert occ[0] == n  # macro boundary: everyone
+    n_sub = 2 ** (n_levels - 1)
+    for k in range(1, n_sub + 1):
+        act = np.asarray(hermite.block_active_mask(levels, k,
+                                                   n_levels=n_levels))
+        thresh = n_levels - 1 - (k & -k).bit_length() + 1
+        thresh = max(thresh, 0)
+        assert act.sum() <= occ[thresh]
+    # padding mask excludes fake rows from the bound
+    mask = jnp.arange(n) < 20
+    occ_m = np.asarray(hermite.block_level_occupancy(levels,
+                                                     n_levels=n_levels,
+                                                     mask=mask))
+    assert occ_m[0] == 20 and (occ_m <= occ).all()
+
+
+# --------------------------------------------------------------------------
+# evaluator equivalence (bit-for-bit) and grid accounting
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ("xla", "pallas_interpret"))
+def test_gather_evaluator_bitwise_equals_masked(impl):
+    rng = np.random.default_rng(7)
+    n = 24
+    pos = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+    vel = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+    acc_p = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+    mass = jnp.asarray(rng.uniform(0.1, 1.0, n), jnp.float32)
+    mask = jnp.asarray(rng.uniform(size=n) < 0.3)
+    kw = dict(eps=1e-7, order=6, impl=impl, block_i=8, block_j=128)
+    dense = make_block_evaluator(**kw)(pos, vel, acc_p, mass, mask)
+    perm = jnp.argsort(~mask, stable=True)
+    caps = ops.capacity_buckets(n, 8)
+    cap_idx = ops.bucket_index(mask.sum(), caps)
+    packed = make_block_evaluator(compaction="gather", **kw)(
+        pos, vel, acc_p, mass, mask, perm, cap_idx)
+    for a, b in zip(dense, packed):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_make_evaluator_is_all_ones_block_evaluator():
+    """The folded lockstep factory matches the block body with an all-ones
+    mask exactly (the identity the fold rests on)."""
+    rng = np.random.default_rng(11)
+    n = 16
+    pos = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+    vel = jnp.asarray(rng.standard_normal((n, 3)), jnp.float32)
+    mass = jnp.asarray(rng.uniform(0.1, 1.0, n), jnp.float32)
+    lock = make_evaluator(impl="xla")(pos, vel, mass)
+    blk = make_block_evaluator(impl="xla")(
+        pos, vel, jnp.zeros_like(pos), mass, jnp.ones(n, bool))
+    for a, b in zip(lock, blk):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_grid_tiles_counts():
+    assert nbody_force.grid_tiles(256, 256, 32, 256) == 8
+    assert nbody_force.grid_tiles(32, 256, 32, 256) == 1
+    assert nbody_force.grid_tiles(24, 24, 8, 128) == 3
+    assert nbody_force.grid_tiles(100, 300, 16, 128) == 7 * 3
+
+
+# --------------------------------------------------------------------------
+# engine: the block golden trajectory, bit for bit, with fewer tiles
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ("fp64", "xla", "pallas_interpret"))
+def test_block_golden_gather_bitwise_equals_none(impl):
+    """``compaction=gather`` reproduces the committed block golden
+    trajectory's run **bit-for-bit** vs ``compaction=none`` — same event
+    schedule, same measured pairs, strictly fewer tiles launched."""
+    with open(GOLDEN) as f:
+        m = json.load(f)["meta"]
+    state = scenarios.make(m["scenario"], m["n"], seed=m["seed"])
+    kw = dict(t_end=m["t_end"], dt_max=m["dt_max"], n_levels=m["n_levels"],
+              eta=m["eta"], order=m["order"], eps=m["eps"], impl=impl,
+              block_i=8, block_j=128)
+    dense, c0 = ens.evolve_ensemble_block([state], compaction="none", **kw)
+    packed, c1 = ens.evolve_ensemble_block([state], compaction="gather",
+                                           **kw)
+    assert int(c1.n_events[0]) == int(c0.n_events[0])
+    assert float(c1.n_pairs[0]) == float(c0.n_pairs[0])
+    assert float(c1.n_tiles[0]) < float(c0.n_tiles[0])
+    np.testing.assert_array_equal(np.asarray(packed.pos),
+                                  np.asarray(dense.pos))
+    np.testing.assert_array_equal(np.asarray(packed.vel),
+                                  np.asarray(dense.vel))
+
+
+def test_block_gather_padded_composes_with_n_active():
+    """Compaction composes with the zero-mass padding mask: the padded
+    member follows the identical schedule/trajectory, and padding rows are
+    never gathered as active targets."""
+    kw = dict(t_end=0.03125, dt_max=1 / 64, n_levels=4, impl="fp64",
+              compaction="gather", block_i=8, block_j=128)
+    st = scenarios.make("binary_plummer", 24, seed=1)
+    alone, c_alone = ens.evolve_ensemble_block([st], **kw)
+    padded, n_active = scenarios.build_padded(
+        [scenarios.Scenario(name="binary_plummer", n=24, seed=1)], n_max=32)
+    pad_out, c_pad = ens.evolve_ensemble_block(padded, n_active=n_active,
+                                               **kw)
+    assert int(c_pad.n_events[0]) == int(c_alone.n_events[0])
+    assert float(c_pad.n_pairs[0]) == float(c_alone.n_pairs[0])
+    np.testing.assert_allclose(np.asarray(pad_out.pos[0, :24]),
+                               np.asarray(alone.pos[0]), rtol=0, atol=1e-12)
+    assert not np.asarray(pad_out.vel[0, 24:]).any()
+    assert not np.asarray(pad_out.acc[0, 24:]).any()
+
+
+# --------------------------------------------------------------------------
+# auto level sizing
+# --------------------------------------------------------------------------
+def test_auto_n_levels_clamped_and_resolving():
+    dt_max = 0.0625
+    # coarse system: one level suffices
+    assert int(hermite.auto_n_levels(jnp.asarray([0.0625, 0.5]),
+                                     dt_max=dt_max)) == 1
+    # dt_i = dt_max/4 needs level 2 -> depth 3
+    assert int(hermite.auto_n_levels(jnp.asarray([0.0625, 0.0625 / 4]),
+                                     dt_max=dt_max)) == 3
+    # pathological: clamped at max_levels
+    assert int(hermite.auto_n_levels(jnp.asarray([1e-12]),
+                                     dt_max=dt_max)) == 8
+    assert int(hermite.auto_n_levels(jnp.asarray([1e-12]), dt_max=dt_max,
+                                     max_levels=5)) == 5
+
+
+def test_driver_auto_levels_and_tiles_report(tmp_path):
+    cfg = driver.SimConfig(scenario="binary_plummer", n=24, seed=1,
+                           t_end=0.03125, stepper="block", dt_max=1 / 64,
+                           n_levels=None, compaction="gather", block_i=8,
+                           block_j=128, impl="xla", diag_every=8,
+                           out=str(tmp_path / "r.json"))
+    report = driver.run(cfg)
+    assert 1 <= report["n_levels"] <= 8
+    assert report["n_levels_auto"] == [report["n_levels"]]
+    assert report["compaction"] == "gather"
+    assert report["grid_tiles_total"] == report["runs"][0]["grid_tiles"] > 0
+    # gather never launches more tiles than the masked full grid would
+    full = nbody_force.grid_tiles(24, 24, 8, 128) * 2 * report["steps"]
+    assert report["grid_tiles_total"] <= full
+
+
+def test_driver_rejects_compaction_off_block():
+    with pytest.raises(ValueError, match="only applies to the block"):
+        driver.SimConfig(dt=0.01, compaction="gather").resolved_stepper()
+    with pytest.raises(ValueError, match="only reach the block"):
+        driver.SimConfig(dt=0.01, block_i=32).resolved_stepper()
+    with pytest.raises(ValueError, match="no levels to size"):
+        driver.SimConfig(dt=0.01, n_levels=None).resolved_stepper()
+    with pytest.raises(ValueError, match="compaction must be one of"):
+        ens.ensemble_run_block(
+            ens.stack_states([scenarios.make("plummer", 16, seed=0,
+                                             validate=False)]),
+            t_end=0.01, compaction="squeeze")
