@@ -1,6 +1,6 @@
 """CI bench-smoke: the per-PR perf trajectory, consolidated to BENCH_ci.json.
 
-Three fast probes, one JSON artifact:
+Five fast probes, one JSON artifact:
 
 1. ``ensemble_throughput`` (smoke mode) — batched vs sequential invocations;
 2. ``mixed_ensemble`` (smoke mode) — padded heterogeneous batch vs
@@ -21,7 +21,14 @@ Three fast probes, one JSON artifact:
    and median wall per event (bar: no worse; >= 1.5x better on this
    workload, whose mean active fraction is well under 25%).  Wall time is
    taken from the median diag chunk so first-chunk compilation does not
-   pollute the ratio.
+   pollute the ratio;
+5. a **strategy-compaction sweep**: the same A/B through the
+   ``mesh_sharded`` strategy on a forced 2-device host mesh — each shard
+   gathers its *local* active targets and launches
+   ``ceil(cap_local/BI) x N/BJ`` tiles.  Bars: >= 1.5x fewer local tiles at
+   <= 25% mean active fraction (the ISSUE acceptance gate), wall per event
+   no worse.  Rows record the per-shard tile vectors from
+   ``grid_tiles_per_shard``.
 
 The consolidated ``BENCH_ci.json`` is written at the repo root; the CI
 ``bench-smoke`` job uploads it as a workflow artifact on every push, so
@@ -185,8 +192,98 @@ def compaction_sweep(quick: bool = False):
     return rows
 
 
+#: The distributed A/B: mesh_sharded on 2 forced-host devices, each shard
+#: compacting its own local targets.  N/P = 128 local rows at block_i=32
+#: give each shard 4 i-tiles for its local buckets to drop.
+_STRATEGY = """
+from repro.sim import driver
+r = driver.run(driver.SimConfig(scenario={scenario!r}, n={n}, seed={seed},
+                                t_end={t_end}, stepper="block",
+                                strategy="mesh_sharded", devices=2,
+                                eta=0.01, dt_max=0.0625, n_levels=12,
+                                compaction={compaction!r},
+                                block_i=32, block_j=256,
+                                impl="xla", diag_every={diag_every}))
+print("WALL", r["wall_s"])
+print("STEPS", r["steps"])
+print("FORCE_EVALS", r["force_evals_total"])
+print("DE_REL", r["de_rel"])
+print("MEDIAN_CHUNK", r["step_wall_s"]["median"])
+print("GRID_TILES", r["grid_tiles_total"])
+print("TILES_SHARD_MAX", max(r["grid_tiles_per_shard"]))
+"""
+
+
+def strategy_compaction_sweep(quick: bool = False):
+    """Shard-local masked vs compacted block stepper under ``mesh_sharded``
+    on a forced 2-device host mesh (``binary_plummer`` N=256).
+
+    Acceptance bars (printed, recorded in the rows): >= 1.5x fewer *local*
+    grid tiles at <= 25% mean active fraction, median wall per event no
+    worse.  Physics is bit-for-bit identical between the two runs, so the
+    rows isolate what shard-local compaction does to the per-chip launch
+    schedule.
+    """
+    rows = []
+    t_end = T_END / 2  # two subprocesses per seed x 2 devices: keep it lean
+    seeds = (SEED,) if quick else (0, 1)
+    for seed in seeds:
+        by = {}
+        for compaction in ("none", "gather"):
+            out = common.run_subprocess(
+                _STRATEGY.format(scenario=SCENARIO, n=N, seed=seed,
+                                 t_end=t_end, compaction=compaction,
+                                 diag_every=DIAG_EVERY),
+                devices=2)
+            by[compaction] = {
+                "events": int(common.stdout_field(out, "STEPS")),
+                "wall_per_event_s":
+                    common.stdout_field(out, "MEDIAN_CHUNK") / DIAG_EVERY,
+                "grid_tiles": common.stdout_field(out, "GRID_TILES"),
+                "tiles_shard_max":
+                    common.stdout_field(out, "TILES_SHARD_MAX"),
+                "force_evals": common.stdout_field(out, "FORCE_EVALS"),
+                "de_rel": common.stdout_field(out, "DE_REL"),
+            }
+        none, gather = by["none"], by["gather"]
+        tiles_ratio = none["grid_tiles"] / gather["grid_tiles"]
+        local_ratio = none["tiles_shard_max"] / gather["tiles_shard_max"]
+        speedup = none["wall_per_event_s"] / gather["wall_per_event_s"]
+        active_frac = none["force_evals"] / (none["events"] * N * N)
+        ok = (speedup >= 1.0
+              and (active_frac > 0.25 or local_ratio >= 1.5))
+        print(f"# strategy_compaction seed={seed}: {local_ratio:.1f}x fewer "
+              f"local tiles ({tiles_ratio:.1f}x total), {speedup:.1f}x "
+              f"wall/event, active_frac={active_frac:.3f} "
+              f"(bars: >=1.5x local tiles at <=25% active, >=1x wall -> "
+              f"{'PASS' if ok else 'FAIL'})")
+        rows.append({
+            "scenario": SCENARIO, "n": N, "t_end": t_end, "seed": seed,
+            "strategy": "mesh_sharded", "devices": 2,
+            "events": none["events"],
+            "wall_per_event_none_s": round(none["wall_per_event_s"], 6),
+            "wall_per_event_gather_s": round(gather["wall_per_event_s"], 6),
+            "speedup": round(speedup, 2),
+            "tiles_none": none["grid_tiles"],
+            "tiles_gather": gather["grid_tiles"],
+            "tiles_shard_max_none": none["tiles_shard_max"],
+            "tiles_shard_max_gather": gather["tiles_shard_max"],
+            "local_tiles_ratio": round(local_ratio, 2),
+            "active_frac": round(active_frac, 4),
+            "de_rel_match": none["de_rel"] == gather["de_rel"],
+            "pass": ok,
+        })
+    common.emit("strategy_compaction", rows,
+                ["scenario", "n", "t_end", "seed", "strategy", "devices",
+                 "events", "wall_per_event_none_s", "wall_per_event_gather_s",
+                 "speedup", "tiles_none", "tiles_gather",
+                 "tiles_shard_max_none", "tiles_shard_max_gather",
+                 "local_tiles_ratio", "active_frac", "de_rel_match", "pass"])
+    return rows
+
+
 def run(quick: bool = False, smoke: bool = True):
-    """Run all three probes and write the consolidated BENCH_ci.json."""
+    """Run every probe and write the consolidated BENCH_ci.json."""
     del smoke  # this module IS the smoke mode
     from benchmarks import ensemble_throughput, mixed_ensemble
 
@@ -198,6 +295,7 @@ def run(quick: bool = False, smoke: bool = True):
         "mixed_ensemble": mixed_ensemble.run(smoke=True),
         "stepper_modes": stepper_sweep(quick=quick),
         "block_compaction": compaction_sweep(quick=quick),
+        "strategy_compaction": strategy_compaction_sweep(quick=quick),
     }
     doc["wall_s_total"] = round(time.perf_counter() - t0, 1)
     with open(OUT_PATH, "w") as f:

@@ -44,6 +44,7 @@ def make_block_evaluator(
     block_j: int = nbody_force.DEFAULT_BLOCK_J,
     precision: str = "fp32",  # "fp32" (paper device precision) | "fp64" golden
     compaction: str = "none",
+    n_caps: Optional[int] = None,
 ):
     """Active-target evaluator for the hierarchical block-timestep scheme.
 
@@ -68,6 +69,13 @@ def make_block_evaluator(
       the ``"none"`` result: each target row is a row-local reduction over
       identical source blocks in identical order, whatever i-block it
       occupies.
+
+    ``n_caps`` (gather mode only) truncates the capacity schedule to its
+    first ``n_caps`` buckets — the *bucket group* of callers whose active
+    count provably never exceeds ``caps[n_caps-1]`` (a mixed batch groups
+    members by their static ``n_active`` ceiling; see
+    ``ops.CapacityPlan.restrict``).  ``cap_idx`` then indexes the truncated
+    schedule, and only those buckets are ever lowered.
 
     ``precision="fp64"`` is the golden-reference mode (pure-jnp oracle at
     host precision, no kernel) used for validation and convergence tests;
@@ -128,6 +136,8 @@ def make_block_evaluator(
                         cap_idx) -> Evaluation:
         n = pos.shape[0]
         caps = ops.capacity_buckets(n, block_i)
+        if n_caps is not None:
+            caps = caps[: min(n_caps, len(caps))]
         p, v, m, ap = cast(pos), cast(vel), cast(mass), cast(acc_pred)
 
         def make_branch(cap: int):
@@ -138,7 +148,11 @@ def make_block_evaluator(
                 acc, jerk, pot = ops.scatter_outputs(perm, cap, n,
                                                      acc_c, jerk_c, pot_c)
                 if order >= 6:
-                    acc_s = jnp.where(mask_t[:, None], acc, ap)
+                    # source-side compaction: the compacted fresh rows are
+                    # scattered straight into the predicted-acc operand —
+                    # bit-for-bit where(mask, acc, ap) without the dense
+                    # intermediate blend
+                    acc_s = ops.scatter_sources(perm, cap, ap, acc_c, mask_c)
                     snp_c = rect2(p_c, v_c, acc_c, p, v, acc_s, m, mask_c)
                     (snp,) = ops.scatter_outputs(perm, cap, n, snp_c)
                 else:

@@ -22,6 +22,15 @@ JAX collectives, plus one beyond-paper strategy (DESIGN.md §3):
 All strategies implement the same ``Evaluator`` contract and are numerically
 equivalent to the single-device evaluation (tested property), because
 all-pairs summation is order-invariant in the source index.
+
+Each strategy additionally has a **compaction-aware block evaluator**
+(:func:`make_strategy_block_evaluator`) for the hierarchical block-timestep
+scheme: an active-target mask rides with the sharded targets, and with
+``compaction="gather"`` every shard gathers its *local* active targets into
+a dense block-aligned buffer of one of a few static capacities before
+launching the kernels — the distributed analogue of
+``core.evaluate.make_block_evaluator``, with per-shard launched-tile
+accounting for telemetry.
 """
 
 from __future__ import annotations
@@ -65,6 +74,8 @@ from repro.core.hermite import Evaluation, Evaluator
 from repro.kernels import nbody_force, ops
 
 STRATEGIES = ("replicated", "two_level", "mesh_sharded", "ring")
+#: compaction modes of the strategy block evaluators (mirrors core.evaluate)
+COMPACTIONS = ("none", "gather")
 
 
 def make_batch_mesh(
@@ -277,3 +288,438 @@ def _ring(mesh: Mesh, order: int, kw) -> Evaluator:
         return acc, jerk, snp, pot
 
     return _wrap(mesh, p, order, eval_padded)
+
+
+# --------------------------------------------------------------------------
+# compaction-aware block evaluators (shard-local active-target gathering)
+# --------------------------------------------------------------------------
+# Distributed analogue of ``core.evaluate.make_block_evaluator``: every shard
+# holds N/P target rows and an activity mask over them; with
+# ``compaction="gather"`` each shard gathers its *local* active targets into
+# a dense block-aligned buffer of one of a few static capacities
+# (``ops.CapacityPlan`` at the local extent) and launches
+# ``ceil(cap_local/BI) x N/BJ`` tiles instead of ``(N/P)/BI x N/BJ``.
+#
+# The bucket is selected per shard by a ``lax.switch`` on the shard-local
+# active count.  Under SPMD every device traces the same program, but the
+# switch operand is a runtime value, so shards genuinely diverge — one chip
+# can take its smallest bucket while another syncs its whole domain.  That
+# divergence is only sound because every branch is COLLECTIVE-FREE: the
+# source gathers (explicit ``all_gather``/``ppermute`` or the runtime-
+# inserted replication of mesh_sharded) are hoisted outside the switch, so
+# all shards always execute the same collective sequence.
+#
+# The gather/scatter themselves are hoisted out of the switch too: the
+# window of the LARGEST local capacity is gathered once, each branch runs
+# the kernels on a static *prefix* of it (``window[:cap]``, zero-padding its
+# output back to the window), and the one scatter happens after the switch.
+# Semantically identical (rows past the chosen cap are inactive whenever the
+# bucket bounds the active count, so their scattered output is exactly zero
+# either way), it keeps the branch bodies to pure kernel launches — which
+# both matches the Tensix picture (the host resizes the tile *grid*, not the
+# data movement plan) and avoids exercising data-dependent gather/scatter
+# under jit-of-shard_map branches, where jax 0.4.x CPU lowering was observed
+# to miscompile (tests/test_strategy_compaction.py would catch it: the
+# differential suite is bit-exact).
+
+
+def _shard_plan(n_local: int, n_sources: int, kw, n_passes: int):
+    """The local plan a shard builds from its own static shapes.
+
+    Identical to ``global_plan.shard(P)`` of the host-side plan (the
+    property suite asserts the equivalence) — in-shard code sees only the
+    local extent, so it constructs the local plan directly.
+    """
+    return ops.CapacityPlan(n_local, n_sources, kw["block_i"], kw["block_j"],
+                            n_passes=n_passes)
+
+
+def _window_switch(cap_idx, caps, launch, window, extra=()):
+    """``lax.switch`` over the capacity buckets: each branch runs
+    ``launch`` on a static *prefix* of the pre-gathered target ``window``
+    and zero-pads the output(s) back to the window extent.
+
+    This is the one place the prefix-launch-and-pad invariant lives: rows
+    past the chosen cap are inactive whenever the bucket bounds the active
+    count, so their padded (and later scattered) output is exactly the
+    masked result.  ``window`` and ``extra`` arrays ride as explicit switch
+    operands, keeping every branch a pure function of its operands (see
+    the module note on the jit-of-shard_map miscompile).
+    """
+    w = window[0].shape[0]
+    n_win = len(window)
+
+    def make_branch(cap: int):
+        c = min(cap, w)
+
+        def branch(*args):
+            outs = launch(tuple(x[:c] for x in args[:n_win]), *args[n_win:])
+            if not isinstance(outs, tuple):
+                outs = (outs,)
+            padded = tuple(
+                jnp.pad(o, ((0, w - c),) + ((0, 0),) * (o.ndim - 1))
+                for o in outs)
+            return padded if len(padded) > 1 else padded[0]
+
+        return branch
+
+    return jax.lax.switch(cap_idx, [make_branch(c) for c in caps],
+                          *window, *extra)
+
+
+def _shard_pass1(pos, vel, ap, mask, perm, cap_idx, plan, kw, src, order):
+    """Pass 1 on the compacted local targets: ``lax.switch`` over the local
+    capacity buckets, each branch a pure kernel launch on a static window
+    prefix.  Returns the scattered (acc, jerk, pot) plus the blended snap
+    source operand (fresh acc on active rows, predicted elsewhere — the
+    source-side compaction of the snap operand: the blend touches only the
+    gathered window, never a dense intermediate)."""
+    n_local = pos.shape[0]
+    cap_max = plan.caps[-1]
+    window = ops.compact_targets(perm, cap_max, pos, vel, mask)
+    m_w = window[2]
+
+    def launch(win, gp, gv, gm):
+        p_c, v_c, m_c = win
+        return ops.acc_jerk_pot_rect(p_c, v_c, gp, gv, gm, mask_t=m_c, **kw)
+
+    a_w, j_w, pt_w = _window_switch(cap_idx, plan.caps, launch, window, src)
+    acc, jerk, pot = ops.scatter_outputs(perm, cap_max, n_local,
+                                         a_w, j_w, pt_w)
+    acc_s = ops.scatter_sources(perm, cap_max, ap, a_w, m_w) \
+        if order >= 6 else ap
+    return acc, jerk, pot, acc_s
+
+
+def _shard_pass2(pos, vel, acc, mask, perm, cap_idx, plan, kw, src, ga):
+    """Snap pass on the compacted local targets (same bucket as pass 1);
+    ``ga`` is the already-gathered blended source acceleration."""
+    gp, gv, gm = src
+    n_local = pos.shape[0]
+    cap_max = plan.caps[-1]
+    window = ops.compact_targets(perm, cap_max, pos, vel, acc, mask)
+
+    def launch(win, gp, gv, ga, gm):
+        p_c, v_c, a_c, m_c = win
+        return ops.snap_rect(p_c, v_c, a_c, gp, gv, ga, gm,
+                             mask_t=m_c, **kw)
+
+    s_w = _window_switch(cap_idx, plan.caps, launch, window,
+                         (gp, gv, ga, gm))
+    (snp,) = ops.scatter_outputs(perm, cap_max, n_local, s_w)
+    return snp
+
+
+def _dense_pass1(pos, vel, ap, mask, kw, src, order):
+    """The ``compaction="none"`` baseline: masked full-local-extent launch
+    (inactive i-blocks are ``pl.when``-skipped but still enqueued)."""
+    gp, gv, gm = src
+    acc, jerk, pot = ops.acc_jerk_pot_rect(pos, vel, gp, gv, gm,
+                                           mask_t=mask, **kw)
+    acc_s = jnp.where(mask[:, None], acc, ap) if order >= 6 else ap
+    return acc, jerk, pot, acc_s
+
+
+def _shard_block_body(pos, vel, ap, mask, src, *, kw, order, compaction,
+                      n_passes):
+    """Shared per-shard two-pass block evaluation against resident sources.
+
+    Returns (acc, jerk, snp, pot, acc_s, tiles) in the local layout; the
+    caller supplies the gather of ``acc_s`` between the passes (the only
+    collective the snap pass needs) via :func:`_resident_snap`.
+    """
+    n_local, n_src = pos.shape[0], src[0].shape[0]
+    plan = _shard_plan(n_local, n_src, kw, n_passes)
+    if compaction == "gather":
+        perm = jnp.argsort(~mask, stable=True)
+        cap_idx = plan.bucket(jnp.sum(mask))
+        acc, jerk, pot, acc_s = _shard_pass1(pos, vel, ap, mask, perm,
+                                             cap_idx, plan, kw, src, order)
+        tiles = jnp.reshape(plan.tiles(cap_idx), (1,))
+        return acc, jerk, pot, acc_s, (perm, cap_idx, plan), tiles
+    acc, jerk, pot, acc_s = _dense_pass1(pos, vel, ap, mask, kw, src, order)
+    tiles = jnp.full((1,), plan.dense_tiles, jnp.int32)
+    return acc, jerk, pot, acc_s, None, tiles
+
+
+def _resident_snap(pos, vel, acc, mask, src, ga, compacted, kw):
+    """Dispatch the snap pass for strategies with resident full sources."""
+    if compacted is not None:
+        perm, cap_idx, plan = compacted
+        return _shard_pass2(pos, vel, acc, mask, perm, cap_idx, plan, kw,
+                            src, ga)
+    return ops.snap_rect(pos, vel, acc, *src[:2], ga, src[2],
+                         mask_t=mask, **kw)
+
+
+def _wrap_block(p, eval_padded):
+    """Pad N (and the activity mask/predicted acc) to a device multiple,
+    evaluate, slice back.  Padding rows carry mask = False (never gathered
+    as targets) and m = 0 (invisible as sources)."""
+
+    def evaluate(pos, vel, acc_pred, mass, mask_t):
+        n = pos.shape[0]
+        f32 = jnp.float32
+        pos32 = jnp.asarray(pos, f32)
+        vel32 = jnp.asarray(vel, f32)
+        ap32 = jnp.asarray(acc_pred, f32)
+        mass32 = jnp.asarray(mass, f32)
+        mask = jnp.asarray(mask_t, bool)
+        n_pad = _round_up(n, p)
+        pp, vp, mp = _pad_particles(pos32, vel32, mass32, n_pad)
+        app = jnp.pad(ap32, ((0, n_pad - n), (0, 0)))
+        mk = jnp.pad(mask, ((0, n_pad - n),))
+        acc, jerk, snp, pot, tiles = eval_padded(pp, vp, app, mp, mk)
+        return (Evaluation(acc[:n], jerk[:n], snp[:n], pot[:n]), tiles)
+
+    return evaluate
+
+
+def make_strategy_block_evaluator(
+    strategy: str,
+    *,
+    devices: Optional[Sequence[jax.Device]] = None,
+    chips_per_card: int = 2,
+    eps: float = 1e-7,
+    order: int = 6,
+    impl: str = "xla",
+    block_i: int = nbody_force.DEFAULT_BLOCK_I,
+    block_j: int = nbody_force.DEFAULT_BLOCK_J,
+    compaction: str = "none",
+):
+    """Distributed active-target evaluator for the block-timestep scheme.
+
+    Signature of the returned callable::
+
+        evaluate(pos, vel, acc_pred, mass, mask_t) -> (Evaluation, tiles)
+
+    ``mask_t`` is the (N,) target-activity mask; ``acc_pred`` the predicted
+    acceleration of every particle (the snap pass's source operand for
+    inactive rows).  ``tiles`` is the ``(P,)`` vector of kernel grid tiles
+    each shard enqueued for this event (both Hermite passes) — the per-shard
+    launch cost telemetry reports, and the count ``compaction="gather"``
+    shrinks by gathering each shard's local active targets before launch.
+
+    With an all-ones mask and ``compaction="none"`` this reduces to the
+    lockstep :func:`make_strategy_evaluator` math; with ``"gather"`` the
+    result is **bit-for-bit** the masked dense result of the same strategy
+    (each target row is a row-local reduction over identical source blocks
+    in identical order, whatever i-block it occupies — the same identity the
+    single-device compaction rests on, locked by
+    ``tests/test_strategy_compaction.py``).
+    """
+    if strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
+    if compaction not in COMPACTIONS:
+        raise ValueError(
+            f"compaction must be one of {COMPACTIONS}; got {compaction!r}")
+    devs = np.asarray(devices if devices is not None else jax.devices())
+    p = devs.size
+    kw = _force_kw(impl, block_i, block_j, eps)
+    n_passes = 2 if order >= 6 else 1
+
+    if strategy == "two_level":
+        if p % chips_per_card:
+            raise ValueError(f"{p} devices not divisible by {chips_per_card=}")
+        mesh = Mesh(devs.reshape(p // chips_per_card, chips_per_card),
+                    ("card", "chip"))
+        return _two_level_block(mesh, order, kw, compaction, n_passes)
+    mesh = Mesh(devs.reshape(p), ("dev",))
+    if strategy == "replicated":
+        return _replicated_block(mesh, order, kw, compaction, n_passes)
+    if strategy == "mesh_sharded":
+        return _mesh_sharded_block(mesh, order, kw, compaction, n_passes)
+    return _ring_block(mesh, order, kw, compaction, n_passes)
+
+
+def _gathered_block(mesh, order, kw, compaction, n_passes, gather):
+    """Shared body of replicated/two_level: explicit source gather(s), then
+    the per-shard two-pass compacted evaluation."""
+    axes = mesh.axis_names
+
+    @jax.jit
+    @_smap(mesh, (P(axes),) * 5,
+           (P(axes), P(axes), P(axes), P(axes), P(axes)), kw["impl"])
+    def eval_padded(pos, vel, ap, mass, mask):
+        src = (gather(pos), gather(vel), gather(mass))
+        acc, jerk, pot, acc_s, compacted, tiles = _shard_block_body(
+            pos, vel, ap, mask, src, kw=kw, order=order,
+            compaction=compaction, n_passes=n_passes)
+        if order >= 6:
+            ga = gather(acc_s)  # the one collective between the switches
+            snp = _resident_snap(pos, vel, acc, mask, src, ga, compacted, kw)
+        else:
+            snp = jnp.zeros_like(acc)
+        return acc, jerk, snp, pot, tiles
+
+    return _wrap_block(mesh.size, eval_padded)
+
+
+def _replicated_block(mesh, order, kw, compaction, n_passes):
+    axes = mesh.axis_names
+
+    def gather(x):
+        return jax.lax.all_gather(x, axes, axis=0, tiled=True)
+
+    return _gathered_block(mesh, order, kw, compaction, n_passes, gather)
+
+
+def _two_level_block(mesh, order, kw, compaction, n_passes):
+    def gather2(x):
+        x = jax.lax.all_gather(x, "chip", axis=0, tiled=True)
+        return jax.lax.all_gather(x, "card", axis=0, tiled=True)
+
+    return _gathered_block(mesh, order, kw, compaction, n_passes, gather2)
+
+
+def _mesh_sharded_block(mesh, order, kw, compaction, n_passes):
+    """Runtime-managed comms: the kernel regions are shard_mapped with
+    *replicated* in_specs for the source operands — the collective is implied
+    by the spec (cf. TT-NN MeshDevice replicated buffers), never written."""
+    axes = mesh.axis_names
+    sh, rep = P(axes), P()
+
+    @_smap(mesh, (sh, sh, sh, sh, rep, rep, rep),
+           (sh, sh, sh, sh, sh), kw["impl"])
+    def pass1(pos, vel, ap, mask, gp, gv, gm):
+        acc, jerk, pot, acc_s, _, tiles = _shard_block_body(
+            pos, vel, ap, mask, (gp, gv, gm), kw=kw, order=order,
+            compaction=compaction, n_passes=n_passes)
+        return acc, jerk, pot, acc_s, tiles
+
+    @_smap(mesh, (sh, sh, sh, sh, rep, rep, rep, rep), sh, kw["impl"])
+    def pass2(pos, vel, acc, mask, gp, gv, ga, gm):
+        src = (gp, gv, gm)
+        n_local, n_src = pos.shape[0], gp.shape[0]
+        plan = _shard_plan(n_local, n_src, kw, n_passes)
+        if compaction == "gather":
+            # same bucket as pass 1: the local active set did not change
+            perm = jnp.argsort(~mask, stable=True)
+            cap_idx = plan.bucket(jnp.sum(mask))
+            return _shard_pass2(pos, vel, acc, mask, perm, cap_idx, plan,
+                                kw, src, ga)
+        return ops.snap_rect(pos, vel, acc, gp, gv, ga, gm,
+                             mask_t=mask, **kw)
+
+    @jax.jit
+    def eval_padded(pos, vel, ap, mass, mask):
+        # targets arrive sharded, sources replicated — the same arrays bound
+        # twice with different specs; the runtime inserts the all-gathers
+        acc, jerk, pot, acc_s, tiles = pass1(pos, vel, ap, mask,
+                                             pos, vel, mass)
+        if order >= 6:
+            snp = pass2(pos, vel, acc, mask, pos, vel, acc_s, mass)
+        else:
+            snp = jnp.zeros_like(acc)
+        return acc, jerk, snp, pot, tiles
+
+    return _wrap_block(mesh.size, eval_padded)
+
+
+def _ring_block(mesh, order, kw, compaction, n_passes):
+    """Systolic ring with shard-local compaction: the compacted local target
+    block meets every streamed source shard, so the switch sits *inside* the
+    loop body (pure local work per branch) while the ``ppermute`` shifts stay
+    outside it — every shard runs the same collective schedule whatever
+    bucket it took."""
+    axes = mesh.axis_names
+    p = mesh.size
+    ring = [(i, (i + 1) % p) for i in range(p)]
+
+    def shift(x):
+        return jax.lax.ppermute(x, axes[0], ring)
+
+    @jax.jit
+    @_smap(mesh, (P(axes),) * 5,
+           (P(axes), P(axes), P(axes), P(axes), P(axes)), kw["impl"])
+    def eval_padded(pos, vel, ap, mass, mask):
+        n_local = pos.shape[0]
+        # each of the n_passes sweeps launches once per streamed shard
+        plan = _shard_plan(n_local, n_local, kw, n_passes * p)
+        zeros3 = jnp.zeros_like(pos)
+        zeros1 = jnp.zeros_like(mass)
+
+        if compaction == "gather":
+            # window gathered ONCE, outside the source loop: the systolic
+            # stream rotates sources, the compacted target block is fixed,
+            # and partial sums accumulate in the window layout (same adds,
+            # one scatter at the end)
+            perm = jnp.argsort(~mask, stable=True)
+            cap_idx = plan.bucket(jnp.sum(mask))
+            tiles = jnp.reshape(plan.tiles(cap_idx), (1,))
+            cap_max = plan.caps[-1]
+            window = ops.compact_targets(perm, cap_max, pos, vel, mask)
+            m_w = window[2]
+            w = window[0].shape[0]
+
+            def launch1(win, sp, sv, sm):
+                p_c, v_c, m_c = win
+                return ops.acc_jerk_pot_rect(p_c, v_c, sp, sv, sm,
+                                             mask_t=m_c, **kw)
+
+            def body_aj(_, carry):
+                acc, jerk, pot, sp, sv, sm = carry
+                a, j, pt = _window_switch(cap_idx, plan.caps, launch1,
+                                          window, (sp, sv, sm))
+                return (acc + a, jerk + j, pot + pt,
+                        shift(sp), shift(sv), shift(sm))
+
+            zw3 = jnp.zeros((w, 3), jnp.float32)
+            a_w, j_w, pt_w, *_ = jax.lax.fori_loop(
+                0, p, body_aj,
+                (zw3, zw3, jnp.zeros((w,), jnp.float32), pos, vel, mass))
+            acc, jerk, pot = ops.scatter_outputs(perm, cap_max, n_local,
+                                                 a_w, j_w, pt_w)
+
+            if order >= 6:
+                # blended snap-source operand via the window (source-side
+                # compaction); a_w already holds the summed fresh acc
+                acc_s = ops.scatter_sources(perm, cap_max, ap, a_w, m_w)
+                snap_window = window[:2] + (a_w, m_w)
+
+                def launch2(win, sp, sv, sa, sm):
+                    p_c, v_c, a_c, m_c = win
+                    return ops.snap_rect(p_c, v_c, a_c, sp, sv, sa, sm,
+                                         mask_t=m_c, **kw)
+
+                def body_s(_, carry):
+                    snp, sp, sv, sa, sm = carry
+                    s = _window_switch(cap_idx, plan.caps, launch2,
+                                       snap_window, (sp, sv, sa, sm))
+                    return (snp + s,
+                            shift(sp), shift(sv), shift(sa), shift(sm))
+
+                s_w, *_ = jax.lax.fori_loop(
+                    0, p, body_s, (zw3, pos, vel, acc_s, mass))
+                (snp,) = ops.scatter_outputs(perm, cap_max, n_local, s_w)
+            else:
+                snp = zeros3
+            return acc, jerk, snp, pot, tiles
+
+        tiles = jnp.full((1,), plan.dense_tiles, jnp.int32)
+
+        def body_aj(_, carry):
+            acc, jerk, pot, sp, sv, sm = carry
+            a, j, pt = ops.acc_jerk_pot_rect(pos, vel, sp, sv, sm,
+                                             mask_t=mask, **kw)
+            return (acc + a, jerk + j, pot + pt,
+                    shift(sp), shift(sv), shift(sm))
+
+        acc, jerk, pot, *_ = jax.lax.fori_loop(
+            0, p, body_aj, (zeros3, zeros3, zeros1, pos, vel, mass))
+        if order >= 6:
+            acc_s = jnp.where(mask[:, None], acc, ap)
+
+            def body_s(_, carry):
+                snp, sp, sv, sa, sm = carry
+                s = ops.snap_rect(pos, vel, acc, sp, sv, sa, sm,
+                                  mask_t=mask, **kw)
+                return (snp + s, shift(sp), shift(sv), shift(sa), shift(sm))
+
+            snp, *_ = jax.lax.fori_loop(
+                0, p, body_s, (zeros3, pos, vel, acc_s, mass))
+        else:
+            snp = zeros3
+        return acc, jerk, snp, pot, tiles
+
+    return _wrap_block(mesh.size, eval_padded)

@@ -38,6 +38,8 @@ or interpreted) over a leading batch axis — the ensemble engine's path.
 
 from __future__ import annotations
 
+import bisect
+import dataclasses
 from functools import partial
 
 import jax
@@ -149,6 +151,90 @@ def bucket_index(n_active, caps) -> jax.Array:
                             jnp.asarray(n_active, jnp.int32), side="left")
 
 
+@dataclasses.dataclass(frozen=True)
+class CapacityPlan:
+    """Static capacity-bucket plan for one compacted launch extent.
+
+    The original compaction layer kept its schedule as a bare tuple computed
+    at each call site; distributing compaction turns the schedule into a
+    *plan*: the dense target extent being compacted (the full ``N`` on one
+    device, the local ``N/P`` inside a shard), the source extent every launch
+    sweeps, the tile shape, and the pass count travel together, so
+    evaluators, engines and telemetry all agree on what one bucket costs.
+
+    ``caps`` defaults to :func:`capacity_buckets` over ``n_targets``;
+    :meth:`restrict` truncates it for a bucket *group* whose members can
+    never exceed a known active-count ceiling (the per-member dispatch of
+    mixed batches), and :meth:`shard` rescales the whole plan to the
+    per-shard local extent (the distributed strategies).  The plan is
+    hashable, so it can key lowering caches and ride as a static argument.
+
+    ``n_passes`` counts the kernel launches one event performs at the chosen
+    capacity: 2 for the 6th-order Hermite scheme's acc/jerk + snap sweeps
+    over resident sources, ``2 * P`` for the ring strategy, whose every pass
+    launches once per streamed source shard.
+    """
+
+    n_targets: int
+    n_sources: int
+    block_i: int
+    block_j: int
+    n_passes: int = 2
+    caps: tuple = ()
+
+    def __post_init__(self):
+        if not self.caps:
+            object.__setattr__(
+                self, "caps", capacity_buckets(self.n_targets, self.block_i))
+
+    @property
+    def tiles_by_cap(self) -> tuple:
+        """Grid tiles one event enqueues at each capacity (all passes)."""
+        j_tiles = -(-self.n_sources // self.block_j)
+        return tuple((c // self.block_i) * j_tiles * self.n_passes
+                     for c in self.caps)
+
+    @property
+    def dense_tiles(self) -> int:
+        """Tiles of the uncompacted (masked full-extent) launch this plan
+        shrinks — the ``compaction="none"`` baseline."""
+        return (nbody_force.grid_tiles(self.n_targets, self.n_sources,
+                                       self.block_i, self.block_j)
+                * self.n_passes)
+
+    def bucket(self, n_active) -> jax.Array:
+        """Traced index of the smallest bucket holding ``n_active``."""
+        return bucket_index(n_active, self.caps)
+
+    def tiles(self, idx) -> jax.Array:
+        """Traced lookup: tiles one event enqueues at bucket ``idx``."""
+        return jnp.asarray(self.tiles_by_cap, jnp.int32)[idx]
+
+    def shard(self, n_shards: int) -> "CapacityPlan":
+        """The per-shard local plan: each shard compacts its own
+        ``n_targets / n_shards`` target rows (the strategies pad to a device
+        multiple before sharding, so the split is exact)."""
+        if self.n_targets % n_shards:
+            raise ValueError(
+                f"{self.n_targets} targets do not split over "
+                f"{n_shards} shards")
+        return dataclasses.replace(
+            self, n_targets=self.n_targets // n_shards, caps=())
+
+    def restrict(self, ceiling: int) -> "CapacityPlan":
+        """Plan truncated to the buckets a member with at most ``ceiling``
+        active targets can ever select — its pre-lowered bucket group.
+
+        A mixed batch groups members by this ceiling (their static
+        ``n_active``): each group dispatches over its own shorter schedule,
+        so a quiescent small member never lowers — let alone launches — the
+        widest member's buckets.
+        """
+        idx = bisect.bisect_left(self.caps, int(ceiling))
+        idx = min(idx, len(self.caps) - 1)
+        return dataclasses.replace(self, caps=self.caps[: idx + 1])
+
+
 def compact_targets(perm, cap: int, *rows):
     """Gather the first ``cap`` permuted rows of each per-target array.
 
@@ -173,6 +259,27 @@ def scatter_outputs(perm, cap: int, n: int, *outs):
     return tuple(
         jnp.zeros((n,) + o.shape[1:], o.dtype).at[idx].set(o) for o in outs
     )
+
+
+def scatter_sources(perm, cap: int, base, upd, mask_c):
+    """Blend compacted pass-1 outputs into a predicted source operand.
+
+    The snap pass needs the acceleration of *every* source at the event
+    time: fresh values for the targets the event just evaluated, the
+    Taylor-predicted ``base`` rows for everyone else.  Scattering the
+    compacted fresh rows (where their compacted activity mask is set)
+    straight into ``base`` produces exactly
+    ``where(mask, scatter_outputs(upd), base)`` — bit for bit — without
+    materializing the dense scattered intermediate: the source-side
+    compaction of the snap operand.  Inactive fill rows inside the gathered
+    window write their own ``base`` value back, and rows outside the window
+    are untouched (an active row is always inside the window when ``cap``
+    bounds the active count).
+    """
+    idx = perm[: min(cap, perm.shape[0])]
+    m = mask_c[:, None] if upd.ndim == 2 else mask_c
+    rows = jnp.where(m, upd.astype(base.dtype), base[idx])
+    return base.at[idx].set(rows)
 
 
 @partial(jax.jit, static_argnames=("eps", "block_i", "block_j", "impl"))

@@ -27,6 +27,11 @@ below ``steps * N**2`` on scenarios with a wide timestep dynamic range.
 into a dense block-aligned buffer so the kernel grid *shrinks* to the live
 block instead of masking it — telemetry then shows ``grid_tiles`` falling
 with the active set (``--block-i/--block-j`` tune the tile shape).
+``--bucket-mode member`` (the default) dispatches a mixed batch's capacity
+buckets per member group instead of batch-shared, and
+``--strategy X --devices k --stepper block`` shards a single run's domain
+so every device compacts its *local* active targets (the report then
+carries ``grid_tiles_per_shard``).
 
 Each invocation emits a one-line summary plus a JSON telemetry report
 (wall time, steps/s, interactions/s, modeled energy/EDP, per-run energy
@@ -97,7 +102,16 @@ def main(argv=None):
                     help="block stepper only: gather each event's active "
                          "targets into a dense block-aligned buffer and "
                          "launch the kernels on the shrunk grid (bit-for-bit "
-                         "the masked result, far fewer tiles enqueued)")
+                         "the masked result, far fewer tiles enqueued); "
+                         "with --strategy X --devices k every shard gathers "
+                         "its own LOCAL active targets")
+    ap.add_argument("--bucket-mode", default="member",
+                    choices=("member", "shared"),
+                    help="capacity-bucket dispatch under --compaction "
+                         "gather: 'member' groups ensemble members by their "
+                         "n_active ceiling (a mixed batch's quiescent "
+                         "members stop paying the widest member's grid), "
+                         "'shared' is the batch-shared-bucket baseline")
     ap.add_argument("--block-i", type=int, default=None,
                     help="kernel target-tile rows (block stepper; default: "
                          "kernel's own — small N wants a smaller tile so "
@@ -183,7 +197,8 @@ def main(argv=None):
         scenario=scenario_name, n=n_arg, seed=args.seed,
         ensemble=args.ensemble, t_end=args.t_end, dt=args.dt,
         stepper=args.stepper, dt_max=args.dt_max, n_levels=n_levels,
-        compaction=args.compaction, block_i=args.block_i,
+        compaction=args.compaction, bucket_mode=args.bucket_mode,
+        block_i=args.block_i,
         block_j=args.block_j, eta=args.eta,
         order=args.order, strategy=args.strategy, devices=args.devices,
         impl=args.impl, kernel=args.kernel, mix=mix, pad=pad,
@@ -215,6 +230,9 @@ def main(argv=None):
              if "force_evals_total" in report else "")
           + (f" grid_tiles={report['grid_tiles_total']:.3e}"
              if "grid_tiles_total" in report else ""))
+    if "grid_tiles_per_shard" in report:
+        shards = " ".join(f"{t:.0f}" for t in report["grid_tiles_per_shard"])
+        print(f"[sim] grid_tiles_per_shard=[{shards}]")
     print(f"[sim] |dE/E|={report['de_rel']:.3e} "
           f"E_model={report['modeled']['energy_J']:.1f}J "
           f"EDP={report['modeled']['edp_Js']:.1f}Js")

@@ -36,6 +36,7 @@ import numpy as np
 from repro.core import hermite, nbody
 from repro.core.evaluate import make_evaluator
 from repro.core.strategies import STRATEGIES, make_strategy_evaluator
+from repro.kernels import nbody_force
 from repro.sim import ensemble as ens
 from repro.sim import scenarios, telemetry
 
@@ -56,6 +57,8 @@ class SimConfig:
     n_levels: Optional[int] = 8      # block hierarchy depth (None => auto:
     #   per-member from the initial Aarseth dt distribution, clamped [1, 8])
     compaction: str = "none"         # "none" | "gather" (block stepper only)
+    bucket_mode: str = "member"      # "member" (per-member capacity bucket
+    #   groups) | "shared" (batch-shared bucket baseline); gather mode only
     block_i: Optional[int] = None    # kernel tile shape override (block
     block_j: Optional[int] = None    #   stepper; None => kernel defaults)
     eta: float = 0.02
@@ -95,6 +98,15 @@ class SimConfig:
             raise ValueError(
                 f"compaction={self.compaction!r} only applies to the block "
                 "stepper (the lockstep modes evaluate every target)")
+        if self.bucket_mode not in ens.BUCKET_MODES:
+            raise ValueError(
+                f"bucket_mode must be one of {ens.BUCKET_MODES}; "
+                f"got {self.bucket_mode!r}")
+        if self.bucket_mode != "member" and self.compaction != "gather":
+            raise ValueError(
+                f"bucket_mode={self.bucket_mode!r} selects the capacity-"
+                "bucket dispatch of compaction='gather'; without gather "
+                "there are no buckets to share")
         if (self.block_i or self.block_j) and stepper != "block":
             raise ValueError(
                 "block_i/block_j tile overrides only reach the block "
@@ -118,6 +130,8 @@ class SimConfig:
             meta["dt_max"] = self.dt_max
             meta["n_levels"] = self.n_levels    # None until auto-resolved
             meta["compaction"] = self.compaction
+            if self.compaction == "gather":
+                meta["bucket_mode"] = self.bucket_mode
         if meta["stepper"] == "adaptive":
             meta["dt_max"] = self.dt_max
         if self.mix is not None:
@@ -158,6 +172,13 @@ def run(cfg: SimConfig) -> Dict[str, Any]:
     stepper = cfg.resolved_stepper()
     if cfg.mix is not None:
         report = _run_mixed(cfg)
+    elif stepper == "block" and cfg.ensemble == 1 and \
+            cfg.strategy != "single":
+        # a single block run under a distribution strategy shards the
+        # *domain* (shard-local compaction, per-shard tile telemetry) —
+        # batched block runs shard the batch axis instead, where the
+        # strategy label only tags the report
+        report = _run_block_strategy(cfg)
     elif cfg.ensemble > 1 or stepper == "block":
         # the block engine lives in the (vmapped) ensemble path; a single
         # block run is just a B=1 batch
@@ -230,6 +251,76 @@ def _run_single(cfg: SimConfig) -> Dict[str, Any]:
         n_bodies=cfg.n, ensemble=1,
         n_devices=cfg.devices if cfg.strategy != "single" else 1,
         per_run_pairs=[float(steps) * cfg.n * cfg.n],
+        extra={"e0": e0, "e1": e1, "de_rel": abs((e1 - e0) / e0),
+               "t_final": float(state.time)})
+
+
+# --------------------------------------------------------------------------
+# single block run under a distribution strategy (shard-local compaction)
+# --------------------------------------------------------------------------
+def _run_block_strategy(cfg: SimConfig) -> Dict[str, Any]:
+    """One run, its force evaluation sharded by ``cfg.strategy``: each shard
+    compacts its own local active targets (``compaction="gather"``) and the
+    report carries the per-shard launched tiles as ``grid_tiles_per_shard``.
+    """
+    if cfg.strategy not in STRATEGIES:
+        raise ValueError(f"unknown strategy {cfg.strategy!r}")
+    impl = ens.resolve_eval_impl(cfg.impl, cfg.kernel)
+    if impl == "fp64":
+        raise ValueError(
+            "impl='fp64' (golden reference) only runs under "
+            "strategy='single'")
+    devices = _device_list(cfg)
+    state = _build_states(cfg)[0]
+    # same tile shape for the bootstrap pass as for the event loop, so a
+    # CLI run is bit-for-bit reproducible by ens.evolve_strategy_block
+    evaluator = make_strategy_evaluator(
+        cfg.strategy, devices=devices, order=cfg.order, eps=cfg.eps,
+        impl=impl,
+        block_i=cfg.block_i or nbody_force.DEFAULT_BLOCK_I,
+        block_j=cfg.block_j or nbody_force.DEFAULT_BLOCK_J)
+
+    recorder = telemetry.TelemetryRecorder(cfg.meta())
+    state = hermite.initialize(state, evaluator)
+    jax.block_until_ready(state.pos)
+    e0 = float(nbody.total_energy(state))
+    recorder.record_snapshot(0, 0.0, energy=e0, de_rel=0.0)
+
+    n_levels = cfg.n_levels
+    if n_levels is None:  # --levels auto, from the initial dt distribution
+        dt_i = hermite.aarseth_dt_particles(state, eta=cfg.eta,
+                                            dt_max=cfg.dt_max)
+        n_levels = int(hermite.auto_n_levels(dt_i, dt_max=cfg.dt_max))
+        recorder.meta["n_levels"] = n_levels
+        recorder.meta["n_levels_auto"] = [n_levels]
+
+    carry = None
+    done = 0
+    while done * cfg.diag_every < MAX_STEPS:
+        t0 = time.perf_counter()
+        state, carry = ens.strategy_run_block(
+            state, t_end=cfg.t_end, n_events=cfg.diag_every,
+            dt_max=cfg.dt_max, n_levels=n_levels, carry=carry, eta=cfg.eta,
+            order=cfg.order, eps=cfg.eps, impl=impl, strategy=cfg.strategy,
+            compaction=cfg.compaction, block_i=cfg.block_i,
+            block_j=cfg.block_j, devices=cfg.devices)
+        jax.block_until_ready(state.pos)
+        done += 1
+        e = float(nbody.total_energy(state))
+        recorder.record_step(int(carry.n_events), float(state.time),
+                             time.perf_counter() - t0)
+        recorder.record_snapshot(int(carry.n_events), float(state.time),
+                                 energy=e, de_rel=abs((e - e0) / e0))
+        if float(state.time) >= cfg.t_end:
+            break
+
+    e1 = float(nbody.total_energy(state))
+    per_shard = [float(t) for t in np.asarray(carry.n_tiles)]
+    return recorder.finalize(
+        n_bodies=cfg.n, ensemble=1, n_devices=cfg.devices,
+        per_run_steps=[int(carry.n_events)],
+        per_run_pairs=[float(carry.n_pairs)],
+        per_run_tiles=[sum(per_shard)], per_shard_tiles=per_shard,
         extra={"e0": e0, "e1": e1, "de_rel": abs((e1 - e0) / e0),
                "t_final": float(state.time)})
 
@@ -363,6 +454,7 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
                 batched, t_end=cfg.t_end, n_events=cfg.diag_every,
                 dt_max=cfg.dt_max, n_levels=n_levels, carry=carry,
                 eta=cfg.eta, compaction=cfg.compaction,
+                bucket_mode=cfg.bucket_mode,
                 block_i=cfg.block_i, block_j=cfg.block_j, **kw)
             jax.block_until_ready(batched.pos)
             done += 1

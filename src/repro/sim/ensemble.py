@@ -48,6 +48,7 @@ from typing import List, NamedTuple, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import hermite, nbody
@@ -379,9 +380,10 @@ def ensemble_run_adaptive(
 # hierarchical block-timestep engine (per-particle power-of-two levels)
 # --------------------------------------------------------------------------
 def _block_inner_evaluator(order: int, eps: float, impl: str,
-                           compaction: str, block_i: int, block_j: int):
+                           compaction: str, block_i: int, block_j: int,
+                           n_caps: Optional[int] = None):
     kw = dict(order=order, eps=eps, compaction=compaction,
-              block_i=block_i, block_j=block_j)
+              block_i=block_i, block_j=block_j, n_caps=n_caps)
     if impl == "fp64":
         return make_block_evaluator(precision="fp64", **kw)
     if impl not in ENSEMBLE_IMPLS:
@@ -389,6 +391,101 @@ def _block_inner_evaluator(order: int, eps: float, impl: str,
             f"ensemble impl must be one of {ENSEMBLE_IMPLS} (the vmappable "
             f"evaluation paths); got {impl!r}")
     return make_block_evaluator(impl=impl, **kw)
+
+
+# --- one block event, member view (shared by the vmapped ensemble engine
+# --- and the single-run strategy engine; statics bound via functools.partial)
+def _macro_levels(s, dt_macro, *, eta, n_levels: int):
+    """Fresh levels for a member synchronized at its macro start."""
+    dt_i = hermite.aarseth_dt_particles(s, eta=eta, dt_max=dt_macro)
+    return hermite.quantize_block_levels(dt_i, dt_max=dt_macro,
+                                         n_levels=n_levels)
+
+
+def _event_init(s, na, t_end, *, eta, dt_max, n_levels: int):
+    del na
+    dtype = s.pos.dtype
+    remaining = t_end - s.time
+    dt_macro = jnp.minimum(jnp.asarray(dt_max, dtype),
+                           jnp.maximum(remaining, 1e-12))
+    levels = _macro_levels(s, dt_macro, eta=eta, n_levels=n_levels)
+    t_last = jnp.zeros(s.pos.shape[0], jnp.int32)
+    return t_last, levels, dt_macro
+
+
+# One event is split in three stages so the compaction layer can pick its
+# capacity bucket(s) *between* the per-member vmaps (the ensemble engine) or
+# inside the per-shard switch (the strategy engine).
+def _event_pre(s, t_last, levels, dt_macro, na, t_end, *, n_sub: int):
+    dtype = s.pos.dtype
+    live = (t_end - s.time) > 0.0
+    real = jnp.arange(s.pos.shape[0]) < na
+    period = jnp.asarray(n_sub, jnp.int32) >> levels
+    cand = t_last + period
+    t_next = jnp.min(jnp.where(real, cand, n_sub))
+    active = real & (cand == t_next)
+    dt_fine = dt_macro / n_sub
+    h = ((t_next - t_last).astype(dtype) * dt_fine)[:, None]
+
+    xp, vp = hermite.predict(s, h)
+    ap = hermite.predict_acc(s, h)
+    # active targets first (argsort of the negated mask); row order
+    # within the gathered buffer is irrelevant to the row-local kernel
+    # math, the permutation only densifies the launch
+    perm = jnp.argsort(~active, stable=True)
+    return live, t_next, active, h, xp, vp, ap, perm
+
+
+def _event_post(s, ev, live, t_next, active, h, t_last, levels,
+                dt_macro, na, t_end, *, n_sub: int, eta, dt_max,
+                n_levels: int, order: int):
+    dtype = s.pos.dtype
+    period = jnp.asarray(n_sub, jnp.int32) >> levels
+    # an active particle last corrected exactly its own step ago, so the
+    # prediction horizon IS the corrector interval
+    x1, v1, crk = hermite.correct(s, ev, h, order=order)
+    m3 = active[:, None]
+    st1 = ParticleState(
+        pos=jnp.where(m3, x1, s.pos),
+        vel=jnp.where(m3, v1, s.vel),
+        acc=jnp.where(m3, ev.acc.astype(dtype), s.acc),
+        jerk=jnp.where(m3, ev.jerk.astype(dtype), s.jerk),
+        snap=jnp.where(m3, ev.snap.astype(dtype), s.snap),
+        crackle=jnp.where(m3, crk, s.crackle),
+        mass=s.mass,
+        pot=jnp.where(active, ev.pot.astype(s.mass.dtype), s.pot),
+        time=s.time,
+    )
+    t_last1 = jnp.where(active, t_next, t_last)
+
+    # level update from the freshly corrected derivatives: finer at will
+    # (always commensurate), coarser one level at doubled-period ticks
+    dt_i = hermite.aarseth_dt_particles(st1, eta=eta, dt_max=dt_macro)
+    want = hermite.quantize_block_levels(dt_i, dt_max=dt_macro,
+                                         n_levels=n_levels)
+    can_coarsen = (t_next % (period << 1)) == 0
+    lev1 = jnp.where(active & (want > levels), want,
+                     jnp.where(active & (want < levels) & can_coarsen,
+                               levels - 1, levels))
+
+    # macro boundary: advance member time, requantize, reset the grid
+    sync = t_next == n_sub
+    time1 = jnp.where(sync, s.time + dt_macro, s.time)
+    st1 = dataclasses.replace(st1, time=time1)
+    remaining = t_end - time1
+    dt_macro1 = jnp.where(
+        sync, jnp.minimum(jnp.asarray(dt_max, dtype),
+                          jnp.maximum(remaining, 1e-12)), dt_macro)
+    lev1 = jnp.where(sync, _macro_levels(st1, dt_macro1, eta=eta,
+                                         n_levels=n_levels), lev1)
+    t_last1 = jnp.where(sync, 0, t_last1)
+
+    # members past t_end freeze whole (lockstep batch stays rectangular)
+    st1, t_last1, lev1, dt_macro1 = jax.tree_util.tree_map(
+        lambda new, old: jnp.where(live, new, old),
+        (st1, t_last1, lev1, dt_macro1), (s, t_last, levels, dt_macro))
+    dp = jnp.where(live, jnp.sum(active).astype(dtype) * na, 0.0)
+    return st1, t_last1, lev1, dt_macro1, dp, live
 
 
 class BlockCarry(NamedTuple):
@@ -410,10 +507,45 @@ class BlockCarry(NamedTuple):
     n_tiles: jax.Array
 
 
+#: per-member capacity-bucket dispatch modes of the block engine
+BUCKET_MODES = ("member", "shared")
+
+
+def _bucket_groups(n: int, n_active, block_i: int, block_j: int,
+                   compaction: str, bucket_mode: str) -> tuple:
+    """Static pre-lowered bucket groups of a (possibly mixed) batch.
+
+    Members are grouped by the ceiling bucket of their *static* ``n_active``
+    — the bucket a member's per-event active count can never exceed.  Each
+    group dispatches its own unbatched ``lax.switch`` over a capacity
+    schedule truncated at that ceiling (``ops.CapacityPlan.restrict``), so a
+    quiescent small member in a mixed batch never launches — nor even
+    lowers — the widest member's buckets.  Returns a tuple of
+    ``(member_indices, n_caps)`` pairs partitioning ``range(B)``; with
+    ``bucket_mode="shared"`` (or without compaction) the whole batch is one
+    group over the full schedule — exactly the original batch-shared
+    dispatch, which a homogeneous batch also reduces to in ``"member"``
+    mode (one ceiling => one group).
+    """
+    if bucket_mode not in BUCKET_MODES:
+        raise ValueError(
+            f"bucket_mode must be one of {BUCKET_MODES}; got {bucket_mode!r}")
+    na = np.asarray(n_active)
+    b = na.shape[0]
+    plan = ops.CapacityPlan(n, n, block_i, block_j)
+    if compaction != "gather" or bucket_mode == "shared":
+        return ((tuple(range(b)), len(plan.caps)),)
+    by: dict = {}
+    for member, a in enumerate(na):
+        by.setdefault(len(plan.restrict(int(a)).caps), []).append(member)
+    return tuple(sorted((tuple(ms), n_caps) for n_caps, ms in by.items()))
+
+
 @functools.lru_cache(maxsize=64)
 def _block_engine(order: int, eps: float, impl: str, mesh,
                   eta: float, dt_max: float, n_levels: int,
-                  compaction: str, block_i: int, block_j: int):
+                  compaction: str, block_i: int, block_j: int,
+                  groups: tuple):
     """Hierarchical block-timestep engine (Aarseth dt -> power-of-two levels).
 
     Time is organized in **macro-steps** of ``dt_macro = min(dt_max,
@@ -439,99 +571,17 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
     requantized from scratch, and per-member diagnostics (energy, virial)
     are exact.
     """
-    bev = _block_inner_evaluator(order, eps, impl, compaction,
-                                 block_i, block_j)
     n_sub = 2 ** (n_levels - 1)
     n_passes = 2 if order >= 6 else 1
-
-    def _macro_init(s, dt_macro):
-        """Fresh levels for a member synchronized at its macro start."""
-        dt_i = hermite.aarseth_dt_particles(s, eta=eta, dt_max=dt_macro)
-        return hermite.quantize_block_levels(dt_i, dt_max=dt_macro,
-                                             n_levels=n_levels)
-
-    def member_init(s, na, t_end):
-        del na
-        dtype = s.pos.dtype
-        remaining = t_end - s.time
-        dt_macro = jnp.minimum(jnp.asarray(dt_max, dtype),
-                               jnp.maximum(remaining, 1e-12))
-        levels = _macro_init(s, dt_macro)
-        t_last = jnp.zeros(s.pos.shape[0], jnp.int32)
-        return t_last, levels, dt_macro
-
-    # One event is split in three stages so the compaction layer can pick its
-    # capacity bucket *between* the per-member vmaps: the bucket index must
-    # be shared across the batch (an unbatched lax.switch operand stays a
-    # real branch under vmap; a batched one degrades to running every
-    # branch), so it is the max active count over the live members.
-    def member_pre(s, t_last, levels, dt_macro, na, t_end):
-        dtype = s.pos.dtype
-        live = (t_end - s.time) > 0.0
-        real = jnp.arange(s.pos.shape[0]) < na
-        period = jnp.asarray(n_sub, jnp.int32) >> levels
-        cand = t_last + period
-        t_next = jnp.min(jnp.where(real, cand, n_sub))
-        active = real & (cand == t_next)
-        dt_fine = dt_macro / n_sub
-        h = ((t_next - t_last).astype(dtype) * dt_fine)[:, None]
-
-        xp, vp = hermite.predict(s, h)
-        ap = hermite.predict_acc(s, h)
-        # active targets first (argsort of the negated mask); row order
-        # within the gathered buffer is irrelevant to the row-local kernel
-        # math, the permutation only densifies the launch
-        perm = jnp.argsort(~active, stable=True)
-        return live, t_next, active, h, xp, vp, ap, perm
-
-    def member_post(s, ev, live, t_next, active, h, t_last, levels,
-                    dt_macro, na, t_end):
-        dtype = s.pos.dtype
-        period = jnp.asarray(n_sub, jnp.int32) >> levels
-        # an active particle last corrected exactly its own step ago, so the
-        # prediction horizon IS the corrector interval
-        x1, v1, crk = hermite.correct(s, ev, h, order=order)
-        m3 = active[:, None]
-        st1 = ParticleState(
-            pos=jnp.where(m3, x1, s.pos),
-            vel=jnp.where(m3, v1, s.vel),
-            acc=jnp.where(m3, ev.acc.astype(dtype), s.acc),
-            jerk=jnp.where(m3, ev.jerk.astype(dtype), s.jerk),
-            snap=jnp.where(m3, ev.snap.astype(dtype), s.snap),
-            crackle=jnp.where(m3, crk, s.crackle),
-            mass=s.mass,
-            pot=jnp.where(active, ev.pot.astype(s.mass.dtype), s.pot),
-            time=s.time,
-        )
-        t_last1 = jnp.where(active, t_next, t_last)
-
-        # level update from the freshly corrected derivatives: finer at will
-        # (always commensurate), coarser one level at doubled-period ticks
-        dt_i = hermite.aarseth_dt_particles(st1, eta=eta, dt_max=dt_macro)
-        want = hermite.quantize_block_levels(dt_i, dt_max=dt_macro,
-                                             n_levels=n_levels)
-        can_coarsen = (t_next % (period << 1)) == 0
-        lev1 = jnp.where(active & (want > levels), want,
-                         jnp.where(active & (want < levels) & can_coarsen,
-                                   levels - 1, levels))
-
-        # macro boundary: advance member time, requantize, reset the grid
-        sync = t_next == n_sub
-        time1 = jnp.where(sync, s.time + dt_macro, s.time)
-        st1 = dataclasses.replace(st1, time=time1)
-        remaining = t_end - time1
-        dt_macro1 = jnp.where(
-            sync, jnp.minimum(jnp.asarray(dt_max, dtype),
-                              jnp.maximum(remaining, 1e-12)), dt_macro)
-        lev1 = jnp.where(sync, _macro_init(st1, dt_macro1), lev1)
-        t_last1 = jnp.where(sync, 0, t_last1)
-
-        # members past t_end freeze whole (lockstep batch stays rectangular)
-        st1, t_last1, lev1, dt_macro1 = jax.tree_util.tree_map(
-            lambda new, old: jnp.where(live, new, old),
-            (st1, t_last1, lev1, dt_macro1), (s, t_last, levels, dt_macro))
-        dp = jnp.where(live, jnp.sum(active).astype(dtype) * na, 0.0)
-        return st1, t_last1, lev1, dt_macro1, dp, live
+    member_init = functools.partial(_event_init, eta=eta, dt_max=dt_max,
+                                    n_levels=n_levels)
+    member_pre = functools.partial(_event_pre, n_sub=n_sub)
+    member_post = functools.partial(_event_post, n_sub=n_sub, eta=eta,
+                                    dt_max=dt_max, n_levels=n_levels,
+                                    order=order)
+    if compaction != "gather":
+        bev = _block_inner_evaluator(order, eps, impl, compaction,
+                                     block_i, block_j)
 
     @functools.partial(jax.jit, static_argnames=("n_events",))
     def run(batched, carry: BlockCarry, n_active, t_end, n_events: int):
@@ -540,13 +590,21 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
         # counter dtype: host precision when x64 is on (exact integer adds
         # far past float32's 2**24 window), silently float32 otherwise
         count_dtype = jax.dtypes.canonicalize_dtype(jnp.float64)
-        j_tiles = nbody_force.grid_tiles(1, n, 1, block_j)
         if compaction == "gather":
-            caps = ops.capacity_buckets(n, block_i)
-            # tiles enqueued per event at each capacity (both Hermite passes)
-            tiles_by_cap = jnp.asarray(
-                [(c // block_i) * j_tiles * n_passes for c in caps],
-                count_dtype)
+            plan = ops.CapacityPlan(n, n, block_i, block_j,
+                                    n_passes=n_passes)
+            # one evaluator + switch per pre-lowered bucket group: members
+            # grouped by their n_active ceiling dispatch over a schedule
+            # truncated there (lax.switch needs its operand unbatched under
+            # vmap to stay a real branch, so the index is shared *within*
+            # each group — the max live active count of the group's members)
+            group_data = [
+                (np.asarray(members, np.intp),
+                 plan.restrict(plan.caps[min(n_caps, len(plan.caps)) - 1]),
+                 _block_inner_evaluator(order, eps, impl, compaction,
+                                        block_i, block_j, n_caps))
+                for members, n_caps in groups]
+            inv = np.argsort(np.concatenate([m for m, _, _ in group_data]))
         else:
             # the masked dense launch always enqueues the full grid, however
             # many i-blocks pl.when predicates away
@@ -560,11 +618,21 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
                     s, c.t_last, c.levels, c.dt_macro, n_active, t_end)
             if compaction == "gather":
                 n_act = jnp.sum(active, axis=1).astype(jnp.int32)
-                cap_idx = ops.bucket_index(
-                    jnp.max(jnp.where(live, n_act, 0)), caps)
-                ev = jax.vmap(bev, in_axes=(0, 0, 0, 0, 0, 0, None))(
-                    xp, vp, ap, s.mass, active, perm, cap_idx)
-                tiles_event = tiles_by_cap[cap_idx]
+                evs, tiles_parts = [], []
+                for members, gplan, gbev in group_data:
+                    cap_idx = gplan.bucket(jnp.max(jnp.where(
+                        live[members], n_act[members], 0)))
+                    evs.append(jax.vmap(
+                        gbev, in_axes=(0, 0, 0, 0, 0, 0, None))(
+                            xp[members], vp[members], ap[members],
+                            s.mass[members], active[members], perm[members],
+                            cap_idx))
+                    tiles_parts.append(jnp.broadcast_to(
+                        gplan.tiles(cap_idx).astype(count_dtype),
+                        (len(members),)))
+                ev = jax.tree_util.tree_map(
+                    lambda *xs: jnp.concatenate(xs)[inv], *evs)
+                tiles_event = jnp.concatenate(tiles_parts)[inv]
             else:
                 ev = jax.vmap(bev)(xp, vp, ap, s.mass, active)
                 tiles_event = jnp.asarray(full_tiles, count_dtype)
@@ -614,6 +682,7 @@ def ensemble_run_block(
     eps: float = 1e-7,
     impl: str = "xla",
     compaction: str = "none",
+    bucket_mode: str = "member",
     block_i: Optional[int] = None,
     block_j: Optional[int] = None,
     devices: Optional[Sequence[jax.Device]] = None,
@@ -625,13 +694,20 @@ def ensemble_run_block(
     macro boundaries).  ``carry.n_pairs`` accumulates the per-run pairwise
     force evaluations actually performed (per Hermite pass) — the measured
     cost telemetry reports; ``carry.n_events`` counts productive events;
-    ``carry.n_tiles`` the kernel grid tiles launched (both passes).
+    ``carry.n_tiles`` the kernel grid tiles launched per member (both
+    passes).
 
     ``compaction="gather"`` gathers each event's active targets into a
     dense block-aligned buffer sized from a static capacity schedule and
     launches the kernels on the shrunk ``ceil(cap/BI) x N/BJ`` grid
-    (bit-for-bit the masked dense result; the capacity bucket is shared
-    across the batch, so mixed batches pay for their widest member).
+    (bit-for-bit the masked dense result).  ``bucket_mode`` controls how a
+    batch shares capacity buckets: ``"member"`` (default) groups members by
+    their static ``n_active`` ceiling into pre-lowered bucket groups (see
+    :func:`_bucket_groups`), so a mixed batch's quiescent members stop
+    paying for its widest member's grid; ``"shared"`` is the original
+    batch-shared bucket (one group, the baseline the heterogeneous-bucket
+    regression test measures against).  Both modes are bit-for-bit
+    identical physics — only the launch schedule differs.
     ``block_i``/``block_j`` override the kernel tile shape (default: the
     kernel's own); the compaction win is bounded by ``N / block_i``, so
     small-N runs want a smaller ``block_i`` than the all-pairs default.
@@ -641,19 +717,26 @@ def ensemble_run_block(
     # an unknown compaction mode fails in make_block_evaluator (same
     # ValueError) when the engine is first built — no duplicate check here
     mesh = _batch_mesh(devices)
-    init, run = _block_engine(
-        order, eps, impl, mesh, eta, dt_max, n_levels, compaction,
-        block_i or nbody_force.DEFAULT_BLOCK_I,
-        block_j or nbody_force.DEFAULT_BLOCK_J)
     n_active = _as_n_active(batched, n_active)
     t_end_ = jnp.asarray(t_end, batched.pos.dtype)
     if carry is None:
         (padded, na), b = _pad_batch((batched, n_active),
                                      mesh.size if mesh else 1)
-        carry = init(padded, na, t_end_)
     else:
         (padded, na, carry), b = _pad_batch((batched, n_active, carry),
                                             mesh.size if mesh else 1)
+    bi = block_i or nbody_force.DEFAULT_BLOCK_I
+    bj = block_j or nbody_force.DEFAULT_BLOCK_J
+    # groups come from the *padded* batch (padding repeats the first run,
+    # so it lands in that run's group); n_active must be concrete here —
+    # these entry points run host-side loops anyway
+    groups = _bucket_groups(padded.pos.shape[1], na, bi, bj, compaction,
+                            bucket_mode)
+    init, run = _block_engine(
+        order, eps, impl, mesh, eta, dt_max, n_levels, compaction,
+        bi, bj, groups)
+    if carry is None:
+        carry = init(padded, na, t_end_)
     out, carry = run(padded, carry, na, t_end_, n_events)
     return tuple(jax.tree_util.tree_map(lambda x: x[:b], t)
                  for t in (out, carry))
@@ -672,6 +755,7 @@ def evolve_ensemble_block(
     impl: Optional[str] = None,
     kernel: Optional[str] = None,
     compaction: str = "none",
+    bucket_mode: str = "member",
     block_i: Optional[int] = None,
     block_j: Optional[int] = None,
     devices: Optional[Sequence[jax.Device]] = None,
@@ -692,10 +776,181 @@ def evolve_ensemble_block(
         batched, carry = ensemble_run_block(
             batched, t_end=t_end, n_events=n_events, dt_max=dt_max,
             n_levels=n_levels, carry=carry, eta=eta, compaction=compaction,
-            block_i=block_i, block_j=block_j, **kw)
+            bucket_mode=bucket_mode, block_i=block_i, block_j=block_j, **kw)
         if float(jnp.min(batched.time)) >= t_end:
             break
     return batched, carry
+
+
+# --------------------------------------------------------------------------
+# single-run block stepper under a multi-device distribution strategy
+# --------------------------------------------------------------------------
+@functools.lru_cache(maxsize=64)
+def _strategy_block_engine(strategy: str, n_devices: int,
+                           chips_per_card: int, order: int, eps: float,
+                           impl: str, eta: float, dt_max: float,
+                           n_levels: int, compaction: str,
+                           block_i: int, block_j: int):
+    """Block-timestep engine whose force evaluation is *distributed* over a
+    device mesh instead of vmapped over a batch: one run, its domain sharded
+    by one of the paper's strategies, each shard compacting its own local
+    active targets (``core.strategies.make_strategy_block_evaluator``).
+
+    Reuses the exact per-event logic of the ensemble engine
+    (:func:`_event_pre` / :func:`_event_post`), so the event schedule — and
+    with it the committed block golden trajectory — is identical; only the
+    evaluator (and the per-*shard* tile accounting in the carry) differs.
+    """
+    from repro.core.strategies import make_strategy_block_evaluator
+
+    devs = jax.devices()[:n_devices]
+    bev = make_strategy_block_evaluator(
+        strategy, devices=devs, chips_per_card=chips_per_card, eps=eps,
+        order=order, impl=impl, block_i=block_i, block_j=block_j,
+        compaction=compaction)
+    n_sub = 2 ** (n_levels - 1)
+    event_init = functools.partial(_event_init, eta=eta, dt_max=dt_max,
+                                   n_levels=n_levels)
+    event_pre = functools.partial(_event_pre, n_sub=n_sub)
+    event_post = functools.partial(_event_post, n_sub=n_sub, eta=eta,
+                                   dt_max=dt_max, n_levels=n_levels,
+                                   order=order)
+
+    @functools.partial(jax.jit, static_argnames=("n_events",))
+    def run(state, carry: BlockCarry, t_end, n_events: int):
+        n = state.pos.shape[0]
+        count_dtype = jax.dtypes.canonicalize_dtype(jnp.float64)
+
+        def body(acc, _):
+            s, c = acc
+            live, t_next, active, h, xp, vp, ap, _ = event_pre(
+                s, c.t_last, c.levels, c.dt_macro, n, t_end)
+            # the shard-local permutations live inside the shards — the
+            # global argsort from event_pre is not used here
+            ev, tiles = bev(xp, vp, ap, s.mass, active)
+            s1, t_last, levels, dt_macro, dp, live = event_post(
+                s, ev, live, t_next, active, h, c.t_last, c.levels,
+                c.dt_macro, n, t_end)
+            c1 = BlockCarry(t_last=t_last, levels=levels, dt_macro=dt_macro,
+                            n_pairs=c.n_pairs + dp,
+                            n_events=c.n_events + live.astype(jnp.int32),
+                            n_tiles=c.n_tiles + jnp.where(
+                                live, tiles, 0).astype(count_dtype))
+            return (s1, c1), None
+
+        (state, carry), _ = jax.lax.scan(body, (state, carry), None,
+                                         length=n_events)
+        return state, carry
+
+    @jax.jit
+    def init(state, t_end):
+        t_last, levels, dt_macro = event_init(state, state.pos.shape[0],
+                                              t_end)
+        count_dtype = jax.dtypes.canonicalize_dtype(jnp.float64)
+        return BlockCarry(
+            t_last=t_last, levels=levels, dt_macro=dt_macro,
+            n_pairs=jnp.zeros((), count_dtype),
+            n_events=jnp.zeros((), jnp.int32),
+            n_tiles=jnp.zeros(n_devices, count_dtype))
+
+    return init, run
+
+
+def _n_devices(devices) -> int:
+    if devices is None:
+        return len(jax.devices())
+    if isinstance(devices, int):
+        return devices
+    return len(list(devices))
+
+
+def strategy_run_block(
+    state: ParticleState,
+    *,
+    t_end: float,
+    n_events: int = 64,
+    dt_max: float = 0.0625,
+    n_levels: int = 8,
+    carry: Optional[BlockCarry] = None,
+    eta: float = 0.02,
+    order: int = 6,
+    eps: float = 1e-7,
+    impl: str = "xla",
+    strategy: str = "replicated",
+    chips_per_card: int = 2,
+    compaction: str = "none",
+    block_i: Optional[int] = None,
+    block_j: Optional[int] = None,
+    devices=None,
+):
+    """Advance ONE initialized run by up to ``n_events`` block events, the
+    force evaluation distributed by ``strategy`` over ``devices`` (an int
+    count, a device sequence, or None for all visible devices).
+
+    Returns ``(state, carry)`` like :func:`ensemble_run_block`, except the
+    carry's scalar leaves are unbatched and ``carry.n_tiles`` is the
+    ``(P,)`` vector of kernel grid tiles *each shard* enqueued — with
+    ``compaction="gather"`` every shard gathers its local active targets
+    and launches ``ceil(cap_local/BI) x N/BJ`` tiles, so the vector shows
+    which chips' launch schedules the active set actually touched.
+    """
+    if n_levels < 1:
+        raise ValueError(f"n_levels={n_levels} must be >= 1")
+    init, run = _strategy_block_engine(
+        strategy, _n_devices(devices), chips_per_card, order, eps, impl,
+        eta, dt_max, n_levels, compaction,
+        block_i or nbody_force.DEFAULT_BLOCK_I,
+        block_j or nbody_force.DEFAULT_BLOCK_J)
+    t_end_ = jnp.asarray(t_end, state.pos.dtype)
+    if carry is None:
+        carry = init(state, t_end_)
+    return run(state, carry, t_end_, n_events)
+
+
+def evolve_strategy_block(
+    state: ParticleState,
+    *,
+    t_end: float,
+    strategy: str = "replicated",
+    dt_max: float = 0.0625,
+    n_levels: int = 8,
+    eta: float = 0.02,
+    order: int = 6,
+    eps: float = 1e-7,
+    impl: Optional[str] = None,
+    kernel: Optional[str] = None,
+    chips_per_card: int = 2,
+    compaction: str = "none",
+    block_i: Optional[int] = None,
+    block_j: Optional[int] = None,
+    devices=None,
+    n_events: int = 64,
+    max_chunks: int = 100_000,
+):
+    """One-shot strategy-distributed block run: initialize (with the same
+    strategy's lockstep evaluator), evolve to ``t_end``.  Returns
+    ``(state, carry)`` (see :func:`strategy_run_block`)."""
+    from repro.core.strategies import make_strategy_evaluator
+
+    impl = resolve_eval_impl(impl, kernel)
+    ndev = _n_devices(devices)
+    ev = make_strategy_evaluator(
+        strategy, devices=jax.devices()[:ndev],
+        chips_per_card=chips_per_card, eps=eps, order=order, impl=impl,
+        block_i=block_i or nbody_force.DEFAULT_BLOCK_I,
+        block_j=block_j or nbody_force.DEFAULT_BLOCK_J)
+    state = hermite.initialize(state, ev)
+    carry = None
+    for _ in range(max_chunks):
+        state, carry = strategy_run_block(
+            state, t_end=t_end, n_events=n_events, dt_max=dt_max,
+            n_levels=n_levels, carry=carry, eta=eta, order=order, eps=eps,
+            impl=impl, strategy=strategy, chips_per_card=chips_per_card,
+            compaction=compaction, block_i=block_i, block_j=block_j,
+            devices=ndev)
+        if float(state.time) >= t_end:
+            break
+    return state, carry
 
 
 def evolve_ensemble(

@@ -65,6 +65,7 @@ class TelemetryRecorder:
                  per_run_steps: Optional[List[int]] = None,
                  per_run_pairs: Optional[List[float]] = None,
                  per_run_tiles: Optional[List[float]] = None,
+                 per_shard_tiles: Optional[List[float]] = None,
                  extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
         """Assemble the JSON-ready report for this run.
 
@@ -88,6 +89,13 @@ class TelemetryRecorder:
         reached the launch schedule: the masked block path shrinks
         ``force_evals`` but launches the full grid every event, the
         compaction path shrinks both.
+
+        ``per_shard_tiles`` (strategy-distributed block runs) additionally
+        breaks the launched tiles down *per device shard* as
+        ``grid_tiles_per_shard`` — under shard-local compaction each chip
+        enqueues only the buckets its own local active set needed, so the
+        vector shows which shards the activity actually touched (a flat
+        vector at the dense count means compaction never engaged).
         """
         walls = [s.wall_s for s in self.steps]
         wall_total = sum(walls) if walls else time.perf_counter() - self._t0
@@ -123,6 +131,8 @@ class TelemetryRecorder:
             **({"grid_tiles": [float(t) for t in per_run_tiles],
                 "grid_tiles_total": float(sum(per_run_tiles))}
                if per_run_tiles is not None else {}),
+            **({"grid_tiles_per_shard": [float(t) for t in per_shard_tiles]}
+               if per_shard_tiles is not None else {}),
             "steps": n_steps,
             "wall_s": wall_total,
             "steps_per_s": n_steps / wall_total if wall_total > 0 else 0.0,

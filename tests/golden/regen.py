@@ -11,12 +11,21 @@ regression test (``tests/test_golden_trajectories.py``) replays the recipe
 through every kernel/strategy combination and asserts agreement, so a silent
 physics change in any kernel refactor fails loudly.  Commit the regenerated
 JSON together with the change that motivated it.
+
+Cases whose meta carries ``devices: k`` need a forced k-device host mesh,
+which must be configured BEFORE jax initializes — ``main()`` re-executes
+itself per such case in a subprocess with the right ``XLA_FLAGS``, so the
+multi-device fixtures of ``tests/test_strategy_compaction.py`` regenerate
+from the same single command as everything else.
 """
 
 from __future__ import annotations
 
+import argparse
 import json
 import os
+import subprocess
+import sys
 
 import jax
 
@@ -47,11 +56,32 @@ CASES = {
         scenario="binary_plummer", n=24, seed=1, mode="block",
         dt_max=1.0 / 64, n_levels=4, t_end=0.0625, eta=0.02, order=6,
         eps=1e-7),
+    # forced-multi-device fixture: the same block recipe, its domain sharded
+    # over a 2-device host mesh with shard-local compaction (mode
+    # "block_strategy" runs FP32 strategy evaluation — no fp64 oracle exists
+    # for the distributed layer, so the differential suite compares this
+    # golden at FP32 tolerance and leans on gather==none being bit-for-bit).
+    # Needs more devices than a default process has: main() re-executes
+    # itself in a subprocess with XLA_FLAGS set before jax initializes.
+    "binary_plummer_block_2dev.json": dict(
+        scenario="binary_plummer", n=24, seed=1, mode="block_strategy",
+        strategy="mesh_sharded", impl="xla", devices=2,
+        compaction="gather", block_i=8, block_j=128,
+        dt_max=1.0 / 64, n_levels=4, t_end=0.0625, eta=0.02, order=6,
+        eps=1e-7),
 }
 
 
 def integrate(meta: dict):
     state = scenarios.make(meta["scenario"], meta["n"], seed=meta["seed"])
+    if meta.get("mode") == "block_strategy":
+        out, carry = ens.evolve_strategy_block(
+            state, t_end=meta["t_end"], dt_max=meta["dt_max"],
+            n_levels=meta["n_levels"], eta=meta["eta"], order=meta["order"],
+            eps=meta["eps"], impl=meta["impl"], strategy=meta["strategy"],
+            compaction=meta["compaction"], block_i=meta["block_i"],
+            block_j=meta["block_j"], devices=meta["devices"])
+        return state, out, int(carry.n_events)
     if meta.get("mode") == "block":
         batched, carry = ens.evolve_ensemble_block(
             [state], t_end=meta["t_end"], dt_max=meta["dt_max"],
@@ -66,12 +96,40 @@ def integrate(meta: dict):
     return state, out, None
 
 
-def main():
+def _respawn(fname: str, devices: int) -> None:
+    """Regenerate one case in a subprocess that forces ``devices``
+    host-platform devices BEFORE jax initializes (the same constraint the
+    multi-device tests work around; this keeps every committed golden —
+    single- and multi-device — reproducible from one command)."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "..", "src") + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    res = subprocess.run(
+        [sys.executable, os.path.abspath(__file__), "--only", fname],
+        env=env, capture_output=True, text=True, timeout=1200)
+    if res.returncode != 0:
+        raise RuntimeError(
+            f"multi-device regen of {fname} failed:\n{res.stderr[-2000:]}")
+    print(res.stdout, end="")
+
+
+def main(only: str | None = None):
     for fname, meta in CASES.items():
+        if only is not None and fname != only:
+            continue
+        devices = int(meta.get("devices", 1))
+        if devices > jax.device_count():
+            _respawn(fname, devices)
+            continue
         state, out, n_events = integrate(meta)
+        evaluator = (
+            f"fp32 {meta['strategy']} strategy x {meta['devices']} devices"
+            if meta.get("mode") == "block_strategy"
+            else "fp64 golden (kernels.ref at x64)")
         doc = {
             "meta": {**meta, "generator": "tests/golden/regen.py",
-                     "evaluator": "fp64 golden (kernels.ref at x64)"},
+                     "evaluator": evaluator},
             "pos0": np.asarray(state.pos, np.float64).tolist(),
             "vel0": np.asarray(state.vel, np.float64).tolist(),
             "mass": np.asarray(state.mass, np.float64).tolist(),
@@ -92,4 +150,8 @@ def main():
 
 
 if __name__ == "__main__":
-    main()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None, metavar="FNAME",
+                    help="regenerate a single case (used by the "
+                         "multi-device subprocess respawn)")
+    main(only=ap.parse_args().only)
