@@ -30,20 +30,24 @@ Five fast probes, one JSON artifact:
    no worse.  Rows record the per-shard tile vectors from
    ``grid_tiles_per_shard``.
 
-The consolidated ``BENCH_ci.json`` is written at the repo root; the CI
-``bench-smoke`` job uploads it as a workflow artifact on every push, so
-perf regressions show up as a trajectory, not an anecdote.
+The consolidated record is *appended* to the ``BENCH_ci.json`` trajectory
+at the repo root, stamped with its provenance (git SHA, trajectory
+``schema_version``, jax version, device count); the CI ``bench-smoke`` job
+uploads the trajectory as a workflow artifact on every push and gates it
+with ``python -m repro.obs.regress`` — a >20% regression of wall per
+event, launched tiles or modeled EDP against the latest comparable
+committed record fails the job (see ``docs/observability.md``).
 
 ``python -m benchmarks.bench_ci`` (or via ``benchmarks.run --only bench_ci``).
 """
 
 from __future__ import annotations
 
-import json
 import os
 import time
 
 from benchmarks import common
+from repro.obs import regress
 
 #: The stepper-sweep workload: wide timestep dynamic range (tight binaries
 #: inside a Plummer sphere) — the case block timesteps exist for.
@@ -71,6 +75,7 @@ print("FORCE_EVALS", r["force_evals_total"])
 print("DE_REL", r["de_rel"])
 print("MEDIAN_CHUNK", r["step_wall_s"]["median"])
 print("GRID_TILES", r.get("grid_tiles_total", 0.0))
+print("EDP", r["modeled"]["edp_Js"])
 """
 
 #: Per-stepper extra SimConfig fields.  The block row halves eta: block
@@ -106,6 +111,7 @@ def stepper_sweep(quick: bool = False):
                 f"{common.stdout_field(out, 'PAIRS_PER_S'):.3e}",
             "force_evals": common.stdout_field(out, "FORCE_EVALS"),
             "de_rel": f"{common.stdout_field(out, 'DE_REL'):.3e}",
+            "edp_Js": round(common.stdout_field(out, "EDP"), 2),
         })
     by = {r["stepper"]: r for r in rows}
     if "adaptive" in by and "block" in by:
@@ -120,7 +126,7 @@ def stepper_sweep(quick: bool = False):
     common.emit("stepper_modes", rows,
                 ["stepper", "scenario", "n", "t_end", "wall_s", "steps",
                  "wall_per_event_s", "steps_per_s", "interactions_per_s",
-                 "force_evals", "de_rel"])
+                 "force_evals", "de_rel", "edp_Js"])
     return rows
 
 
@@ -282,8 +288,20 @@ def strategy_compaction_sweep(quick: bool = False):
     return rows
 
 
+#: forced-host device count of the distributed probe — part of the
+#: provenance stamp (records from differently-shaped suites never compare)
+STRATEGY_DEVICES = 2
+
+
 def run(quick: bool = False, smoke: bool = True):
-    """Run every probe and write the consolidated BENCH_ci.json."""
+    """Run every probe and *append* one stamped record to BENCH_ci.json.
+
+    The record carries a ``provenance`` stamp (git SHA, trajectory
+    ``schema_version``, jax version, device count) so the
+    ``repro.obs.regress`` gate can refuse incomparable baselines; the gate
+    itself runs as a separate CI step (``python -m repro.obs.regress``) so a
+    regression fails the job with the full summary in the log.
+    """
     del smoke  # this module IS the smoke mode
     from benchmarks import ensemble_throughput, mixed_ensemble
 
@@ -298,10 +316,12 @@ def run(quick: bool = False, smoke: bool = True):
         "strategy_compaction": strategy_compaction_sweep(quick=quick),
     }
     doc["wall_s_total"] = round(time.perf_counter() - t0, 1)
-    with open(OUT_PATH, "w") as f:
-        json.dump(doc, f, indent=1)
-    print(f"# BENCH_ci.json written to {OUT_PATH} "
-          f"({doc['wall_s_total']:.0f}s total)")
+    doc["provenance"] = regress.provenance(STRATEGY_DEVICES, repo=common.REPO)
+    records = regress.append_record(OUT_PATH, doc)
+    print(f"# BENCH_ci.json: appended record {len(records)} "
+          f"(sha {doc['provenance']['git_sha'][:12]}, "
+          f"{doc['wall_s_total']:.0f}s total)")
+    print(regress.check(OUT_PATH).summary())
     return doc
 
 

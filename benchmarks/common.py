@@ -1,11 +1,10 @@
 """Shared benchmark utilities: timing, subprocess multi-device runs, and the
 energy model used for the paper's Table 1 / Fig. 6 analogues.
 
-Energy model (documented, since the CPU host has no TPU power rails):
-  P_chip = 170 W            (TPU v5e nameplate, ~compute-bound)
-  P_host = 250 W            (host CPUs amortized across the job)
-  E = T * (P_host + n_chips * P_chip * util),  util from the roofline
-      (dominant-term occupancy; idle chips draw ~0.35 * P_chip)
+The energy model itself lives in ``repro.obs.energy`` (the single source of
+truth also used by ``repro.sim.telemetry``); the constants and
+``modeled_energy`` are re-exported here so benchmark modules keep reading
+``common.modeled_energy`` / ``common.P_CHIP``.
 """
 
 from __future__ import annotations
@@ -17,9 +16,8 @@ import subprocess
 import sys
 import time
 
-P_CHIP = 170.0
-P_HOST = 250.0
-IDLE_FRAC = 0.35
+from repro.obs.energy import (  # noqa: F401  (re-exported)
+    IDLE_FRAC, P_CHIP, P_HOST, modeled_energy)
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 DRYRUN_DIR = os.path.join(REPO, "experiments", "dryrun")
@@ -62,14 +60,6 @@ def stdout_field(out: str, key: str) -> float:
         if line.startswith(key + " "):
             return float(line.split()[-1])
     raise RuntimeError(f"no {key} line in output:\n{out}")
-
-
-def modeled_energy(t_solution: float, n_chips: int, util: float) -> dict:
-    """Paper Fig. 6 energy model; returns E (J), peak power (W), EDP (J s)."""
-    p_chips = n_chips * P_CHIP * (IDLE_FRAC + (1 - IDLE_FRAC) * util)
-    p_total = P_HOST + p_chips
-    e = t_solution * p_total
-    return {"energy_J": e, "peak_W": p_total, "edp_Js": e * t_solution}
 
 
 def emit(name: str, rows: list, header: list):

@@ -174,12 +174,14 @@ def _replicated(mesh: Mesh, order: int, kw) -> Evaluator:
            (P(axes), P(axes), P(axes), P(axes)), kw["impl"])
     def eval_padded(pos, vel, mass):
         # each device: local targets x full (gathered) source set
-        gp = jax.lax.all_gather(pos, axes, axis=0, tiled=True)
-        gv = jax.lax.all_gather(vel, axes, axis=0, tiled=True)
-        gm = jax.lax.all_gather(mass, axes, axis=0, tiled=True)
+        with jax.named_scope("collective.all_gather"):
+            gp = jax.lax.all_gather(pos, axes, axis=0, tiled=True)
+            gv = jax.lax.all_gather(vel, axes, axis=0, tiled=True)
+            gm = jax.lax.all_gather(mass, axes, axis=0, tiled=True)
         acc, jerk, pot = ops.acc_jerk_pot_rect(pos, vel, gp, gv, gm, **kw)
         if order >= 6:
-            ga = jax.lax.all_gather(acc, axes, axis=0, tiled=True)
+            with jax.named_scope("collective.all_gather"):
+                ga = jax.lax.all_gather(acc, axes, axis=0, tiled=True)
             snp = ops.snap_rect(pos, vel, acc, gp, gv, ga, gm, **kw)
         else:
             snp = jnp.zeros_like(acc)
@@ -198,8 +200,9 @@ def _two_level(mesh: Mesh, order: int, kw) -> Evaluator:
         # stage 1: within the card (the paper's explicit chip partitioning),
         # stage 2: across cards (the MPI level).  Source order differs from
         # the 1D gather but all-pairs summation is order-invariant.
-        x = jax.lax.all_gather(x, "chip", axis=0, tiled=True)
-        return jax.lax.all_gather(x, "card", axis=0, tiled=True)
+        with jax.named_scope("collective.all_gather2"):
+            x = jax.lax.all_gather(x, "chip", axis=0, tiled=True)
+            return jax.lax.all_gather(x, "card", axis=0, tiled=True)
 
     @jax.jit
     @_smap(mesh, (P(axes), P(axes), P(axes)),
@@ -232,7 +235,9 @@ def _mesh_sharded(mesh: Mesh, order: int, kw) -> Evaluator:
         pt, vt = wsc(pos, sharded2), wsc(vel, sharded2)
         # ... "replicated buffers" for the globally shared source data; the
         # runtime inserts the all-gathers (cf. TT-NN MeshDevice).
-        ps, vs, ms = wsc(pos, replicated), wsc(vel, replicated), wsc(mass, replicated)
+        with jax.named_scope("collective.replicate"):
+            ps, vs, ms = (wsc(pos, replicated), wsc(vel, replicated),
+                          wsc(mass, replicated))
         acc, jerk, pot = ops.acc_jerk_pot_rect(pt, vt, ps, vs, ms, **kw)
         acc = wsc(acc, sharded2)
         if order >= 6:
@@ -255,7 +260,8 @@ def _ring(mesh: Mesh, order: int, kw) -> Evaluator:
     perm = [(i, (i + 1) % p) for i in range(p)]
 
     def shift(x):
-        return jax.lax.ppermute(x, axes[0], perm)
+        with jax.named_scope("collective.ppermute"):
+            return jax.lax.ppermute(x, axes[0], perm)
 
     @jax.jit
     @_smap(mesh, (P(axes), P(axes), P(axes)),
@@ -559,15 +565,17 @@ def _replicated_block(mesh, order, kw, compaction, n_passes):
     axes = mesh.axis_names
 
     def gather(x):
-        return jax.lax.all_gather(x, axes, axis=0, tiled=True)
+        with jax.named_scope("collective.all_gather"):
+            return jax.lax.all_gather(x, axes, axis=0, tiled=True)
 
     return _gathered_block(mesh, order, kw, compaction, n_passes, gather)
 
 
 def _two_level_block(mesh, order, kw, compaction, n_passes):
     def gather2(x):
-        x = jax.lax.all_gather(x, "chip", axis=0, tiled=True)
-        return jax.lax.all_gather(x, "card", axis=0, tiled=True)
+        with jax.named_scope("collective.all_gather2"):
+            x = jax.lax.all_gather(x, "chip", axis=0, tiled=True)
+            return jax.lax.all_gather(x, "card", axis=0, tiled=True)
 
     return _gathered_block(mesh, order, kw, compaction, n_passes, gather2)
 
@@ -627,7 +635,8 @@ def _ring_block(mesh, order, kw, compaction, n_passes):
     ring = [(i, (i + 1) % p) for i in range(p)]
 
     def shift(x):
-        return jax.lax.ppermute(x, axes[0], ring)
+        with jax.named_scope("collective.ppermute"):
+            return jax.lax.ppermute(x, axes[0], ring)
 
     @jax.jit
     @_smap(mesh, (P(axes),) * 5,

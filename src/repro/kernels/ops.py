@@ -243,8 +243,9 @@ def compact_targets(perm, cap: int, *rows):
     followed by inactive fill rows (whose outputs the activity mask zeroes).
     ``cap`` is static — each capacity bucket is its own lowered computation.
     """
-    idx = perm[: min(cap, perm.shape[0])]
-    return tuple(r[idx] for r in rows)
+    with jax.named_scope(f"obs.compact_gather.cap{cap}"):
+        idx = perm[: min(cap, perm.shape[0])]
+        return tuple(r[idx] for r in rows)
 
 
 def scatter_outputs(perm, cap: int, n: int, *outs):
@@ -255,10 +256,12 @@ def scatter_outputs(perm, cap: int, n: int, *outs):
     ``scatter_outputs`` after :func:`compact_targets` is the identity on
     active rows and zero elsewhere.
     """
-    idx = perm[: min(cap, perm.shape[0])]
-    return tuple(
-        jnp.zeros((n,) + o.shape[1:], o.dtype).at[idx].set(o) for o in outs
-    )
+    with jax.named_scope(f"obs.compact_scatter.cap{cap}"):
+        idx = perm[: min(cap, perm.shape[0])]
+        return tuple(
+            jnp.zeros((n,) + o.shape[1:], o.dtype).at[idx].set(o)
+            for o in outs
+        )
 
 
 def scatter_sources(perm, cap: int, base, upd, mask_c):
@@ -276,10 +279,11 @@ def scatter_sources(perm, cap: int, base, upd, mask_c):
     are untouched (an active row is always inside the window when ``cap``
     bounds the active count).
     """
-    idx = perm[: min(cap, perm.shape[0])]
-    m = mask_c[:, None] if upd.ndim == 2 else mask_c
-    rows = jnp.where(m, upd.astype(base.dtype), base[idx])
-    return base.at[idx].set(rows)
+    with jax.named_scope(f"obs.scatter_sources.cap{cap}"):
+        idx = perm[: min(cap, perm.shape[0])]
+        m = mask_c[:, None] if upd.ndim == 2 else mask_c
+        rows = jnp.where(m, upd.astype(base.dtype), base[idx])
+        return base.at[idx].set(rows)
 
 
 @partial(jax.jit, static_argnames=("eps", "block_i", "block_j", "impl"))

@@ -133,6 +133,15 @@ def main(argv=None):
     ap.add_argument("--param", action="append", metavar="K=V",
                     help="scenario parameter, repeatable")
     ap.add_argument("--out", default=None, help="JSON report path")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write a Chrome-trace/Perfetto JSON of the run "
+                         "(nested macro-step -> event -> kernel-launch "
+                         "spans; load at https://ui.perfetto.dev)")
+    ap.add_argument("--metrics-interval", type=int, default=0,
+                    help="attach a metrics-registry snapshot to every K-th "
+                         "diagnostics record (0 = final snapshot only; the "
+                         "report always carries the final one under "
+                         "'metrics')")
     ap.add_argument("--no-validate", dest="validate", action="store_false",
                     help="skip construction-time scenario diagnostics")
     ap.add_argument("--list-scenarios", action="store_true")
@@ -204,6 +213,7 @@ def main(argv=None):
         impl=args.impl, kernel=args.kernel, mix=mix, pad=pad,
         diag_every=args.diag_every, scenario_params=params,
         validate_ic=args.validate,
+        trace=args.trace, metrics_interval=args.metrics_interval,
         out=args.out or telemetry.default_report_path(
             {"scenario": scenario_name, "n": n_arg,
              "ensemble": args.ensemble if not mixed
@@ -236,6 +246,14 @@ def main(argv=None):
     print(f"[sim] |dE/E|={report['de_rel']:.3e} "
           f"E_model={report['modeled']['energy_J']:.1f}J "
           f"EDP={report['modeled']['edp_Js']:.1f}Js")
+    metrics = report.get("metrics") or {}
+    counters = metrics.get("counters") or {}
+    if counters:
+        bits = " ".join(f"{k}={v['value']:g}"
+                        for k, v in sorted(counters.items()))
+        print(f"[sim] metrics: {bits}")
+    if "trace_path" in report:
+        print(f"[sim] trace -> {report['trace_path']}")
     print(f"[sim] report -> {report.get('report_path', '(not written)')}")
     return 0
 

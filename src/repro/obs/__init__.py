@@ -1,0 +1,21 @@
+"""repro.obs — observability substrate for the ensemble engine.
+
+Four small, dependency-free modules every other layer reports through:
+
+* :mod:`repro.obs.trace`   — nestable host-side spans exported as
+  Chrome-trace/Perfetto JSON, lined up with device activity via
+  ``jax.profiler.TraceAnnotation`` / ``jax.named_scope``;
+* :mod:`repro.obs.metrics` — counters / gauges / histograms collected into a
+  per-run registry and snapshotted into the telemetry report under a
+  versioned ``metrics`` key;
+* :mod:`repro.obs.energy`  — the paper's Fig. 6 energy model (single source
+  of truth for ``P_CHIP`` / ``P_HOST`` / ``IDLE_FRAC``);
+* :mod:`repro.obs.regress` — the CI perf-regression gate over the
+  ``BENCH_ci.json`` trajectory.
+
+See ``docs/observability.md`` for the span taxonomy and metric names.
+
+Submodules are imported explicitly (``from repro.obs import metrics``) —
+no eager re-exports here, so ``python -m repro.obs.regress`` never trips
+the runpy double-import warning.
+"""

@@ -1,0 +1,37 @@
+"""The paper's Fig. 6 / Table 1 energy model — single source of truth.
+
+The CPU host has no TPU power rails, so energy-to-solution is *modeled* the
+way the paper's own analysis does it (documented constants, dominant-term
+occupancy):
+
+  P_chip = 170 W            (TPU v5e nameplate, ~compute-bound)
+  P_host = 250 W            (host CPUs amortized across the job)
+  E = T * (P_host + n_chips * P_chip * util),  util from the roofline
+      (idle chips draw ~0.35 * P_chip)
+
+``repro.sim.telemetry`` and ``benchmarks.common`` both import from here —
+the constants used by the telemetry reports and the benchmark tables can
+never drift apart (``tests/test_telemetry.py`` pins them against the
+paper's Fig. 6 values).
+"""
+
+from __future__ import annotations
+
+#: chip nameplate power draw at full occupancy (W)
+P_CHIP = 170.0
+#: host CPU power amortized across the job (W)
+P_HOST = 250.0
+#: fraction of P_CHIP an idle chip still draws
+IDLE_FRAC = 0.35
+
+#: Dominant-term device occupancy assumed for the modeled energy accounting
+#: (matches the util figure used by benchmarks/table1_strategies.py).
+DEFAULT_UTIL = 0.6
+
+
+def modeled_energy(t_solution: float, n_chips: int, util: float) -> dict:
+    """Paper Fig. 6 energy model; returns E (J), peak power (W), EDP (J s)."""
+    p_chips = n_chips * P_CHIP * (IDLE_FRAC + (1 - IDLE_FRAC) * util)
+    p_total = P_HOST + p_chips
+    e = t_solution * p_total
+    return {"energy_J": e, "peak_W": p_total, "edp_Js": e * t_solution}

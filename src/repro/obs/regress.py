@@ -1,0 +1,297 @@
+"""Perf-regression gate over the ``BENCH_ci.json`` trajectory.
+
+``benchmarks/bench_ci.py`` appends one stamped record per bench-smoke run —
+git SHA, trajectory ``schema_version``, jax version, device count — turning
+the file from an anecdote into a trajectory.  This module is the gate over
+it: the newest record is compared against the most recent *comparable*
+earlier record (or an explicit ``--baseline`` file), and CI fails when any
+tracked lower-is-better metric — wall per event, launched tiles, modeled
+EDP — regresses more than :data:`DEFAULT_THRESHOLD` (20%).
+
+Two refusal rules keep the gate honest:
+
+* records without matching provenance (``schema_version`` / ``jax_version``
+  / ``device_count``) are *incomparable* — never silently compared.  When
+  scanning the trajectory they are skipped; an explicit ``--baseline`` that
+  is incomparable is a hard error (exit 2);
+* a metric present in the baseline but missing from the current record is a
+  regression (a silently dropped row must not pass the gate); a metric new
+  in the current record is informational only.
+
+CLI (the CI bench-smoke job's last step)::
+
+    python -m repro.obs.regress BENCH_ci.json [--threshold 0.2]
+    python -m repro.obs.regress new.json --baseline committed.json
+
+Exit codes: 0 pass, 1 regression, 2 refused (incomparable / malformed).
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+from typing import Any, Dict, List, Optional, Tuple
+
+#: version of the BENCH_ci.json *trajectory* format (bumped from the
+#: implicit v1 single-record file the gate still reads as legacy)
+BENCH_SCHEMA_VERSION = 2
+
+#: relative regression that fails the gate (current > (1+thr) * baseline)
+DEFAULT_THRESHOLD = 0.20
+
+#: provenance fields that must match for two records to be comparable
+_COMPARABLE_FIELDS = ("schema_version", "jax_version", "device_count")
+
+
+# --------------------------------------------------------------------------
+# provenance stamping
+# --------------------------------------------------------------------------
+def git_sha(repo: Optional[str] = None) -> str:
+    """HEAD commit of ``repo`` (cwd by default); ``"unknown"`` off-repo."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=repo, capture_output=True,
+            text=True, timeout=10)
+        sha = out.stdout.strip()
+        return sha if out.returncode == 0 and sha else "unknown"
+    except (OSError, subprocess.SubprocessError):
+        return "unknown"
+
+
+def provenance(device_count: int, *, repo: Optional[str] = None,
+               jax_version: Optional[str] = None) -> Dict[str, Any]:
+    """The stamp every bench-smoke record carries (comparability contract)."""
+    if jax_version is None:
+        try:
+            from importlib.metadata import version
+            jax_version = version("jax")
+        except Exception:
+            jax_version = "unknown"
+    return {
+        "git_sha": git_sha(repo),
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "jax_version": jax_version,
+        "device_count": int(device_count),
+    }
+
+
+# --------------------------------------------------------------------------
+# trajectory I/O
+# --------------------------------------------------------------------------
+def load_trajectory(path: str) -> List[Dict[str, Any]]:
+    """Records oldest-first.  A legacy single-record file (the pre-gate
+    ``BENCH_ci.json``: one suite dict, no provenance) loads as a one-record
+    trajectory so history survives the format migration."""
+    with open(path) as f:
+        doc = json.load(f)
+    if isinstance(doc, dict) and "records" in doc:
+        records = doc["records"]
+        if not isinstance(records, list):
+            raise ValueError(f"{path}: 'records' must be a list")
+        return records
+    if isinstance(doc, dict) and doc.get("suite") == "bench_ci":
+        return [doc]  # legacy v1: the bare suite record
+    raise ValueError(
+        f"{path}: neither a bench_ci trajectory nor a legacy suite record")
+
+
+def save_trajectory(path: str, records: List[Dict[str, Any]]) -> str:
+    doc = {
+        "format": "bench_ci_trajectory",
+        "schema_version": BENCH_SCHEMA_VERSION,
+        "records": records,
+    }
+    with open(path, "w") as f:
+        json.dump(doc, f, indent=1)
+    return path
+
+
+def append_record(path: str, record: Dict[str, Any]) -> List[Dict[str, Any]]:
+    """Append ``record`` to the trajectory at ``path`` (created if absent);
+    returns the full record list."""
+    records = load_trajectory(path) if os.path.exists(path) else []
+    records.append(record)
+    save_trajectory(path, records)
+    return records
+
+
+# --------------------------------------------------------------------------
+# tracked metrics
+# --------------------------------------------------------------------------
+def tracked_metrics(record: Dict[str, Any]) -> Dict[str, float]:
+    """Flatten one suite record to its gated lower-is-better metrics.
+
+    Keys are stable row paths (``sweep/row-key/metric``) so trajectories
+    remain joinable as sweeps grow rows.
+    """
+    out: Dict[str, float] = {}
+
+    def put(key: str, value: Any) -> None:
+        try:
+            v = float(value)
+        except (TypeError, ValueError):
+            return
+        if v > 0:  # zero/absent measurements carry no regression signal
+            out[key] = v
+
+    for row in record.get("stepper_modes") or ():
+        base = f"stepper_modes/{row.get('stepper')}"
+        put(f"{base}/wall_per_event_s", row.get("wall_per_event_s"))
+        put(f"{base}/edp_Js", row.get("edp_Js"))
+    for row in record.get("block_compaction") or ():
+        base = f"block_compaction/seed{row.get('seed')}"
+        put(f"{base}/wall_per_event_gather_s",
+            row.get("wall_per_event_gather_s"))
+        put(f"{base}/tiles_gather", row.get("tiles_gather"))
+    for row in record.get("strategy_compaction") or ():
+        base = f"strategy_compaction/seed{row.get('seed')}"
+        put(f"{base}/wall_per_event_gather_s",
+            row.get("wall_per_event_gather_s"))
+        put(f"{base}/tiles_shard_max_gather",
+            row.get("tiles_shard_max_gather"))
+    return out
+
+
+def comparable(current: Dict[str, Any],
+               baseline: Dict[str, Any]) -> Tuple[bool, str]:
+    """Whether two stamped records may be compared; (ok, reason-if-not)."""
+    pc, pb = current.get("provenance"), baseline.get("provenance")
+    if not isinstance(pc, dict):
+        return False, "current record is unstamped (no provenance)"
+    if not isinstance(pb, dict):
+        return False, "baseline record is unstamped (no provenance)"
+    for field in _COMPARABLE_FIELDS:
+        if pc.get(field) != pb.get(field):
+            return False, (f"{field} mismatch: current={pc.get(field)!r} "
+                           f"baseline={pb.get(field)!r}")
+    return True, ""
+
+
+# --------------------------------------------------------------------------
+# the gate
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Regression:
+    metric: str
+    baseline: float
+    current: float
+
+    @property
+    def ratio(self) -> float:
+        return self.current / self.baseline if self.baseline else float("inf")
+
+    def __str__(self) -> str:
+        return (f"{self.metric}: {self.baseline:g} -> {self.current:g} "
+                f"({self.ratio:.2f}x)")
+
+
+@dataclasses.dataclass
+class GateResult:
+    ok: bool
+    regressions: List[Regression]
+    notes: List[str]
+    baseline_sha: Optional[str] = None
+
+    def summary(self) -> str:
+        lines = [f"# regress: {'PASS' if self.ok else 'FAIL'}"
+                 + (f" (baseline {self.baseline_sha})"
+                    if self.baseline_sha else "")]
+        lines += [f"#   REGRESSED {r}" for r in self.regressions]
+        lines += [f"#   note: {n}" for n in self.notes]
+        return "\n".join(lines)
+
+
+def compare(current: Dict[str, Any], baseline: Dict[str, Any],
+            threshold: float = DEFAULT_THRESHOLD) -> List[Regression]:
+    """Tracked metrics of ``current`` vs ``baseline``; all lower-is-better.
+
+    A metric the baseline tracked but the current record dropped is a
+    regression (value ``inf``): a sweep silently vanishing must not pass.
+    """
+    cur, base = tracked_metrics(current), tracked_metrics(baseline)
+    regressions = []
+    for key, b in sorted(base.items()):
+        c = cur.get(key)
+        if c is None:
+            regressions.append(Regression(key, b, float("inf")))
+        elif c > b * (1.0 + threshold):
+            regressions.append(Regression(key, b, c))
+    return regressions
+
+
+def find_baseline(records: List[Dict[str, Any]]
+                  ) -> Tuple[Optional[Dict[str, Any]], List[str]]:
+    """Most recent record comparable with the newest one, scanning backwards;
+    incomparable records are skipped with a note (never silently compared)."""
+    notes = []
+    current = records[-1]
+    for rec in reversed(records[:-1]):
+        ok, reason = comparable(current, rec)
+        if ok:
+            return rec, notes
+        sha = (rec.get("provenance") or {}).get("git_sha", "unstamped")
+        notes.append(f"skipped baseline candidate {sha}: {reason}")
+    return None, notes
+
+
+def check(path: str, *, baseline_path: Optional[str] = None,
+          threshold: float = DEFAULT_THRESHOLD) -> GateResult:
+    """Gate the newest record of ``path``.
+
+    With ``baseline_path`` the baseline is that file's newest record and an
+    incomparable pair *refuses* (raises ``ValueError``) — the explicit-
+    baseline caller asked for exactly that comparison.  Without it, the
+    trajectory is scanned for the latest comparable record; if none exists
+    (e.g. the first stamped run after the format migration) the gate passes
+    with a note rather than inventing a comparison.
+    """
+    records = load_trajectory(path)
+    if not records:
+        raise ValueError(f"{path}: empty trajectory")
+    current = records[-1]
+    notes: List[str] = []
+    if baseline_path is not None:
+        baseline = load_trajectory(baseline_path)[-1]
+        ok, reason = comparable(current, baseline)
+        if not ok:
+            raise ValueError(
+                f"refusing to compare {path} against {baseline_path}: "
+                f"{reason}")
+    else:
+        baseline, notes = find_baseline(records)
+        if baseline is None:
+            notes.append("no comparable baseline in trajectory; gate passes "
+                         "vacuously (first stamped record?)")
+            return GateResult(ok=True, regressions=[], notes=notes)
+    regressions = compare(current, baseline, threshold)
+    sha = (baseline.get("provenance") or {}).get("git_sha")
+    return GateResult(ok=not regressions, regressions=regressions,
+                      notes=notes, baseline_sha=sha)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("trajectory", help="BENCH_ci.json trajectory to gate")
+    ap.add_argument("--baseline", default=None,
+                    help="explicit baseline trajectory (newest record); "
+                         "incomparable records refuse instead of skipping")
+    ap.add_argument("--threshold", type=float, default=DEFAULT_THRESHOLD,
+                    help="relative regression that fails the gate "
+                         "(default 0.20)")
+    args = ap.parse_args(argv)
+    try:
+        result = check(args.trajectory, baseline_path=args.baseline,
+                       threshold=args.threshold)
+    except (ValueError, OSError) as e:
+        print(f"# regress: REFUSED — {e}")
+        return 2
+    print(result.summary())
+    return 0 if result.ok else 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -36,7 +36,9 @@ import numpy as np
 from repro.core import hermite, nbody
 from repro.core.evaluate import make_evaluator
 from repro.core.strategies import STRATEGIES, make_strategy_evaluator
-from repro.kernels import nbody_force
+from repro.kernels import nbody_force, ops
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.sim import ensemble as ens
 from repro.sim import scenarios, telemetry
 
@@ -75,6 +77,10 @@ class SimConfig:
         dataclasses.field(default_factory=dict)
     validate_ic: bool = True
     out: Optional[str] = None        # JSON report path (None => don't write)
+    trace: Optional[str] = None      # Chrome-trace/Perfetto JSON path
+    #   (None => zero-overhead NullTracer; see repro.obs.trace)
+    metrics_interval: int = 0        # chunks between in-run metrics-registry
+    #   snapshots attached to the diagnostics series (0 => final only)
 
     def resolved_stepper(self) -> str:
         """Resolve (stepper, dt) to one of ``ensemble.STEPPERS``.
@@ -166,29 +172,80 @@ def _build_states(cfg: SimConfig):
 
 
 def run(cfg: SimConfig) -> Dict[str, Any]:
-    """Run one configuration end-to-end and return its telemetry report."""
+    """Run one configuration end-to-end and return its telemetry report.
+
+    Each run gets its own :class:`repro.obs.metrics.MetricsRegistry` (scoped
+    as the module-current registry so the engine layers' emissions land in
+    it) whose snapshot rides in the report under ``metrics``; with
+    ``cfg.trace`` a live :class:`repro.obs.trace.SpanTracer` is installed
+    and the Chrome-trace JSON exported on completion (``trace_path`` in the
+    report).
+    """
     if cfg.ensemble < 1:
         raise ValueError(f"ensemble={cfg.ensemble} must be >= 1")
+    if cfg.metrics_interval < 0:
+        raise ValueError(
+            f"metrics_interval={cfg.metrics_interval} must be >= 0")
     stepper = cfg.resolved_stepper()
-    if cfg.mix is not None:
-        report = _run_mixed(cfg)
-    elif stepper == "block" and cfg.ensemble == 1 and \
-            cfg.strategy != "single":
-        # a single block run under a distribution strategy shards the
-        # *domain* (shard-local compaction, per-shard tile telemetry) —
-        # batched block runs shard the batch axis instead, where the
-        # strategy label only tags the report
-        report = _run_block_strategy(cfg)
-    elif cfg.ensemble > 1 or stepper == "block":
-        # the block engine lives in the (vmapped) ensemble path; a single
-        # block run is just a B=1 batch
-        report = _run_ensemble(cfg)
-    else:
-        report = _run_single(cfg)
+    tracer = obs_trace.SpanTracer() if cfg.trace else obs_trace.NullTracer()
+    prev_tracer = obs_trace.set_tracer(tracer)
+    try:
+        with obs_metrics.use():
+            if cfg.mix is not None:
+                report = _run_mixed(cfg)
+            elif stepper == "block" and cfg.ensemble == 1 and \
+                    cfg.strategy != "single":
+                # a single block run under a distribution strategy shards the
+                # *domain* (shard-local compaction, per-shard tile telemetry)
+                # — batched block runs shard the batch axis instead, where
+                # the strategy label only tags the report
+                report = _run_block_strategy(cfg)
+            elif cfg.ensemble > 1 or stepper == "block":
+                # the block engine lives in the (vmapped) ensemble path; a
+                # single block run is just a B=1 batch
+                report = _run_ensemble(cfg)
+            else:
+                report = _run_single(cfg)
+    finally:
+        obs_trace.set_tracer(prev_tracer)
+    if cfg.trace:
+        report["trace_path"] = tracer.export(cfg.trace)
     if cfg.out:
         telemetry.write_report(report, cfg.out)
         report["report_path"] = cfg.out
     return report
+
+
+def _chunk_spans(tracer, t0_us: float, dur_us: float, *, chunk: int,
+                 events: int, tiles: Optional[float] = None,
+                 max_children: int = 256) -> None:
+    """One measured ``macro-step`` span per engine chunk, synthetically
+    subdivided into ``event`` -> ``kernel-launch`` children.
+
+    The per-event work runs inside ``lax.scan`` under ``jit`` — untimeable
+    from the host — so the chunk aggregate (wall, event count, launched
+    tiles) is *measured* and only the even subdivision is synthetic, flagged
+    ``{"synthetic": true}`` on every reconstructed child.
+    """
+    if not tracer.enabled:
+        return
+    args = {"chunk": chunk, "events": int(events)}
+    if tiles is not None:
+        args["tiles"] = float(tiles)
+    tracer.add_span("macro-step", t0_us, dur_us, args=args)
+    n = min(int(events), max_children)
+    if n <= 0:
+        return
+    child = dur_us / n
+    per = {"synthetic": True, "events": int(events) // n}
+    if tiles is not None:
+        per["tiles"] = float(tiles) / n
+    for i in range(n):
+        s = t0_us + i * child
+        tracer.add_span("event", s, child * 0.999, args=per)
+        if tiles is not None:
+            tracer.add_span("kernel-launch", s + 0.1 * child, 0.8 * child,
+                            args=per)
 
 
 # --------------------------------------------------------------------------
@@ -235,10 +292,14 @@ def _run_single(cfg: SimConfig) -> Dict[str, Any]:
             h_prev = h
         h = min(h, cfg.t_end - float(state.time))
         t0 = time.perf_counter()
-        state = hermite.step(state, jnp.asarray(h, state.dtype), evaluator,
-                             order=cfg.order)
-        jax.block_until_ready(state.pos)
+        with obs_trace.get_tracer().span("macro-step", step=steps + 1, dt=h):
+            state = hermite.step(state, jnp.asarray(h, state.dtype),
+                                 evaluator, order=cfg.order)
+            jax.block_until_ready(state.pos)
         steps += 1
+        obs_metrics.registry().counter(
+            "sim.events", unit="events",
+            help="productive member-events (lockstep: member-steps)").inc()
         recorder.record_step(steps, float(state.time),
                              time.perf_counter() - t0)
         if steps % cfg.diag_every == 0:
@@ -251,6 +312,7 @@ def _run_single(cfg: SimConfig) -> Dict[str, Any]:
         n_bodies=cfg.n, ensemble=1,
         n_devices=cfg.devices if cfg.strategy != "single" else 1,
         per_run_pairs=[float(steps) * cfg.n * cfg.n],
+        metrics=obs_metrics.registry().snapshot(),
         extra={"e0": e0, "e1": e1, "de_rel": abs((e1 - e0) / e0),
                "t_final": float(state.time)})
 
@@ -294,10 +356,14 @@ def _run_block_strategy(cfg: SimConfig) -> Dict[str, Any]:
         recorder.meta["n_levels"] = n_levels
         recorder.meta["n_levels_auto"] = [n_levels]
 
+    tracer = obs_trace.get_tracer()
+    reg = obs_metrics.registry()
     carry = None
     done = 0
+    ev_prev = tiles_prev = 0.0
     while done * cfg.diag_every < MAX_STEPS:
         t0 = time.perf_counter()
+        t0_us = tracer.now_us()
         state, carry = ens.strategy_run_block(
             state, t_end=cfg.t_end, n_events=cfg.diag_every,
             dt_max=cfg.dt_max, n_levels=n_levels, carry=carry, eta=cfg.eta,
@@ -306,11 +372,30 @@ def _run_block_strategy(cfg: SimConfig) -> Dict[str, Any]:
             block_j=cfg.block_j, devices=cfg.devices)
         jax.block_until_ready(state.pos)
         done += 1
+        ev_now = float(carry.n_events)
+        tiles_now = float(np.asarray(carry.n_tiles).sum())
+        _chunk_spans(tracer, t0_us, tracer.now_us() - t0_us, chunk=done,
+                     events=int(ev_now - ev_prev),
+                     tiles=tiles_now - tiles_prev)
+        reg.counter("sim.events", unit="events").inc(ev_now - ev_prev)
+        reg.counter("sim.tiles_launched", unit="tiles").inc(
+            tiles_now - tiles_prev)
+        per_shard_now = np.asarray(carry.n_tiles, np.float64)
+        if per_shard_now.size and per_shard_now.mean() > 0:
+            reg.gauge(
+                "sim.shard_imbalance", unit="ratio",
+                help="max/mean per-shard launched tiles").set(
+                float(per_shard_now.max() / per_shard_now.mean()))
+        ev_prev, tiles_prev = ev_now, tiles_now
         e = float(nbody.total_energy(state))
         recorder.record_step(int(carry.n_events), float(state.time),
                              time.perf_counter() - t0)
-        recorder.record_snapshot(int(carry.n_events), float(state.time),
-                                 energy=e, de_rel=abs((e - e0) / e0))
+        recorder.record_snapshot(
+            int(carry.n_events), float(state.time), energy=e,
+            de_rel=abs((e - e0) / e0),
+            **({"metrics": reg.snapshot()}
+               if cfg.metrics_interval and done % cfg.metrics_interval == 0
+               else {}))
         if float(state.time) >= cfg.t_end:
             break
 
@@ -321,6 +406,7 @@ def _run_block_strategy(cfg: SimConfig) -> Dict[str, Any]:
         per_run_steps=[int(carry.n_events)],
         per_run_pairs=[float(carry.n_pairs)],
         per_run_tiles=[sum(per_shard)], per_shard_tiles=per_shard,
+        metrics=reg.snapshot(),
         extra={"e0": e0, "e1": e1, "de_rel": abs((e1 - e0) / e0),
                "t_final": float(state.time)})
 
@@ -383,6 +469,11 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
     n_max = batched.pos.shape[1]
 
     recorder = telemetry.TelemetryRecorder(cfg.meta())
+    tracer = obs_trace.get_tracer()
+    reg = obs_metrics.registry()
+    reg.gauge("sim.pad_waste", unit="fraction",
+              help="zero-mass padded slot fraction of the batch").set(
+        1.0 - float(sum(n_active)) / (b * n_max))
     na = jnp.asarray(n_active, jnp.int32)
     kw = dict(n_active=na, order=cfg.order, eps=cfg.eps, impl=impl,
               devices=devices)
@@ -391,12 +482,20 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
     e0 = np.asarray(ens.batched_total_energy(batched), np.float64)
     recorder.record_snapshot(0, 0.0, energy=e0.tolist(), de_rel=0.0)
 
+    chunks_done = 0
+
     def snapshot(done, t_sim, wall):
         # one wall sample per chunk: lockstep ensembles sync at chunk ends
+        nonlocal chunks_done
+        chunks_done += 1
         recorder.record_step(done, t_sim, wall)
         e = np.asarray(ens.batched_total_energy(batched), np.float64)
-        recorder.record_snapshot(done, t_sim, energy=e.tolist(),
-                                 de_rel=float(np.abs((e - e0) / e0).max()))
+        recorder.record_snapshot(
+            done, t_sim, energy=e.tolist(),
+            de_rel=float(np.abs((e - e0) / e0).max()),
+            **({"metrics": reg.snapshot()}
+               if cfg.metrics_interval
+               and chunks_done % cfg.metrics_interval == 0 else {}))
 
     stepper = cfg.resolved_stepper()
     per_run_steps = per_run_tiles = None
@@ -406,10 +505,14 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
         while done < n_steps:
             chunk = min(cfg.diag_every, n_steps - done)
             t0 = time.perf_counter()
+            t0_us = tracer.now_us()
             batched = ens.ensemble_run(batched, n_steps=chunk, dt=cfg.dt,
                                        **kw)
             jax.block_until_ready(batched.pos)
             done += chunk
+            _chunk_spans(tracer, t0_us, tracer.now_us() - t0_us,
+                         chunk=chunks_done + 1, events=chunk * b)
+            reg.counter("sim.events", unit="events").inc(chunk * b)
             snapshot(done, done * cfg.dt, time.perf_counter() - t0)
         t_final = n_steps * cfg.dt
         per_run_pairs = [float(n_steps) * a * a for a in n_active]
@@ -418,14 +521,21 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
         # criterion; finished members freeze until the whole batch is done
         h_prev = n_taken = None
         done = 0
+        ev_prev = 0.0
         while done * cfg.diag_every < MAX_STEPS:
             t0 = time.perf_counter()
+            t0_us = tracer.now_us()
             batched, h_prev, n_taken = ens.ensemble_run_adaptive(
                 batched, t_end=cfg.t_end, n_steps=cfg.diag_every,
                 h_prev=h_prev, n_taken=n_taken, eta=cfg.eta,
                 dt_max=cfg.dt_max, **kw)
             jax.block_until_ready(batched.pos)
             done += 1
+            ev_now = float(np.asarray(n_taken, np.float64).sum())
+            _chunk_spans(tracer, t0_us, tracer.now_us() - t0_us,
+                         chunk=done, events=int(ev_now - ev_prev))
+            reg.counter("sim.events", unit="events").inc(ev_now - ev_prev)
+            ev_prev = ev_now
             snapshot(int(np.max(np.asarray(n_taken))),
                      float(np.min(np.asarray(batched.time))),
                      time.perf_counter() - t0)
@@ -446,10 +556,19 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
             n_levels = max(per_member)
             recorder.meta["n_levels"] = n_levels
             recorder.meta["n_levels_auto"] = per_member
+        plan = ops.CapacityPlan(
+            n_max, n_max, cfg.block_i or nbody_force.DEFAULT_BLOCK_I,
+            cfg.block_j or nbody_force.DEFAULT_BLOCK_J)
+        mask = np.arange(n_max)[None, :] < np.asarray(n_active)[:, None]
         carry = None
         done = 0
+        ev_prev = np.zeros(b)
+        tiles_prev = np.zeros(b)
+        pairs_prev = np.zeros(b)
+        bound_total = 0.0
         while done * cfg.diag_every < MAX_STEPS:
             t0 = time.perf_counter()
+            t0_us = tracer.now_us()
             batched, carry = ens.ensemble_run_block(
                 batched, t_end=cfg.t_end, n_events=cfg.diag_every,
                 dt_max=cfg.dt_max, n_levels=n_levels, carry=carry,
@@ -458,6 +577,50 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
                 block_i=cfg.block_i, block_j=cfg.block_j, **kw)
             jax.block_until_ready(batched.pos)
             done += 1
+            ev = np.asarray(carry.n_events, np.float64)
+            tiles = np.asarray(carry.n_tiles, np.float64)
+            pairs = np.asarray(carry.n_pairs, np.float64)
+            ev_d, tiles_d = ev - ev_prev, tiles - tiles_prev
+            pairs_d = pairs - pairs_prev
+            _chunk_spans(tracer, t0_us, tracer.now_us() - t0_us, chunk=done,
+                         events=int(ev_d.sum()), tiles=float(tiles_d.sum()))
+            reg.counter("sim.events", unit="events").inc(float(ev_d.sum()))
+            reg.counter("sim.tiles_launched", unit="tiles").inc(
+                float(tiles_d.sum()))
+            reg.counter(
+                "sim.tiles_dense_baseline", unit="tiles",
+                help="what compaction='none' would have enqueued").inc(
+                float(ev_d.sum()) * plan.dense_tiles)
+            # analytic a-priori tile bound: occupancy entry 0 (every real
+            # particle) is the largest active set any tick of the block
+            # schedule can see, so per member and event the launch can
+            # never exceed the tiles of occ[0]'s capacity bucket
+            occ0 = np.asarray(jax.vmap(
+                lambda lv, m: hermite.block_level_occupancy(
+                    lv, n_levels=n_levels, mask=m))(carry.levels,
+                                                    jnp.asarray(mask)))[:, 0]
+            for i in range(b):
+                per_event = (int(plan.tiles(plan.bucket(int(occ0[i]))))
+                             if cfg.compaction == "gather"
+                             else plan.dense_tiles)
+                bound_total += ev_d[i] * per_event
+                if ev_d[i] > 0 and n_active[i] > 0:
+                    reg.histogram(
+                        "sim.active_fraction", unit="fraction",
+                        help="per-chunk mean active-target fraction"
+                    ).observe(pairs_d[i]
+                              / (ev_d[i] * float(n_active[i]) ** 2))
+            reg.gauge("sim.tiles_occupancy_bound", unit="tiles",
+                      help="analytic bound; launched <= bound").set(
+                bound_total)
+            if cfg.compaction == "gather":
+                reg.gauge(
+                    "sim.bucket_hits", unit="hits",
+                    help="capacity-bucket switch hit counts (full "
+                         "schedule, summed over members)").set(
+                    [float(h) for h in
+                     np.asarray(carry.bucket_hits, np.float64).sum(axis=0)])
+            ev_prev, tiles_prev, pairs_prev = ev, tiles, pairs
             snapshot(int(np.max(np.asarray(carry.n_events))),
                      float(np.min(np.asarray(batched.time))),
                      time.perf_counter() - t0)
@@ -481,6 +644,7 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
         n_bodies=n_max, ensemble=b, n_devices=max(cfg.devices, 1),
         n_active=n_active, per_run_steps=per_run_steps,
         per_run_pairs=per_run_pairs, per_run_tiles=per_run_tiles,
+        metrics=reg.snapshot(),
         extra={"e0": e0.tolist(), "e1": e1.tolist(),
                "de_rel": float(de.max()), "t_final": t_final,
                "runs": runs})

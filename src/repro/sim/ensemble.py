@@ -57,6 +57,7 @@ from repro.core.hermite import Evaluation
 from repro.core.nbody import ParticleState
 from repro.core.strategies import STRATEGIES, make_batch_mesh
 from repro.kernels import nbody_force, ops
+from repro.obs import metrics as obs_metrics
 
 BATCH_AXIS = "ensemble"
 #: vmap-safe evaluation paths (the Pallas kernel batches by grid extension)
@@ -183,8 +184,23 @@ def _constrain(tree, mesh):
     return jax.tree_util.tree_map(one, tree)
 
 
+def _count_engine_build(kind: str) -> None:
+    """Emit one ``engine.cache_miss`` tick into the current metrics registry.
+
+    Every engine constructor below is ``lru_cache``d, so its body only runs
+    when a (config, mesh, groups) key has never been lowered before — the
+    counter IS the recompile count the observability layer reports, with no
+    tracing-internals spelunking.
+    """
+    reg = obs_metrics.registry()
+    reg.counter("engine.cache_miss", unit="builds",
+                help="engine constructions = fresh XLA lowerings").inc()
+    reg.counter(f"engine.cache_miss.{kind}", unit="builds").inc()
+
+
 @functools.lru_cache(maxsize=64)
 def _engine(order: int, eps: float, impl: str, mesh):
+    _count_engine_build("fixed")
     ev = _inner_evaluator(order, eps, impl)
 
     @jax.jit
@@ -303,6 +319,7 @@ def _adaptive_engine(order: int, eps: float, impl: str, mesh,
     ``t_end`` keep stepping in lockstep (the batch is rectangular) but their
     state is frozen by a per-run select — wasted flops, never wrong physics.
     """
+    _count_engine_build("adaptive")
     ev = _inner_evaluator(order, eps, impl)
 
     def one_step(s, hp, na, t_end):
@@ -497,6 +514,13 @@ class BlockCarry(NamedTuple):
     the ``(B,)`` productive event count, ``n_tiles`` the ``(B,)`` accumulated
     kernel grid tiles launched (both Hermite passes) — the count compaction
     shrinks while ``n_pairs`` stays the same.
+
+    ``bucket_hits`` is the capacity-bucket switch hit distribution:
+    ``(B, n_caps)`` counts of how often each member's event dispatched each
+    bucket of the *full* capacity schedule (restricted group schedules are
+    prefixes, so indices align).  All zeros without ``compaction="gather"``;
+    the strategy engine carries an empty ``(0,)`` vector (its switch lives
+    inside the shards — see ``grid_tiles_per_shard`` for the per-chip view).
     """
 
     t_last: jax.Array
@@ -505,6 +529,7 @@ class BlockCarry(NamedTuple):
     n_pairs: jax.Array
     n_events: jax.Array
     n_tiles: jax.Array
+    bucket_hits: jax.Array
 
 
 #: per-member capacity-bucket dispatch modes of the block engine
@@ -571,6 +596,15 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
     requantized from scratch, and per-member diagnostics (energy, virial)
     are exact.
     """
+    _count_engine_build("block")
+    if compaction == "gather":
+        # switch branches lowered across the pre-lowered bucket groups: the
+        # denominator of the recompile accounting (engine.cache_miss ticks
+        # once however many branches one build lowers)
+        obs_metrics.registry().counter(
+            "engine.bucket_branches", unit="branches",
+            help="kernel switch branches lowered across bucket groups"
+        ).inc(sum(n_caps for _, n_caps in groups))
     n_sub = 2 ** (n_levels - 1)
     n_passes = 2 if order >= 6 else 1
     member_init = functools.partial(_event_init, eta=eta, dt_max=dt_max,
@@ -613,38 +647,53 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
 
         def body(acc, _):
             s, c = acc
-            live, t_next, active, h, xp, vp, ap, perm = jax.vmap(
-                member_pre, in_axes=(0, 0, 0, 0, 0, None))(
-                    s, c.t_last, c.levels, c.dt_macro, n_active, t_end)
+            with jax.named_scope("event.pre"):
+                live, t_next, active, h, xp, vp, ap, perm = jax.vmap(
+                    member_pre, in_axes=(0, 0, 0, 0, 0, None))(
+                        s, c.t_last, c.levels, c.dt_macro, n_active, t_end)
+            hits_event = None
             if compaction == "gather":
                 n_act = jnp.sum(active, axis=1).astype(jnp.int32)
-                evs, tiles_parts = [], []
-                for members, gplan, gbev in group_data:
-                    cap_idx = gplan.bucket(jnp.max(jnp.where(
-                        live[members], n_act[members], 0)))
-                    evs.append(jax.vmap(
-                        gbev, in_axes=(0, 0, 0, 0, 0, 0, None))(
-                            xp[members], vp[members], ap[members],
-                            s.mass[members], active[members], perm[members],
-                            cap_idx))
+                n_caps_full = c.bucket_hits.shape[1]
+                evs, tiles_parts, hits_parts = [], [], []
+                for gi, (members, gplan, gbev) in enumerate(group_data):
+                    with jax.named_scope(f"event.bucket_switch.g{gi}"):
+                        cap_idx = gplan.bucket(jnp.max(jnp.where(
+                            live[members], n_act[members], 0)))
+                        evs.append(jax.vmap(
+                            gbev, in_axes=(0, 0, 0, 0, 0, 0, None))(
+                                xp[members], vp[members], ap[members],
+                                s.mass[members], active[members],
+                                perm[members], cap_idx))
                     tiles_parts.append(jnp.broadcast_to(
                         gplan.tiles(cap_idx).astype(count_dtype),
                         (len(members),)))
+                    hits_parts.append(jnp.broadcast_to(
+                        jax.nn.one_hot(cap_idx, n_caps_full,
+                                       dtype=count_dtype),
+                        (len(members), n_caps_full)))
                 ev = jax.tree_util.tree_map(
                     lambda *xs: jnp.concatenate(xs)[inv], *evs)
                 tiles_event = jnp.concatenate(tiles_parts)[inv]
+                hits_event = jnp.concatenate(hits_parts)[inv]
             else:
-                ev = jax.vmap(bev)(xp, vp, ap, s.mass, active)
+                with jax.named_scope("event.force"):
+                    ev = jax.vmap(bev)(xp, vp, ap, s.mass, active)
                 tiles_event = jnp.asarray(full_tiles, count_dtype)
-            s1, t_last, levels, dt_macro, dp, live = jax.vmap(
-                member_post, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None))(
-                    s, ev, live, t_next, active, h, c.t_last, c.levels,
-                    c.dt_macro, n_active, t_end)
+            with jax.named_scope("event.post"):
+                s1, t_last, levels, dt_macro, dp, live = jax.vmap(
+                    member_post,
+                    in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None))(
+                        s, ev, live, t_next, active, h, c.t_last, c.levels,
+                        c.dt_macro, n_active, t_end)
             c1 = BlockCarry(t_last=t_last, levels=levels, dt_macro=dt_macro,
                             n_pairs=c.n_pairs + dp,
                             n_events=c.n_events + live.astype(jnp.int32),
                             n_tiles=c.n_tiles + jnp.where(live, tiles_event,
-                                                          0.0))
+                                                          0.0),
+                            bucket_hits=c.bucket_hits
+                            if hits_event is None else c.bucket_hits
+                            + jnp.where(live[:, None], hits_event, 0.0))
             return (_constrain(s1, mesh), c1), None
 
         (batched, carry), _ = jax.lax.scan(body, (batched, carry), None,
@@ -655,15 +704,17 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
     def init(batched, n_active, t_end):
         t_last, levels, dt_macro = jax.vmap(
             member_init, in_axes=(0, 0, None))(batched, n_active, t_end)
-        b = t_last.shape[0]
+        b, n = t_last.shape
         # counters accumulate at host precision (exact integer adds far past
         # float32's 2**24 window; silently float32 when x64 is disabled)
         count_dtype = jax.dtypes.canonicalize_dtype(jnp.float64)
+        n_caps = len(ops.CapacityPlan(n, n, block_i, block_j).caps)
         return BlockCarry(
             t_last=t_last, levels=levels, dt_macro=dt_macro,
             n_pairs=jnp.zeros(b, count_dtype),
             n_events=jnp.zeros(b, jnp.int32),
-            n_tiles=jnp.zeros(b, count_dtype))
+            n_tiles=jnp.zeros(b, count_dtype),
+            bucket_hits=jnp.zeros((b, n_caps), count_dtype))
 
     return init, run
 
@@ -803,6 +854,7 @@ def _strategy_block_engine(strategy: str, n_devices: int,
     """
     from repro.core.strategies import make_strategy_block_evaluator
 
+    _count_engine_build("block_strategy")
     devs = jax.devices()[:n_devices]
     bev = make_strategy_block_evaluator(
         strategy, devices=devs, chips_per_card=chips_per_card, eps=eps,
@@ -823,19 +875,23 @@ def _strategy_block_engine(strategy: str, n_devices: int,
 
         def body(acc, _):
             s, c = acc
-            live, t_next, active, h, xp, vp, ap, _ = event_pre(
-                s, c.t_last, c.levels, c.dt_macro, n, t_end)
+            with jax.named_scope("event.pre"):
+                live, t_next, active, h, xp, vp, ap, _ = event_pre(
+                    s, c.t_last, c.levels, c.dt_macro, n, t_end)
             # the shard-local permutations live inside the shards — the
             # global argsort from event_pre is not used here
-            ev, tiles = bev(xp, vp, ap, s.mass, active)
-            s1, t_last, levels, dt_macro, dp, live = event_post(
-                s, ev, live, t_next, active, h, c.t_last, c.levels,
-                c.dt_macro, n, t_end)
+            with jax.named_scope("event.force"):
+                ev, tiles = bev(xp, vp, ap, s.mass, active)
+            with jax.named_scope("event.post"):
+                s1, t_last, levels, dt_macro, dp, live = event_post(
+                    s, ev, live, t_next, active, h, c.t_last, c.levels,
+                    c.dt_macro, n, t_end)
             c1 = BlockCarry(t_last=t_last, levels=levels, dt_macro=dt_macro,
                             n_pairs=c.n_pairs + dp,
                             n_events=c.n_events + live.astype(jnp.int32),
                             n_tiles=c.n_tiles + jnp.where(
-                                live, tiles, 0).astype(count_dtype))
+                                live, tiles, 0).astype(count_dtype),
+                            bucket_hits=c.bucket_hits)
             return (s1, c1), None
 
         (state, carry), _ = jax.lax.scan(body, (state, carry), None,
@@ -851,7 +907,10 @@ def _strategy_block_engine(strategy: str, n_devices: int,
             t_last=t_last, levels=levels, dt_macro=dt_macro,
             n_pairs=jnp.zeros((), count_dtype),
             n_events=jnp.zeros((), jnp.int32),
-            n_tiles=jnp.zeros(n_devices, count_dtype))
+            n_tiles=jnp.zeros(n_devices, count_dtype),
+            # the per-shard switch lives inside the shards; no batch-level
+            # bucket distribution to report (see grid_tiles_per_shard)
+            bucket_hits=jnp.zeros((0,), count_dtype))
 
     return init, run
 

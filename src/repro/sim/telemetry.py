@@ -1,9 +1,9 @@
 """Per-run telemetry: wall-time accounting, modeled energy/EDP, JSON reports.
 
-The energy model is the one documented in ``benchmarks/common.py`` (paper
-Fig. 6 / Table 1 analysis); it is imported when the benchmarks package is on
-the path (repo-root execution) and mirrored locally otherwise so that
-``repro.sim`` stays importable as an installed package.
+The energy model lives in ``repro.obs.energy`` (paper Fig. 6 / Table 1
+analysis) — the single source of truth this module and ``benchmarks.common``
+both import, so the constants in reports and benchmark tables can never
+drift apart.
 """
 
 from __future__ import annotations
@@ -15,24 +15,9 @@ import statistics
 import time
 from typing import Any, Dict, List, Optional
 
-try:  # repo-root execution: reuse the documented model verbatim
-    from benchmarks.common import modeled_energy
-except ImportError:  # installed-package execution: mirrored constants
-    P_CHIP = 170.0
-    P_HOST = 250.0
-    IDLE_FRAC = 0.35
-
-    def modeled_energy(t_solution: float, n_chips: int, util: float) -> dict:
-        """Paper Fig. 6 energy model; E (J), peak power (W), EDP (J s)."""
-        p_chips = n_chips * P_CHIP * (IDLE_FRAC + (1 - IDLE_FRAC) * util)
-        p_total = P_HOST + p_chips
-        e = t_solution * p_total
-        return {"energy_J": e, "peak_W": p_total, "edp_Js": e * t_solution}
-
-
-#: Dominant-term device occupancy assumed for the modeled energy accounting
-#: (matches the util figure used by benchmarks/table1_strategies.py).
-DEFAULT_UTIL = 0.6
+from repro.obs import metrics as obs_metrics
+from repro.obs.energy import DEFAULT_UTIL, modeled_energy  # noqa: F401
+#   (re-exported: callers historically read telemetry.DEFAULT_UTIL)
 
 
 @dataclasses.dataclass
@@ -66,6 +51,7 @@ class TelemetryRecorder:
                  per_run_pairs: Optional[List[float]] = None,
                  per_run_tiles: Optional[List[float]] = None,
                  per_shard_tiles: Optional[List[float]] = None,
+                 metrics: Optional[Dict[str, Any]] = None,
                  extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
         """Assemble the JSON-ready report for this run.
 
@@ -89,6 +75,11 @@ class TelemetryRecorder:
         reached the launch schedule: the masked block path shrinks
         ``force_evals`` but launches the full grid every event, the
         compaction path shrinks both.
+
+        ``metrics`` is a ``repro.obs.metrics`` registry snapshot (or a dict
+        with the same versioned schema — validated here, so a malformed
+        payload fails at finalize time, not when a reader chokes on the
+        report); it lands under the report's ``metrics`` key.
 
         ``per_shard_tiles`` (strategy-distributed block runs) additionally
         breaks the launched tiles down *per device shard* as
@@ -118,6 +109,8 @@ class TelemetryRecorder:
             force_evals = None
             interactions = 2.0 * n_steps * ensemble * float(n_bodies) ** 2
         energy = modeled_energy(wall_total, n_devices, util)
+        if metrics is not None:
+            obs_metrics.validate_snapshot(metrics)
         report: Dict[str, Any] = {
             **self.meta,
             "n_bodies": n_bodies,
@@ -149,6 +142,7 @@ class TelemetryRecorder:
                 "peak_W": energy["peak_W"],
                 "edp_Js": energy["edp_Js"],
             },
+            **({"metrics": metrics} if metrics is not None else {}),
             "snapshots": self.snapshots,
         }
         if extra:

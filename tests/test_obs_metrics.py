@@ -1,0 +1,93 @@
+"""repro.obs.metrics units: metric types, registry, snapshots, validation."""
+
+import pytest
+
+from repro.obs import metrics
+
+
+def test_counter_monotone():
+    c = metrics.Counter("c", unit="events")
+    c.inc()
+    c.inc(4.0)
+    assert c.value == 5.0
+    with pytest.raises(ValueError):
+        c.inc(-1.0)
+
+
+def test_gauge_holds_vectors():
+    g = metrics.Gauge("g")
+    g.set([1.0, 2.0])
+    assert g.dump()["value"] == [1.0, 2.0]
+
+
+def test_histogram_summary_and_percentiles():
+    h = metrics.Histogram("h", unit="fraction")
+    for v in (0.1, 0.2, 0.3, 0.4):
+        h.observe(v)
+    d = h.dump()
+    assert d["count"] == 4 and d["min"] == 0.1 and d["max"] == 0.4
+    assert d["mean"] == pytest.approx(0.25)
+    assert 0.1 <= d["p50"] <= 0.4 and 0.1 <= d["p95"] <= 0.4
+
+
+def test_histogram_sample_cap_keeps_summary_exact():
+    h = metrics.Histogram("h")
+    for i in range(metrics.HISTOGRAM_SAMPLE_CAP + 10):
+        h.observe(float(i))
+    assert h.count == metrics.HISTOGRAM_SAMPLE_CAP + 10
+    assert h.max == float(metrics.HISTOGRAM_SAMPLE_CAP + 9)
+    assert len(h._samples) == metrics.HISTOGRAM_SAMPLE_CAP
+
+
+def test_registry_get_or_create_and_kind_mismatch():
+    reg = metrics.MetricsRegistry()
+    c1 = reg.counter("sim.events", unit="events")
+    assert reg.counter("sim.events") is c1
+    with pytest.raises(TypeError):
+        reg.gauge("sim.events")
+
+
+def test_snapshot_schema_validates():
+    reg = metrics.MetricsRegistry()
+    reg.counter("a.count").inc(2)
+    reg.gauge("a.gauge").set(7.5)
+    reg.histogram("a.hist").observe(1.0)
+    snap = reg.snapshot()
+    assert snap["schema_version"] == metrics.METRICS_SCHEMA_VERSION
+    assert snap["counters"]["a.count"]["value"] == 2.0
+    assert snap["gauges"]["a.gauge"]["value"] == 7.5
+    assert snap["histograms"]["a.hist"]["count"] == 1
+    metrics.validate_snapshot(snap)  # must not raise
+
+
+@pytest.mark.parametrize("mutate", [
+    lambda s: s.pop("schema_version"),
+    lambda s: s.update(schema_version=999),
+    lambda s: s.pop("counters"),
+    lambda s: s["counters"].update(bad="not-a-dict"),
+    lambda s: s["counters"].update(bad={}),  # missing 'value'
+])
+def test_validate_snapshot_rejects_malformed(mutate):
+    reg = metrics.MetricsRegistry()
+    reg.counter("x").inc()
+    snap = reg.snapshot()
+    mutate(snap)
+    with pytest.raises(ValueError):
+        metrics.validate_snapshot(snap)
+
+
+def test_validate_snapshot_rejects_non_dict():
+    with pytest.raises(ValueError):
+        metrics.validate_snapshot([1, 2, 3])
+
+
+def test_use_scopes_the_current_registry():
+    outer = metrics.registry()
+    with metrics.use() as reg:
+        assert metrics.registry() is reg and reg is not outer
+        metrics.registry().counter("scoped").inc()
+        with metrics.use() as inner:  # nested scopes stack
+            assert metrics.registry() is inner
+        assert metrics.registry() is reg
+    assert metrics.registry() is outer
+    assert "scoped" not in outer.snapshot()["counters"]

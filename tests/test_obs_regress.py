@@ -1,0 +1,182 @@
+"""repro.obs.regress units: trajectory I/O, comparability, gate semantics.
+
+The synthetic-regression test is the CI contract: a 25% wall-per-event slip
+against the committed baseline must FAIL the gate (``main`` returns the
+job-failing exit code 1); incomparable explicit baselines must REFUSE
+(exit 2), never silently compare.
+"""
+
+import json
+
+import pytest
+
+from repro.obs import regress
+
+
+def record(wall=0.01, tiles=1000.0, edp=100.0, sha="aaa", **prov):
+    """A minimal stamped bench_ci record with one row per gated sweep."""
+    p = {"git_sha": sha, "schema_version": regress.BENCH_SCHEMA_VERSION,
+         "jax_version": "0.4.37", "device_count": 2, **prov}
+    return {
+        "suite": "bench_ci",
+        "stepper_modes": [
+            {"stepper": "block", "wall_per_event_s": wall, "edp_Js": edp}],
+        "block_compaction": [
+            {"seed": 0, "wall_per_event_gather_s": wall,
+             "tiles_gather": tiles}],
+        "strategy_compaction": [
+            {"seed": 0, "wall_per_event_gather_s": wall,
+             "tiles_shard_max_gather": tiles / 2}],
+        "provenance": p,
+    }
+
+
+def test_provenance_stamp_fields(tmp_path):
+    p = regress.provenance(4, repo=str(tmp_path), jax_version="9.9.9")
+    assert p["schema_version"] == regress.BENCH_SCHEMA_VERSION
+    assert p["jax_version"] == "9.9.9" and p["device_count"] == 4
+    assert p["git_sha"] == "unknown"  # tmp_path is not a git repo
+
+
+def test_trajectory_roundtrip_and_append(tmp_path):
+    path = str(tmp_path / "BENCH_ci.json")
+    regress.append_record(path, record(sha="one"))
+    records = regress.append_record(path, record(sha="two"))
+    assert [r["provenance"]["git_sha"] for r in records] == ["one", "two"]
+    doc = json.load(open(path))
+    assert doc["format"] == "bench_ci_trajectory"
+    assert doc["schema_version"] == regress.BENCH_SCHEMA_VERSION
+    assert regress.load_trajectory(path) == records
+
+
+def test_legacy_single_record_loads_as_trajectory(tmp_path):
+    path = str(tmp_path / "BENCH_ci.json")
+    legacy = {"suite": "bench_ci", "unix_time": 123, "stepper_modes": []}
+    json.dump(legacy, open(path, "w"))
+    assert regress.load_trajectory(path) == [legacy]
+    # a stamped append preserves the legacy record as history
+    records = regress.append_record(path, record())
+    assert records[0] == legacy and len(records) == 2
+
+
+def test_load_rejects_unknown_shape(tmp_path):
+    path = str(tmp_path / "x.json")
+    json.dump({"something": "else"}, open(path, "w"))
+    with pytest.raises(ValueError):
+        regress.load_trajectory(path)
+
+
+def test_tracked_metrics_flattening():
+    m = regress.tracked_metrics(record(wall=0.02, tiles=640.0, edp=50.0))
+    assert m["stepper_modes/block/wall_per_event_s"] == 0.02
+    assert m["stepper_modes/block/edp_Js"] == 50.0
+    assert m["block_compaction/seed0/tiles_gather"] == 640.0
+    assert m["strategy_compaction/seed0/tiles_shard_max_gather"] == 320.0
+    # zero / non-numeric values carry no regression signal
+    assert "stepper_modes/none/wall_per_event_s" not in \
+        regress.tracked_metrics({"stepper_modes": [
+            {"stepper": "none", "wall_per_event_s": 0.0, "edp_Js": "n/a"}]})
+
+
+def test_comparable_requires_matching_provenance():
+    ok, _ = regress.comparable(record(), record())
+    assert ok
+    ok, reason = regress.comparable(record(), record(device_count=4))
+    assert not ok and "device_count" in reason
+    ok, reason = regress.comparable({"no": "stamp"}, record())
+    assert not ok and "unstamped" in reason
+
+
+def test_gate_passes_within_threshold(tmp_path):
+    path = str(tmp_path / "BENCH_ci.json")
+    regress.append_record(path, record(wall=0.0100, sha="base"))
+    regress.append_record(path, record(wall=0.0115, sha="head"))  # +15%
+    result = regress.check(path)
+    assert result.ok and result.baseline_sha == "base"
+    assert "PASS" in result.summary()
+
+
+def test_synthetic_25pct_regression_fails_ci(tmp_path, capsys):
+    """The acceptance contract: a 25% regression must fail the CI job."""
+    path = str(tmp_path / "BENCH_ci.json")
+    regress.append_record(path, record(wall=0.0100, sha="base"))
+    regress.append_record(path, record(wall=0.0125, sha="head"))  # +25%
+    result = regress.check(path)
+    assert not result.ok
+    regressed = {r.metric for r in result.regressions}
+    assert "stepper_modes/block/wall_per_event_s" in regressed
+    assert "block_compaction/seed0/wall_per_event_gather_s" in regressed
+    # the CLI — the actual CI step — exits 1 (job failure)
+    assert regress.main([path]) == 1
+    out = capsys.readouterr().out
+    assert "FAIL" in out and "REGRESSED" in out
+
+
+def test_tiles_and_edp_regressions_gate_too(tmp_path):
+    path = str(tmp_path / "BENCH_ci.json")
+    regress.append_record(path, record(tiles=1000.0, edp=100.0, sha="base"))
+    regress.append_record(path, record(tiles=1300.0, edp=130.0, sha="head"))
+    regressed = {r.metric for r in regress.check(path).regressions}
+    assert "block_compaction/seed0/tiles_gather" in regressed
+    assert "stepper_modes/block/edp_Js" in regressed
+
+
+def test_dropped_metric_is_a_regression(tmp_path):
+    path = str(tmp_path / "BENCH_ci.json")
+    regress.append_record(path, record(sha="base"))
+    gutted = record(sha="head")
+    gutted["block_compaction"] = []  # the sweep silently vanished
+    regress.append_record(path, gutted)
+    result = regress.check(path)
+    assert not result.ok
+    dropped = [r for r in result.regressions
+               if r.metric.startswith("block_compaction/")]
+    assert dropped and all(r.current == float("inf") for r in dropped)
+
+
+def test_scan_skips_incomparable_baselines(tmp_path):
+    path = str(tmp_path / "BENCH_ci.json")
+    regress.append_record(path, record(sha="old-comparable"))
+    regress.append_record(path, record(sha="other-jax", jax_version="0.5.0"))
+    regress.append_record(path, record(sha="head"))
+    result = regress.check(path)
+    assert result.ok and result.baseline_sha == "old-comparable"
+    assert any("other-jax" in n for n in result.notes)
+
+
+def test_no_comparable_baseline_passes_vacuously(tmp_path):
+    path = str(tmp_path / "BENCH_ci.json")
+    json.dump({"suite": "bench_ci", "stepper_modes": []}, open(path, "w"))
+    regress.append_record(path, record(sha="first-stamped"))
+    result = regress.check(path)
+    assert result.ok and not result.regressions
+    assert any("vacuously" in n for n in result.notes)
+
+
+def test_explicit_incomparable_baseline_refuses(tmp_path, capsys):
+    cur = str(tmp_path / "cur.json")
+    base = str(tmp_path / "base.json")
+    regress.append_record(cur, record(sha="head"))
+    regress.append_record(base, record(sha="base", device_count=8))
+    with pytest.raises(ValueError):
+        regress.check(cur, baseline_path=base)
+    assert regress.main([cur, "--baseline", base]) == 2
+    assert "REFUSED" in capsys.readouterr().out
+
+
+def test_explicit_comparable_baseline_compares(tmp_path):
+    cur = str(tmp_path / "cur.json")
+    base = str(tmp_path / "base.json")
+    regress.append_record(base, record(wall=0.0100, sha="base"))
+    regress.append_record(cur, record(wall=0.0500, sha="head"))
+    assert regress.main([cur, "--baseline", base]) == 1
+    assert regress.main([cur, "--baseline", base, "--threshold", "10"]) == 0
+
+
+def test_committed_trajectory_is_loadable_and_gated():
+    """The repo's own BENCH_ci.json must parse and pass its gate."""
+    import os
+    path = os.path.join(os.path.dirname(__file__), "..", "BENCH_ci.json")
+    records = regress.load_trajectory(path)
+    assert records, "committed BENCH_ci.json has no records"
+    assert regress.main([path]) == 0

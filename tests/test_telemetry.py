@@ -1,0 +1,122 @@
+"""Telemetry units: energy-model pinning, finalize/report round-trips,
+report paths, and the versioned ``metrics`` payload contract."""
+
+import json
+
+import pytest
+
+from repro.obs import energy, metrics
+from repro.sim import telemetry
+
+
+# --------------------------------------------------------------------------
+# energy model: single source of truth (paper Fig. 6 / Table 1 constants)
+# --------------------------------------------------------------------------
+def test_energy_constants_pinned():
+    assert energy.P_CHIP == 170.0
+    assert energy.P_HOST == 250.0
+    assert energy.IDLE_FRAC == 0.35
+    assert energy.DEFAULT_UTIL == 0.6
+
+
+def test_modeled_energy_math():
+    m = energy.modeled_energy(10.0, 2, util=0.5)
+    watts = energy.P_HOST + 2 * energy.P_CHIP * (
+        energy.IDLE_FRAC + (1 - energy.IDLE_FRAC) * 0.5)
+    assert m["peak_W"] == pytest.approx(watts)
+    assert m["energy_J"] == pytest.approx(10.0 * watts)
+    assert m["edp_Js"] == pytest.approx(m["energy_J"] * 10.0)
+
+
+def test_energy_model_not_duplicated():
+    """telemetry and benchmarks.common must re-export the obs.energy model,
+    not carry their own copies (the single-source-of-truth contract)."""
+    from benchmarks import common
+    assert telemetry.modeled_energy is energy.modeled_energy
+    assert common.modeled_energy is energy.modeled_energy
+    assert (common.P_CHIP, common.P_HOST, common.IDLE_FRAC) == \
+        (energy.P_CHIP, energy.P_HOST, energy.IDLE_FRAC)
+    assert telemetry.DEFAULT_UTIL == energy.DEFAULT_UTIL
+
+
+# --------------------------------------------------------------------------
+# finalize / write_report round-trip
+# --------------------------------------------------------------------------
+def _recorder():
+    rec = telemetry.TelemetryRecorder({"scenario": "plummer", "n": 64})
+    rec.record_step(1, 0.1, 0.5)
+    rec.record_step(2, 0.2, 0.3)
+    rec.record_snapshot(2, 0.2, energy=-0.25, de_rel=1e-9)
+    return rec
+
+
+def test_finalize_report_roundtrip(tmp_path):
+    report = _recorder().finalize(n_bodies=64, ensemble=1, n_devices=2)
+    path = telemetry.write_report(report, str(tmp_path / "sub" / "r.json"))
+    loaded = json.load(open(path))
+    assert loaded["scenario"] == "plummer"
+    assert loaded["steps"] == 2
+    assert loaded["wall_s"] == pytest.approx(0.8)
+    assert loaded["modeled"]["edp_Js"] == pytest.approx(
+        energy.modeled_energy(0.8, 2, energy.DEFAULT_UTIL)["edp_Js"])
+    assert loaded["snapshots"][-1]["de_rel"] == pytest.approx(1e-9)
+
+
+def test_finalize_metrics_payload_roundtrip(tmp_path):
+    reg = metrics.MetricsRegistry()
+    reg.counter("sim.events", unit="events").inc(37)
+    report = _recorder().finalize(n_bodies=64, metrics=reg.snapshot())
+    loaded = json.load(open(telemetry.write_report(
+        report, str(tmp_path / "r.json"))))
+    m = loaded["metrics"]
+    assert m["schema_version"] == metrics.METRICS_SCHEMA_VERSION
+    assert m["counters"]["sim.events"]["value"] == 37.0
+    metrics.validate_snapshot(m)
+
+
+def test_finalize_rejects_malformed_metrics():
+    with pytest.raises(ValueError):
+        _recorder().finalize(n_bodies=64, metrics={"schema_version": 999})
+    # reports without a metrics payload simply omit the key
+    assert "metrics" not in _recorder().finalize(n_bodies=64)
+
+
+def test_finalize_per_run_steps_length_mismatch():
+    with pytest.raises(ValueError):
+        _recorder().finalize(n_bodies=64, n_active=[64, 64],
+                             per_run_steps=[2])
+
+
+# --------------------------------------------------------------------------
+# default report paths
+# --------------------------------------------------------------------------
+def test_default_report_path_shape(tmp_path):
+    path = telemetry.default_report_path(
+        {"scenario": "king", "n": 256, "ensemble": 1, "strategy": "single"},
+        root=str(tmp_path))
+    assert path.endswith("experiments/sim/king_n256_single.json")
+    e8 = telemetry.default_report_path(
+        {"scenario": "king", "n": 256, "ensemble": 8, "strategy": "ring"},
+        root=str(tmp_path))
+    assert e8.endswith("experiments/sim/king_n256_e8_ring.json")
+
+
+def test_default_report_path_collisions_distinguished(tmp_path):
+    """Configs that differ in any path component never share a report file;
+    a re-run of the *same* config deliberately overwrites (one report per
+    configuration, not per invocation)."""
+    metas = [
+        {"scenario": "king", "n": 256, "ensemble": 1, "strategy": "single"},
+        {"scenario": "king", "n": 512, "ensemble": 1, "strategy": "single"},
+        {"scenario": "king", "n": 256, "ensemble": 2, "strategy": "single"},
+        {"scenario": "king", "n": 256, "ensemble": 1, "strategy": "ring"},
+        {"scenario": "plummer", "n": 256, "ensemble": 1,
+         "strategy": "single"},
+    ]
+    paths = [telemetry.default_report_path(m, root=str(tmp_path))
+             for m in metas]
+    assert len(set(paths)) == len(paths)
+    same = telemetry.default_report_path(metas[0], root=str(tmp_path))
+    telemetry.write_report({"run": 1}, same)
+    telemetry.write_report({"run": 2}, same)
+    assert json.load(open(same)) == {"run": 2}
