@@ -1,6 +1,6 @@
 """CI bench-smoke: the per-PR perf trajectory, consolidated to BENCH_ci.json.
 
-Five fast probes, one JSON artifact:
+Six fast probes, one JSON artifact:
 
 1. ``ensemble_throughput`` (smoke mode) — batched vs sequential invocations;
 2. ``mixed_ensemble`` (smoke mode) — padded heterogeneous batch vs
@@ -28,7 +28,15 @@ Five fast probes, one JSON artifact:
    ``ceil(cap_local/BI) x N/BJ`` tiles.  Bars: >= 1.5x fewer local tiles at
    <= 25% mean active fraction (the ISSUE acceptance gate), wall per event
    no worse.  Rows record the per-shard tile vectors from
-   ``grid_tiles_per_shard``.
+   ``grid_tiles_per_shard``;
+6. a **precision sweep** on the same workload (seeds 0-1): the shared-
+   adaptive lockstep through all three ``--dtype`` modes — ``fp64`` (golden
+   oracle), ``fp32`` (paper device precision) and ``mixed`` (bfloat16
+   per-pair arithmetic with compensated fp32 accumulation, the Tensix
+   unpack-fp32/compute-reduced/pack-fp32 fidelity pattern).  One row per
+   dtype records the median wall per event and the worst-seed |dE/E|; the
+   regress gate keys these rows by dtype, so fp32 wall only ever compares
+   against fp32 wall and a mixed |dE/E| blow-up is its own regression.
 
 The consolidated record is *appended* to the ``BENCH_ci.json`` trajectory
 at the repo root, stamped with its provenance (git SHA, trajectory
@@ -288,6 +296,70 @@ def strategy_compaction_sweep(quick: bool = False):
     return rows
 
 
+#: The precision sweep: the same workload through each dtype mode.  fp64
+#: routes to the pure-jnp oracle, so it carries no impl switch (the driver
+#: refuses the conflicting pair); the kernel dtypes pin impl="xla" like the
+#: other sweeps.
+_PRECISION = """
+from repro.sim import driver
+r = driver.run(driver.SimConfig(scenario={scenario!r}, n={n}, seed={seed},
+                                t_end={t_end}, stepper="adaptive",
+                                eta=0.02, dt_max=0.0625, dtype={dtype!r},
+                                {impl} diag_every={diag_every}))
+print("WALL", r["wall_s"])
+print("STEPS", r["steps"])
+print("DE_REL", r["de_rel"])
+print("MEDIAN_CHUNK", r["step_wall_s"]["median"])
+"""
+
+#: documented |dE/E| tolerance tiers of the precision modes on this
+#: workload (docs/ensembles.md "Precision modes"); printed as bars
+DE_TIERS = {"fp64": 1e-6, "fp32": 1e-4, "mixed": 1e-3}
+
+
+def precision_sweep(quick: bool = False):
+    """All three dtype modes on ``binary_plummer`` N=256, seeds 0-1.
+
+    One row per dtype: median wall per event across seeds (median diag
+    chunk, compile-free) and the worst-seed |dE/E|.  The printed bar checks
+    each dtype against its documented energy tier — the reduced-precision
+    mode must buy its cheaper arithmetic without leaving its tier.
+    """
+    rows = []
+    t_end = T_END / 2 if quick else T_END
+    seeds = (SEED,) if quick else (0, 1)
+    for dtype in ("fp64", "fp32", "mixed"):
+        walls, des = [], []
+        for seed in seeds:
+            out = common.run_subprocess(_PRECISION.format(
+                scenario=SCENARIO, n=N, seed=seed, t_end=t_end, dtype=dtype,
+                impl="" if dtype == "fp64" else 'impl="xla",',
+                diag_every=DIAG_EVERY))
+            walls.append(
+                common.stdout_field(out, "MEDIAN_CHUNK") / DIAG_EVERY)
+            des.append(common.stdout_field(out, "DE_REL"))
+        wall_per_event = sorted(walls)[len(walls) // 2]
+        de_rel = max(des)
+        tier = DE_TIERS[dtype]
+        print(f"# precision dtype={dtype}: wall/event="
+              f"{wall_per_event:.2e}s |dE/E|={de_rel:.3e} "
+              f"(tier <= {tier:.0e} -> "
+              f"{'PASS' if de_rel <= tier else 'FAIL'})")
+        rows.append({
+            "dtype": dtype,
+            "scenario": SCENARIO, "n": N, "t_end": t_end,
+            "seeds": list(seeds),
+            "wall_per_event_s": round(wall_per_event, 6),
+            "de_rel": de_rel,
+            "de_tier": tier,
+            "pass": de_rel <= tier,
+        })
+    common.emit("precision_sweep", rows,
+                ["dtype", "scenario", "n", "t_end", "seeds",
+                 "wall_per_event_s", "de_rel", "de_tier", "pass"])
+    return rows
+
+
 #: forced-host device count of the distributed probe — part of the
 #: provenance stamp (records from differently-shaped suites never compare)
 STRATEGY_DEVICES = 2
@@ -314,6 +386,7 @@ def run(quick: bool = False, smoke: bool = True):
         "stepper_modes": stepper_sweep(quick=quick),
         "block_compaction": compaction_sweep(quick=quick),
         "strategy_compaction": strategy_compaction_sweep(quick=quick),
+        "precision_sweep": precision_sweep(quick=quick),
     }
     doc["wall_s_total"] = round(time.perf_counter() - t0, 1)
     doc["provenance"] = regress.provenance(STRATEGY_DEVICES, repo=common.REPO)

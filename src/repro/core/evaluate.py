@@ -45,6 +45,7 @@ def make_block_evaluator(
     precision: str = "fp32",  # "fp32" (paper device precision) | "fp64" golden
     compaction: str = "none",
     n_caps: Optional[int] = None,
+    dtype: Optional[str] = None,
 ):
     """Active-target evaluator for the hierarchical block-timestep scheme.
 
@@ -80,15 +81,26 @@ def make_block_evaluator(
     ``precision="fp64"`` is the golden-reference mode (pure-jnp oracle at
     host precision, no kernel) used for validation and convergence tests;
     it supports both compaction modes through the same gather/scatter path.
+
+    ``dtype`` is the full precision axis (``ops.DTYPES``): ``"fp64"`` is a
+    synonym for ``precision="fp64"``, ``"fp32"`` the historical kernel
+    path, and ``"mixed"`` the Tensix-fidelity reduced-precision mode
+    (bfloat16 per-pair arithmetic, compensated fp32 accumulation) in both
+    kernel implementations.  ``dtype=None`` defers to ``precision`` so
+    existing callers are untouched.
     """
     if compaction not in COMPACTIONS:
         raise ValueError(
             f"compaction must be one of {COMPACTIONS}; got {compaction!r}")
+    if dtype is None:
+        dtype = "fp64" if precision == "fp64" else "fp32"
+    if dtype not in ops.DTYPES:
+        raise ValueError(f"dtype must be one of {ops.DTYPES}; got {dtype!r}")
 
     # rect1/rect2: the two Hermite passes in rectangular (targets x sources)
     # form with the activity mask applied — the only layer that differs
     # between the FP32 kernels and the FP64 oracle.
-    if precision == "fp64":
+    if dtype == "fp64" or precision == "fp64":
         from repro.kernels import ref
 
         def cast(x):
@@ -105,7 +117,8 @@ def make_block_evaluator(
             return jnp.where(mask_c[:, None], snp, 0.0)
     else:
         impl_ = impl or ops.default_impl()
-        kw = dict(eps=eps, block_i=block_i, block_j=block_j, impl=impl_)
+        kw = dict(eps=eps, block_i=block_i, block_j=block_j, impl=impl_,
+                  dtype=dtype)
 
         def cast(x):
             return jnp.asarray(x, jnp.float32)
@@ -175,6 +188,7 @@ def make_evaluator(
     block_i: int = nbody_force.DEFAULT_BLOCK_I,
     block_j: int = nbody_force.DEFAULT_BLOCK_J,
     precision: str = "fp32",  # "fp32" (paper device precision) | "fp64" golden
+    dtype: Optional[str] = None,
 ) -> Evaluator:
     """Single-device lockstep evaluator (Pallas kernel or XLA fallback).
 
@@ -190,7 +204,7 @@ def make_evaluator(
     """
     block_eval = make_block_evaluator(
         eps=eps, order=order, impl=impl, block_i=block_i, block_j=block_j,
-        precision=precision)
+        precision=precision, dtype=dtype)
 
     def evaluate(pos, vel, mass) -> Evaluation:
         mask = jnp.ones(pos.shape[0], bool)

@@ -187,9 +187,18 @@ def quantize_block_levels(dt_i, *, dt_max, n_levels: int):
     return jnp.clip(lev, 0, n_levels - 1).astype(jnp.int32)
 
 
-def block_level_dt(levels, dt_max):
-    """The step size ``dt_max / 2**level`` of each particle's block level."""
-    return dt_max * jnp.exp2(-levels.astype(jnp.result_type(float)))
+def block_level_dt(levels, dt_max, dtype=None):
+    """The step size ``dt_max / 2**level`` of each particle's block level.
+
+    The result dtype is pinned to ``dt_max``'s dtype (or an explicit
+    ``dtype``), not ``jnp.result_type(float)``: the latter follows the
+    ``jax_enable_x64`` flag, so an fp32 simulation state would silently get
+    fp64 level steps whenever the golden-reference flag is on — the
+    reconstructed dt then disagrees bitwise with the engine's own
+    ``state.dtype`` arithmetic.
+    """
+    dt_max = jnp.asarray(dt_max, dtype)
+    return dt_max * jnp.exp2(-levels.astype(dt_max.dtype))
 
 
 def block_level_occupancy(levels, *, n_levels: int, mask=None):

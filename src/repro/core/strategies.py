@@ -105,8 +105,12 @@ def _pad_particles(pos, vel, mass, n_pad: int):
     )
 
 
-def _force_kw(impl, block_i, block_j, eps):
-    return dict(eps=eps, impl=impl, block_i=block_i, block_j=block_j)
+def _force_kw(impl, block_i, block_j, eps, dtype="fp32"):
+    # the kw dict is passed straight into the ops rect wrappers, so the
+    # precision axis rides with the tile shape and softening everywhere a
+    # strategy launches a kernel
+    return dict(eps=eps, impl=impl, block_i=block_i, block_j=block_j,
+                dtype=dtype)
 
 
 def make_strategy_evaluator(
@@ -119,18 +123,23 @@ def make_strategy_evaluator(
     impl: str = "xla",
     block_i: int = nbody_force.DEFAULT_BLOCK_I,
     block_j: int = nbody_force.DEFAULT_BLOCK_J,
+    dtype: str = "fp32",
 ) -> Evaluator:
     """Build an ``Evaluator`` that distributes the evaluation over devices.
 
     The strategy meshes are *internal views* over the given devices: a 1D
     ``('dev',)`` mesh for replicated/mesh_sharded/ring, a 2D
     ``('card', 'chip')`` view for two_level (paper: 2 chips per n300 card).
+
+    ``dtype`` is the kernel precision axis (``"fp32"`` or ``"mixed"``);
+    the strategies keep fp32 state and collectives either way — only the
+    per-pair arithmetic inside each shard's launches narrows.
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
     devs = np.asarray(devices if devices is not None else jax.devices())
     p = devs.size
-    kw = _force_kw(impl, block_i, block_j, eps)
+    kw = _force_kw(impl, block_i, block_j, eps, dtype)
 
     if strategy == "two_level":
         if p % chips_per_card:
@@ -337,7 +346,8 @@ def _shard_plan(n_local: int, n_sources: int, kw, n_passes: int):
     local extent, so it constructs the local plan directly.
     """
     return ops.CapacityPlan(n_local, n_sources, kw["block_i"], kw["block_j"],
-                            n_passes=n_passes)
+                            n_passes=n_passes,
+                            dtype=kw.get("dtype", "fp32"))
 
 
 def _window_switch(cap_idx, caps, launch, window, extra=()):
@@ -492,6 +502,7 @@ def make_strategy_block_evaluator(
     block_i: int = nbody_force.DEFAULT_BLOCK_I,
     block_j: int = nbody_force.DEFAULT_BLOCK_J,
     compaction: str = "none",
+    dtype: str = "fp32",
 ):
     """Distributed active-target evaluator for the block-timestep scheme.
 
@@ -521,7 +532,7 @@ def make_strategy_block_evaluator(
             f"compaction must be one of {COMPACTIONS}; got {compaction!r}")
     devs = np.asarray(devices if devices is not None else jax.devices())
     p = devs.size
-    kw = _force_kw(impl, block_i, block_j, eps)
+    kw = _force_kw(impl, block_i, block_j, eps, dtype)
     n_passes = 2 if order >= 6 else 1
 
     if strategy == "two_level":

@@ -94,13 +94,65 @@ def _dv(tgt, src):
     return dvx, dvy, dvz
 
 
-def _acc_jerk_kernel(tgt_ref, src_ref, out_ref, *, eps: float):
+def _round(x, compute_dtype):
+    """Round a per-pair term through the reduced compute dtype (fp32 I/O).
+
+    Models the Tensix unpack-fp32 / compute-reduced / pack-fp32 datapath:
+    the (BI, BJ) contribution tile is what the FPU emits at reduced
+    precision; the accumulation that follows stays fp32.  ``None`` is the
+    identity, keeping the full-precision path bit-identical.
+    """
+    if compute_dtype is None:
+        return x
+    return x.astype(compute_dtype).astype(jnp.float32)
+
+
+def _accumulate(out_ref, comp_ref, contrib):
+    """Accumulate ``contrib`` into ``out_ref`` across the j-sweep.
+
+    With a compensation ref, each j-block add is an exact two-sum: the
+    rounding error of ``out += contrib`` is recovered and carried in
+    ``comp_ref``, so the j-loop accumulator error stays O(1 ulp) instead of
+    growing with the number of source blocks (the fp32-accumulate half of
+    the mixed-precision pattern).  Without one, this is the historical
+    in-place add.
+    """
+    if comp_ref is None:
+        out_ref[...] += contrib
+    else:
+        a = out_ref[...]
+        s = a + contrib
+        bb = s - a
+        err = (a - (s - bb)) + (contrib - bb)
+        out_ref[...] = s
+        comp_ref[...] += err
+
+
+def _fold_compensation(out_ref, comp_ref, j_step):
+    """Fold the carried compensation into the output at the last j-block.
+
+    Deliberately OUTSIDE the activity gate: an i-block whose final j-steps
+    are predicated away must still fold the error term accumulated on its
+    earlier active steps.
+    """
+    if comp_ref is None:
+        return
+
+    @pl.when(j_step == pl.num_programs(1) - 1)
+    def _fold():
+        out_ref[...] = out_ref[...] + comp_ref[...]
+
+
+def _acc_jerk_kernel(tgt_ref, src_ref, out_ref, comp_ref=None, *,
+                     eps: float, compute_dtype=None):
     """One (i-block, j-block) step of the acc/jerk/potential sweep."""
     j_step = pl.program_id(1)
 
     @pl.when(j_step == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
+        if comp_ref is not None:
+            comp_ref[...] = jnp.zeros_like(comp_ref)
 
     tgt = tgt_ref[...]
     act = tgt[:, _ACT : _ACT + 1]                       # target activity mask
@@ -119,26 +171,31 @@ def _acc_jerk_kernel(tgt_ref, src_ref, out_ref, *, eps: float):
         rv = dx * dvx + dy * dvy + dz * dvz             # v_r
         q = (-3.0 * rv) / d2                            # A_ij * v_r
 
-        ax = jnp.sum(t * dx, axis=1)
-        ay = jnp.sum(t * dy, axis=1)
-        az = jnp.sum(t * dz, axis=1)
-        jx = jnp.sum(t * (dvx + q * dx), axis=1)
-        jy = jnp.sum(t * (dvy + q * dy), axis=1)
-        jz = jnp.sum(t * (dvz + q * dz), axis=1)
-        pot = -jnp.sum(mj * inv_r, axis=1)
+        ax = jnp.sum(_round(t * dx, compute_dtype), axis=1)
+        ay = jnp.sum(_round(t * dy, compute_dtype), axis=1)
+        az = jnp.sum(_round(t * dz, compute_dtype), axis=1)
+        jx = jnp.sum(_round(t * (dvx + q * dx), compute_dtype), axis=1)
+        jy = jnp.sum(_round(t * (dvy + q * dy), compute_dtype), axis=1)
+        jz = jnp.sum(_round(t * (dvz + q * dz), compute_dtype), axis=1)
+        pot = -jnp.sum(_round(mj * inv_r, compute_dtype), axis=1)
         zero = jnp.zeros_like(ax)
 
         partial = jnp.stack([ax, ay, az, jx, jy, jz, pot, zero], axis=1)
-        out_ref[...] += act * partial
+        _accumulate(out_ref, comp_ref, act * partial)
+
+    _fold_compensation(out_ref, comp_ref, j_step)
 
 
-def _snap_kernel(tgt_ref, src_ref, tacc_ref, sacc_ref, out_ref, *, eps: float):
+def _snap_kernel(tgt_ref, src_ref, tacc_ref, sacc_ref, out_ref,
+                 comp_ref=None, *, eps: float, compute_dtype=None):
     """Second Hermite pass: snap from positions, velocities and pass-1 accs."""
     j_step = pl.program_id(1)
 
     @pl.when(j_step == 0)
     def _init():
         out_ref[...] = jnp.zeros_like(out_ref)
+        if comp_ref is not None:
+            comp_ref[...] = jnp.zeros_like(comp_ref)
 
     tgt = tgt_ref[...]
     act = tgt[:, _ACT : _ACT + 1]                       # target activity mask
@@ -164,14 +221,19 @@ def _snap_kernel(tgt_ref, src_ref, tacc_ref, sacc_ref, out_ref, *, eps: float):
         a3, b3 = -3.0 * alpha, -3.0 * beta
         px, py, pz = t * dx, t * dy, t * dz                   # A0
         jx_, jy_, jz_ = t * dvx + a3 * px, t * dvy + a3 * py, t * dvz + a3 * pz
-        sx = jnp.sum(t * dax - 6.0 * alpha * jx_ + b3 * px, axis=1)
-        sy = jnp.sum(t * day - 6.0 * alpha * jy_ + b3 * py, axis=1)
-        sz = jnp.sum(t * daz - 6.0 * alpha * jz_ + b3 * pz, axis=1)
+        sx = jnp.sum(_round(t * dax - 6.0 * alpha * jx_ + b3 * px,
+                            compute_dtype), axis=1)
+        sy = jnp.sum(_round(t * day - 6.0 * alpha * jy_ + b3 * py,
+                            compute_dtype), axis=1)
+        sz = jnp.sum(_round(t * daz - 6.0 * alpha * jz_ + b3 * pz,
+                            compute_dtype), axis=1)
         zero = jnp.zeros_like(sx)
 
         partial = jnp.stack([sx, sy, sz, zero, zero, zero, zero, zero],
                             axis=1)
-        out_ref[...] += act * partial
+        _accumulate(out_ref, comp_ref, act * partial)
+
+    _fold_compensation(out_ref, comp_ref, j_step)
 
 
 def grid_tiles(n_t: int, n_s: int, block_i: int, block_j: int) -> int:
@@ -199,8 +261,24 @@ def _grid_specs(n_t: int, n_s: int, block_i: int, block_j: int):
     return grid, tgt_spec, src_spec, out_spec
 
 
+def _out_wiring(n_t: int, out_spec, compute_dtype):
+    """(out_specs, out_shape, unpack) for a launch.
+
+    The full-precision path keeps its historical single output.  A reduced
+    compute dtype adds a second (N_t, 8) output carrying the two-sum
+    compensation term across the j-sweep; the kernel folds it into the
+    primary output at the last j-step and the wrapper discards it.
+    """
+    shape = jax.ShapeDtypeStruct((n_t, 8), jnp.float32)
+    if compute_dtype is None:
+        return out_spec, shape, lambda out: out
+    return [out_spec, out_spec], [shape, shape], lambda outs: outs[0]
+
+
 @functools.partial(
-    jax.jit, static_argnames=("eps", "block_i", "block_j", "interpret")
+    jax.jit,
+    static_argnames=("eps", "block_i", "block_j", "interpret",
+                     "compute_dtype"),
 )
 def acc_jerk_pot_packed(
     tgt,
@@ -210,6 +288,7 @@ def acc_jerk_pot_packed(
     block_i: int = DEFAULT_BLOCK_I,
     block_j: int = DEFAULT_BLOCK_J,
     interpret: bool = False,
+    compute_dtype: str | None = None,
 ):
     """Pallas all-pairs acceleration+jerk+potential on packed operands.
 
@@ -217,22 +296,27 @@ def acc_jerk_pot_packed(
     by ``block_i`` and N_s by ``block_j`` (``ops.py`` handles padding).
     Returns packed (N_t, 8) output.  N_t and N_s may differ — the rectangular
     contract used by the multi-device strategies (local targets x streamed
-    sources).
+    sources).  ``compute_dtype`` (e.g. ``"bfloat16"``) rounds per-pair terms
+    through the reduced dtype and compensates the j-loop accumulation.
     """
     n_t, n_s = tgt.shape[0], src.shape[1]
     grid, tgt_spec, src_spec, out_spec = _grid_specs(n_t, n_s, block_i, block_j)
-    return pl.pallas_call(
-        functools.partial(_acc_jerk_kernel, eps=eps),
+    out_specs, out_shape, unpack = _out_wiring(n_t, out_spec, compute_dtype)
+    return unpack(pl.pallas_call(
+        functools.partial(_acc_jerk_kernel, eps=eps,
+                          compute_dtype=compute_dtype),
         grid=grid,
         in_specs=[tgt_spec, src_spec],
-        out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((n_t, 8), jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(tgt, src)
+    )(tgt, src))
 
 
 @functools.partial(
-    jax.jit, static_argnames=("eps", "block_i", "block_j", "interpret")
+    jax.jit,
+    static_argnames=("eps", "block_i", "block_j", "interpret",
+                     "compute_dtype"),
 )
 def snap_packed(
     tgt,
@@ -244,17 +328,20 @@ def snap_packed(
     block_i: int = DEFAULT_BLOCK_I,
     block_j: int = DEFAULT_BLOCK_J,
     interpret: bool = False,
+    compute_dtype: str | None = None,
 ):
     """Pallas all-pairs snap pass on packed operands (see module docstring)."""
     n_t, n_s = tgt.shape[0], src.shape[1]
     grid, tgt_spec, src_spec, out_spec = _grid_specs(n_t, n_s, block_i, block_j)
     acc_t_spec = pl.BlockSpec((block_i, 8), lambda i, j: (i, 0))
     acc_s_spec = pl.BlockSpec((8, block_j), lambda i, j: (0, j))
-    return pl.pallas_call(
-        functools.partial(_snap_kernel, eps=eps),
+    out_specs, out_shape, unpack = _out_wiring(n_t, out_spec, compute_dtype)
+    return unpack(pl.pallas_call(
+        functools.partial(_snap_kernel, eps=eps,
+                          compute_dtype=compute_dtype),
         grid=grid,
         in_specs=[tgt_spec, src_spec, acc_t_spec, acc_s_spec],
-        out_specs=out_spec,
-        out_shape=jax.ShapeDtypeStruct((n_t, 8), jnp.float32),
+        out_specs=out_specs,
+        out_shape=out_shape,
         interpret=interpret,
-    )(tgt, src, tgt_acc, src_acc)
+    )(tgt, src, tgt_acc, src_acc))

@@ -54,6 +54,32 @@ IMPLS = ("pallas", "pallas_interpret", "xla", "pallas_marked")
 # the CPU dry-run host; hlo_analysis applies VMEM-fusion semantics to the
 # marked region, and the kernel itself is interpret-validated in tests).
 
+# The precision axis (--dtype): fp64 = the oracle path in core.evaluate,
+# fp32 = the historical kernel path, mixed = fp32 I/O with reduced-precision
+# per-pair arithmetic and compensated fp32 accumulation (the Tensix
+# unpack-fp32 / compute-reduced / pack-fp32 datapath).
+DTYPES = ("fp64", "fp32", "mixed")
+_COMPUTE_DTYPE = {"fp32": None, "mixed": "bfloat16"}
+_IO_BYTES = {"fp64": 8, "fp32": 4, "mixed": 4}
+_COMPUTE_BYTES = {"fp64": 8, "fp32": 4, "mixed": 2}
+
+
+def compute_dtype_for(dtype: str):
+    """Kernel compute dtype for a precision-axis name (None = full fp32).
+
+    ``mixed`` uses bfloat16 rather than fp16: the pairwise ``m_j / d^3``
+    term overflows fp16's 65504 max on softened close encounters, while
+    bf16 keeps fp32's exponent range — the reduced-*mantissa* half of the
+    Tensix pattern is what changes the arithmetic.  ``fp64`` never reaches
+    the packed kernels; ``core.evaluate``'s oracle branch owns it.
+    """
+    try:
+        return _COMPUTE_DTYPE[dtype]
+    except KeyError:
+        raise ValueError(
+            f"kernel dtype must be 'fp32' or 'mixed' (fp64 runs the oracle "
+            f"path in core.evaluate); got {dtype!r}") from None
+
 
 def _round_up(n: int, m: int) -> int:
     return ((n + m - 1) // m) * m
@@ -181,11 +207,50 @@ class CapacityPlan:
     block_j: int
     n_passes: int = 2
     caps: tuple = ()
+    dtype: str = "fp32"
 
     def __post_init__(self):
+        if self.dtype not in DTYPES:
+            raise ValueError(
+                f"plan dtype must be one of {DTYPES}, got {self.dtype!r}")
         if not self.caps:
             object.__setattr__(
                 self, "caps", capacity_buckets(self.n_targets, self.block_i))
+
+    @property
+    def io_bytes_per_element(self) -> int:
+        """Bytes per staged element (HBM<->VMEM) at this plan's dtype.
+
+        ``mixed`` stages fp32 — the Tensix pattern unpacks/packs fp32 and
+        only the in-register arithmetic narrows."""
+        return _IO_BYTES[self.dtype]
+
+    @property
+    def compute_bytes_per_element(self) -> int:
+        """Bytes per in-flight per-pair element at this plan's dtype."""
+        return _COMPUTE_BYTES[self.dtype]
+
+    @property
+    def tile_io_bytes(self) -> int:
+        """Bytes one (i, j) grid tile stages: the (BI, 8) target block and
+        (8, BJ) source block in, the (BI, 8) output block out."""
+        return (2 * self.block_i * 8 + 8 * self.block_j) \
+            * self.io_bytes_per_element
+
+    @property
+    def tile_vmem_bytes(self) -> int:
+        """Working-set bytes of one (BI, BJ) interaction tile: ~12 live
+        per-pair intermediates at the compute width plus the staged blocks
+        at the I/O width (the VMEM budget note in ``nbody_force.py``) —
+        a ``mixed`` plan's tile fits in roughly half the fp32 footprint,
+        which is what lets occupancy rise at fixed VMEM."""
+        live = 12 * self.block_i * self.block_j * self.compute_bytes_per_element
+        return live + self.tile_io_bytes
+
+    def tiles_per_vmem(self, vmem_bytes: int) -> int:
+        """How many interaction tiles a ``vmem_bytes`` budget holds — the
+        occupancy headroom the narrower compute width buys."""
+        return max(1, vmem_bytes // self.tile_vmem_bytes)
 
     @property
     def tiles_by_cap(self) -> tuple:
@@ -286,7 +351,8 @@ def scatter_sources(perm, cap: int, base, upd, mask_c):
         return base.at[idx].set(rows)
 
 
-@partial(jax.jit, static_argnames=("eps", "block_i", "block_j", "impl"))
+@partial(jax.jit,
+         static_argnames=("eps", "block_i", "block_j", "impl", "dtype"))
 def acc_jerk_pot_rect(
     pos_t, vel_t, pos_s, vel_s, mass_s,
     *,
@@ -295,15 +361,19 @@ def acc_jerk_pot_rect(
     block_i: int = nbody_force.DEFAULT_BLOCK_I,
     block_j: int = nbody_force.DEFAULT_BLOCK_J,
     impl: str = "pallas",
+    dtype: str = "fp32",
 ):
-    """(acc, jerk, pot) of N_t targets due to N_s sources, FP32.
+    """(acc, jerk, pot) of N_t targets due to N_s sources, FP32 I/O.
 
     ``mask_t`` (optional ``(N_t,)`` activity mask) restricts evaluation to
     the active *targets* — the block-timestep hot path.  Sources stay full.
     Inactive rows return exact zeros; in the Pallas path a fully-inactive
     i-block skips its compute, in the XLA path the mask zeroes the outputs
     (dense XLA cannot skip, so the saving there is accounting-only).
+    ``dtype="mixed"`` narrows the per-pair arithmetic (see
+    :func:`compute_dtype_for`) in both the Pallas and XLA paths.
     """
+    compute_dtype = compute_dtype_for(dtype)
     if impl in ("xla", "pallas_marked"):
         f32 = jnp.float32
         args = (
@@ -313,9 +383,11 @@ def acc_jerk_pot_rect(
         )
         if impl == "pallas_marked":
             with jax.named_scope("PALLAS_VMEM_REGION"):
-                acc, jerk, pot = ref.acc_jerk_pot_rect(*args, eps=eps)
+                acc, jerk, pot = ref.acc_jerk_pot_rect(
+                    *args, eps=eps, compute_dtype=compute_dtype)
         else:
-            acc, jerk, pot = ref.acc_jerk_pot_rect(*args, eps=eps)
+            acc, jerk, pot = ref.acc_jerk_pot_rect(
+                *args, eps=eps, compute_dtype=compute_dtype)
         if mask_t is not None:
             acc, jerk, pot = _mask_rows(mask_t, acc, jerk, pot)
         return acc, jerk, pot
@@ -327,11 +399,13 @@ def acc_jerk_pot_rect(
     out = nbody_force.acc_jerk_pot_packed(
         tgt, src, eps=eps, block_i=block_i, block_j=block_j,
         interpret=(impl == "pallas_interpret"),
+        compute_dtype=compute_dtype,
     )[:n_t]
     return out[:, 0:3], out[:, 3:6], out[:, 6]
 
 
-@partial(jax.jit, static_argnames=("eps", "block_i", "block_j", "impl"))
+@partial(jax.jit,
+         static_argnames=("eps", "block_i", "block_j", "impl", "dtype"))
 def snap_rect(
     pos_t, vel_t, acc_t, pos_s, vel_s, acc_s, mass_s,
     *,
@@ -340,13 +414,15 @@ def snap_rect(
     block_i: int = nbody_force.DEFAULT_BLOCK_I,
     block_j: int = nbody_force.DEFAULT_BLOCK_J,
     impl: str = "pallas",
+    dtype: str = "fp32",
 ):
-    """Snap of N_t targets due to N_s sources (second Hermite pass), FP32.
+    """Snap of N_t targets due to N_s sources (second Hermite pass), FP32 I/O.
 
     ``mask_t`` restricts the pass to active targets (see
     :func:`acc_jerk_pot_rect`); ``acc_s`` must then hold the *predicted*
     acceleration of inactive sources (the caller blends evaluated/predicted).
     """
+    compute_dtype = compute_dtype_for(dtype)
     if impl in ("xla", "pallas_marked"):
         f32 = jnp.float32
         args = (
@@ -357,9 +433,10 @@ def snap_rect(
         )
         if impl == "pallas_marked":
             with jax.named_scope("PALLAS_VMEM_REGION"):
-                snp = ref.snap_rect(*args, eps=eps)
+                snp = ref.snap_rect(*args, eps=eps,
+                                    compute_dtype=compute_dtype)
         else:
-            snp = ref.snap_rect(*args, eps=eps)
+            snp = ref.snap_rect(*args, eps=eps, compute_dtype=compute_dtype)
         if mask_t is not None:
             (snp,) = _mask_rows(mask_t, snp)
         return snp
@@ -373,6 +450,7 @@ def snap_rect(
     out = nbody_force.snap_packed(
         tgt, src, tacc, sacc, eps=eps, block_i=block_i, block_j=block_j,
         interpret=(impl == "pallas_interpret"),
+        compute_dtype=compute_dtype,
     )
     return out[:n_t, 0:3]
 

@@ -15,11 +15,63 @@ with r_ij = r_j - r_i, v_ij = v_j - v_i, a_ij = a_j - a_i,
 
 The potential phi_i = -sum_j m_j / sqrt(d2) is returned alongside for energy
 diagnostics (paper Fig. 4 validation).
+
+Mixed precision (``compute_dtype``): the Wormhole FPU the paper benchmarks
+computes in reduced precision with fp32 I/O (unpack fp32 -> compute fp16 ->
+pack fp32).  Passing ``compute_dtype="bfloat16"`` emulates that datapath at
+the oracle level: every *per-pair* contribution is rounded through the
+compute dtype before accumulation, and the source-axis reductions switch to
+a compensated (Neumaier two-sum) summation so the accumulator error stays
+O(1 ulp) instead of O(N) — the fp32-accumulate half of the Tensix pattern.
+``compute_dtype=None`` (the default) is bit-identical to the historical
+full-precision path.
 """
 
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
+
+
+def compensated_sum(x, axis: int = 0):
+    """Neumaier compensated sum along ``axis``.
+
+    Maintains a running compensation term alongside the accumulator: each
+    add performs a two-sum (``t = s + v``; the rounding error of that add is
+    recovered exactly as ``(s - t) + v`` or ``(v - t) + s`` depending on
+    which operand dominates) and folds the accumulated error back in at the
+    end.  The result carries O(1 ulp) error independent of the number of
+    summands — the property the kernel-side j-loop compensation mirrors.
+    """
+    x = jnp.moveaxis(x, axis, 0)
+
+    def add(carry, v):
+        s, c = carry
+        t = s + v
+        err = jnp.where(jnp.abs(s) >= jnp.abs(v), (s - t) + v, (v - t) + s)
+        return (t, c + err), None
+
+    zero = jnp.zeros(x.shape[1:], x.dtype)
+    (s, c), _ = jax.lax.scan(add, (zero, zero), x)
+    return s + c
+
+
+def _precision_ops(compute_dtype):
+    """(round-per-pair, reduce-over-axis) pair for a compute dtype.
+
+    ``None`` keeps the historical full-precision expressions untouched;
+    otherwise per-pair terms round through ``compute_dtype`` (fp32 in/out,
+    reduced-precision arithmetic — the Tensix unpack/compute/pack shape) and
+    reductions run compensated in fp32.
+    """
+    if compute_dtype is None:
+        return (lambda x: x), jnp.sum
+    cdt = jnp.dtype(compute_dtype)
+
+    def rnd(x):
+        return x.astype(cdt).astype(jnp.float32)
+
+    return rnd, compensated_sum
 
 
 def _pairwise_geometry(pos_t, pos_s, eps):
@@ -39,7 +91,8 @@ def _pairwise_geometry(pos_t, pos_s, eps):
     return dr, d2, inv_r
 
 
-def acc_jerk_pot_rect(pos_t, vel_t, pos_s, vel_s, mass_s, *, eps: float = 1e-7):
+def acc_jerk_pot_rect(pos_t, vel_t, pos_s, vel_s, mass_s, *,
+                      eps: float = 1e-7, compute_dtype=None):
     """Brute-force acc/jerk/potential of targets due to sources.
 
     Args:
@@ -47,10 +100,13 @@ def acc_jerk_pot_rect(pos_t, vel_t, pos_s, vel_s, mass_s, *, eps: float = 1e-7):
         pos_s, vel_s: (N_s, 3) source positions/velocities.
         mass_s: (N_s,) source masses.
         eps: Plummer softening length (paper Appendix A: 1e-7).
+        compute_dtype: reduced per-pair precision (e.g. ``"bfloat16"``) with
+            compensated fp32 accumulation; ``None`` = full precision.
 
     Returns:
         acc (N_t, 3), jerk (N_t, 3), pot (N_t,) in ``pos_t.dtype``.
     """
+    rnd, sum_ = _precision_ops(compute_dtype)
     dr, d2, inv_r = _pairwise_geometry(pos_t, pos_s, eps)
     inv_r3 = inv_r * inv_r * inv_r
     dv = vel_s[None, :, :] - vel_t[:, None, :]
@@ -59,19 +115,21 @@ def acc_jerk_pot_rect(pos_t, vel_t, pos_s, vel_s, mass_s, *, eps: float = 1e-7):
     rv = jnp.sum(dr * dv, axis=-1)                  # r_ij . v_ij
     q = -3.0 * rv / jnp.where(d2 > 0, d2, 1.0)      # A_ij * v_r in the paper
 
-    acc = jnp.sum(t[:, :, None] * dr, axis=1)
-    jerk = jnp.sum(t[:, :, None] * (dv + q[:, :, None] * dr), axis=1)
-    pot = -jnp.sum(mass_s[None, :] * inv_r, axis=1)
+    acc = sum_(rnd(t[:, :, None] * dr), axis=1)
+    jerk = sum_(rnd(t[:, :, None] * (dv + q[:, :, None] * dr)), axis=1)
+    pot = -sum_(rnd(mass_s[None, :] * inv_r), axis=1)
     return acc, jerk, pot
 
 
-def acc_jerk_pot(pos, vel, mass, *, eps: float = 1e-7):
+def acc_jerk_pot(pos, vel, mass, *, eps: float = 1e-7, compute_dtype=None):
     """Symmetric all-pairs form (targets == sources)."""
-    return acc_jerk_pot_rect(pos, vel, pos, vel, mass, eps=eps)
+    return acc_jerk_pot_rect(pos, vel, pos, vel, mass, eps=eps,
+                             compute_dtype=compute_dtype)
 
 
 def snap_rect(
-    pos_t, vel_t, acc_t, pos_s, vel_s, acc_s, mass_s, *, eps: float = 1e-7
+    pos_t, vel_t, acc_t, pos_s, vel_s, acc_s, mass_s, *,
+    eps: float = 1e-7, compute_dtype=None,
 ):
     """Brute-force snap of targets due to sources, given accelerations.
 
@@ -80,6 +138,7 @@ def snap_rect(
     which is why the paper's single-pass device kernel (acc+jerk only) caps at
     4th order; see DESIGN.md §2.2.
     """
+    rnd, sum_ = _precision_ops(compute_dtype)
     dr, d2, inv_r = _pairwise_geometry(pos_t, pos_s, eps)
     inv_r3 = inv_r * inv_r * inv_r
     d2s = jnp.where(d2 > 0, d2, 1.0)
@@ -96,16 +155,19 @@ def snap_rect(
     j_pair = t[:, :, None] * dv - 3.0 * alpha[:, :, None] * p_pair  # A1
     s_pair = t[:, :, None] * da - 6.0 * alpha[:, :, None] * j_pair \
         - 3.0 * beta[:, :, None] * p_pair                          # A2
-    return jnp.sum(s_pair, axis=1)
+    return sum_(rnd(s_pair), axis=1)
 
 
-def snap(pos, vel, acc, mass, *, eps: float = 1e-7):
+def snap(pos, vel, acc, mass, *, eps: float = 1e-7, compute_dtype=None):
     """Symmetric all-pairs snap (targets == sources)."""
-    return snap_rect(pos, vel, acc, pos, vel, acc, mass, eps=eps)
+    return snap_rect(pos, vel, acc, pos, vel, acc, mass, eps=eps,
+                     compute_dtype=compute_dtype)
 
 
-def acc_jerk_snap_pot(pos, vel, mass, *, eps: float = 1e-7):
+def acc_jerk_snap_pot(pos, vel, mass, *, eps: float = 1e-7,
+                      compute_dtype=None):
     """Full two-pass evaluation: (acc, jerk, snap, pot)."""
-    acc, jerk, pot = acc_jerk_pot(pos, vel, mass, eps=eps)
-    snp = snap(pos, vel, acc, mass, eps=eps)
+    acc, jerk, pot = acc_jerk_pot(pos, vel, mass, eps=eps,
+                                  compute_dtype=compute_dtype)
+    snp = snap(pos, vel, acc, mass, eps=eps, compute_dtype=compute_dtype)
     return acc, jerk, snp, pot

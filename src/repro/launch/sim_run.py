@@ -127,6 +127,13 @@ def main(argv=None):
     ap.add_argument("--impl", default=None,
                     choices=(None, "pallas", "pallas_interpret", "xla",
                              "fp64"))
+    ap.add_argument("--dtype", default="fp32",
+                    choices=("fp64", "fp32", "mixed"),
+                    help="precision axis: 'fp64' (pure-jnp golden oracle), "
+                         "'fp32' (paper device precision), or 'mixed' "
+                         "(bfloat16 per-pair arithmetic with compensated "
+                         "fp32 accumulation — the Tensix unpack-fp32/"
+                         "compute-reduced/pack-fp32 pattern)")
     ap.add_argument("--diag-every", type=int, default=16)
     ap.add_argument("--w0", type=float, default=None,
                     help="King concentration (sugar for --param w0=...)")
@@ -210,7 +217,8 @@ def main(argv=None):
         block_i=args.block_i,
         block_j=args.block_j, eta=args.eta,
         order=args.order, strategy=args.strategy, devices=args.devices,
-        impl=args.impl, kernel=args.kernel, mix=mix, pad=pad,
+        impl=args.impl, kernel=args.kernel, dtype=args.dtype,
+        mix=mix, pad=pad,
         diag_every=args.diag_every, scenario_params=params,
         validate_ic=args.validate,
         trace=args.trace, metrics_interval=args.metrics_interval,
@@ -227,7 +235,8 @@ def main(argv=None):
     print(f"[sim] scenario={desc} "
           f"ensemble={report['ensemble']} strategy={args.strategy} "
           f"devices={args.devices} order={args.order} "
-          f"stepper={report.get('stepper', 'fixed')}"
+          f"stepper={report.get('stepper', 'fixed')} "
+          f"dtype={args.dtype}"
           + (f" kernel={args.kernel}" if args.kernel else ""))
     if mixed:
         print(f"[sim] padded N_max={report['n_bodies']} "

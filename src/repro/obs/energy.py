@@ -30,7 +30,17 @@ DEFAULT_UTIL = 0.6
 
 
 def modeled_energy(t_solution: float, n_chips: int, util: float) -> dict:
-    """Paper Fig. 6 energy model; returns E (J), peak power (W), EDP (J s)."""
+    """Paper Fig. 6 energy model; returns E (J), peak power (W), EDP (J s).
+
+    ``util`` is a device occupancy *fraction* and must lie in [0, 1]: a
+    roofline ratio above 1 (or a negative one) would silently model
+    above-nameplate chip power in every EDP row downstream.
+    """
+    util = float(util)
+    if not 0.0 <= util <= 1.0:
+        raise ValueError(
+            f"util={util} must be an occupancy fraction in [0, 1] "
+            "(util > 1 would model above-nameplate chip power)")
     p_chips = n_chips * P_CHIP * (IDLE_FRAC + (1 - IDLE_FRAC) * util)
     p_total = P_HOST + p_chips
     e = t_solution * p_total

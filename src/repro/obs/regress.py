@@ -11,9 +11,12 @@ EDP — regresses more than :data:`DEFAULT_THRESHOLD` (20%).
 Two refusal rules keep the gate honest:
 
 * records without matching provenance (``schema_version`` / ``jax_version``
-  / ``device_count``) are *incomparable* — never silently compared.  When
-  scanning the trajectory they are skipped; an explicit ``--baseline`` that
-  is incomparable is a hard error (exit 2);
+  / ``device_count`` / ``dtype``) are *incomparable* — never silently
+  compared.  When scanning the trajectory they are skipped; an explicit
+  ``--baseline`` that is incomparable is a hard error (exit 2).  A record
+  stamped before the precision axis existed carries no ``dtype`` field and
+  is read as the historical ``"fp32"`` — the committed history keeps gating
+  non-vacuously, but a mixed-precision run never compares against it;
 * a metric present in the baseline but missing from the current record is a
   regression (a silently dropped row must not pass the gate); a metric new
   in the current record is informational only.
@@ -44,7 +47,12 @@ BENCH_SCHEMA_VERSION = 2
 DEFAULT_THRESHOLD = 0.20
 
 #: provenance fields that must match for two records to be comparable
-_COMPARABLE_FIELDS = ("schema_version", "jax_version", "device_count")
+_COMPARABLE_FIELDS = ("schema_version", "jax_version", "device_count",
+                      "dtype")
+
+#: fields whose absence reads as a historical default instead of a mismatch
+#: (records stamped before the precision axis existed are all-fp32 runs)
+_COMPARABLE_DEFAULTS = {"dtype": "fp32"}
 
 
 # --------------------------------------------------------------------------
@@ -63,8 +71,14 @@ def git_sha(repo: Optional[str] = None) -> str:
 
 
 def provenance(device_count: int, *, repo: Optional[str] = None,
-               jax_version: Optional[str] = None) -> Dict[str, Any]:
-    """The stamp every bench-smoke record carries (comparability contract)."""
+               jax_version: Optional[str] = None,
+               dtype: str = "fp32") -> Dict[str, Any]:
+    """The stamp every bench-smoke record carries (comparability contract).
+
+    ``dtype`` is the suite's *base* precision axis: per-dtype sweeps (e.g.
+    ``precision_sweep``) key their rows by dtype inside the record, so the
+    stamp records the precision of the single-dtype suites.
+    """
     if jax_version is None:
         try:
             from importlib.metadata import version
@@ -76,6 +90,7 @@ def provenance(device_count: int, *, repo: Optional[str] = None,
         "schema_version": BENCH_SCHEMA_VERSION,
         "jax_version": jax_version,
         "device_count": int(device_count),
+        "dtype": str(dtype),
     }
 
 
@@ -153,6 +168,12 @@ def tracked_metrics(record: Dict[str, Any]) -> Dict[str, float]:
             row.get("wall_per_event_gather_s"))
         put(f"{base}/tiles_shard_max_gather",
             row.get("tiles_shard_max_gather"))
+    for row in record.get("precision_sweep") or ():
+        # rows are keyed by their own dtype so fp32 wall only ever compares
+        # against fp32 wall, mixed |dE/E| against mixed |dE/E|, etc.
+        base = f"precision_sweep/{row.get('dtype')}"
+        put(f"{base}/wall_per_event_s", row.get("wall_per_event_s"))
+        put(f"{base}/de_rel", row.get("de_rel"))
     return out
 
 
@@ -165,9 +186,15 @@ def comparable(current: Dict[str, Any],
     if not isinstance(pb, dict):
         return False, "baseline record is unstamped (no provenance)"
     for field in _COMPARABLE_FIELDS:
-        if pc.get(field) != pb.get(field):
-            return False, (f"{field} mismatch: current={pc.get(field)!r} "
-                           f"baseline={pb.get(field)!r}")
+        default = _COMPARABLE_DEFAULTS.get(field)
+        fc, fb = pc.get(field, default), pb.get(field, default)
+        if fc is None:
+            fc = default
+        if fb is None:
+            fb = default
+        if fc != fb:
+            return False, (f"{field} mismatch: current={fc!r} "
+                           f"baseline={fb!r}")
     return True, ""
 
 

@@ -69,6 +69,7 @@ class SimConfig:
     devices: int = 1
     impl: Optional[str] = None
     kernel: Optional[str] = None     # "ref" | "pallas" (excludes impl)
+    dtype: str = "fp32"              # "fp64" | "fp32" | "mixed" precision axis
     mix: Optional[Tuple[Tuple[str, int], ...]] = None  # heterogeneous batch
     pad: Optional[int] = None        # padded N_max (None => auto = max N)
     eps: float = 1e-7
@@ -130,6 +131,7 @@ class SimConfig:
             "ensemble": self.ensemble, "strategy": self.strategy,
             "t_end": self.t_end, "dt": self.dt, "order": self.order,
             "stepper": self.resolved_stepper(),
+            "dtype": self.dtype,
             "params": dict(self.scenario_params),
         }
         if meta["stepper"] == "block":
@@ -186,11 +188,28 @@ def run(cfg: SimConfig) -> Dict[str, Any]:
     if cfg.metrics_interval < 0:
         raise ValueError(
             f"metrics_interval={cfg.metrics_interval} must be >= 0")
+    if cfg.dtype not in ops.DTYPES:
+        raise ValueError(
+            f"dtype must be one of {ops.DTYPES}; got {cfg.dtype!r}")
+    if cfg.dtype == "fp64" and (cfg.kernel is not None
+                                or cfg.impl not in (None, "fp64")):
+        raise ValueError(
+            "dtype='fp64' runs the pure-jnp oracle (no kernel); an explicit "
+            f"kernel={cfg.kernel!r}/impl={cfg.impl!r} would be silently "
+            "ignored")
+    if cfg.impl == "fp64" and cfg.dtype == "mixed":
+        raise ValueError(
+            "impl='fp64' (golden reference) conflicts with dtype='mixed' "
+            "(reduced-precision kernel mode)")
     stepper = cfg.resolved_stepper()
     tracer = obs_trace.SpanTracer() if cfg.trace else obs_trace.NullTracer()
     prev_tracer = obs_trace.set_tracer(tracer)
     try:
         with obs_metrics.use():
+            obs_metrics.registry().gauge(
+                "sim.dtype", unit="enum",
+                help="precision axis of the run's force kernels").set(
+                cfg.dtype)
             if cfg.mix is not None:
                 report = _run_mixed(cfg)
             elif stepper == "block" and cfg.ensemble == 1 and \
@@ -257,20 +276,20 @@ def _run_single(cfg: SimConfig) -> Dict[str, Any]:
     # impl+kernel pair is a conflict (e.g. fp64 vs a kernel switch)
     impl = ens.resolve_eval_impl(cfg.impl, cfg.kernel, default=None)
     if cfg.strategy == "single":
-        if impl == "fp64":  # golden reference: a precision, not a kernel
+        if impl == "fp64" or cfg.dtype == "fp64":
+            # golden reference: a precision, not a kernel
             evaluator = make_evaluator(precision="fp64", order=cfg.order,
                                        eps=cfg.eps)
         else:
             evaluator = make_evaluator(order=cfg.order, eps=cfg.eps,
-                                       impl=impl)
+                                       impl=impl, dtype=cfg.dtype)
     elif cfg.strategy in STRATEGIES:
-        if impl == "fp64":
+        if impl == "fp64" or cfg.dtype == "fp64":
             raise ValueError(
-                "impl='fp64' (golden reference) only runs under "
-                "strategy='single'")
+                "fp64 (golden reference) only runs under strategy='single'")
         evaluator = make_strategy_evaluator(
             cfg.strategy, devices=_device_list(cfg), order=cfg.order,
-            eps=cfg.eps, impl=impl or "xla")
+            eps=cfg.eps, impl=impl or "xla", dtype=cfg.dtype)
     else:
         raise ValueError(f"unknown strategy {cfg.strategy!r}")
 
@@ -328,17 +347,16 @@ def _run_block_strategy(cfg: SimConfig) -> Dict[str, Any]:
     if cfg.strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {cfg.strategy!r}")
     impl = ens.resolve_eval_impl(cfg.impl, cfg.kernel)
-    if impl == "fp64":
+    if impl == "fp64" or cfg.dtype == "fp64":
         raise ValueError(
-            "impl='fp64' (golden reference) only runs under "
-            "strategy='single'")
+            "fp64 (golden reference) only runs under strategy='single'")
     devices = _device_list(cfg)
     state = _build_states(cfg)[0]
     # same tile shape for the bootstrap pass as for the event loop, so a
     # CLI run is bit-for-bit reproducible by ens.evolve_strategy_block
     evaluator = make_strategy_evaluator(
         cfg.strategy, devices=devices, order=cfg.order, eps=cfg.eps,
-        impl=impl,
+        impl=impl, dtype=cfg.dtype,
         block_i=cfg.block_i or nbody_force.DEFAULT_BLOCK_I,
         block_j=cfg.block_j or nbody_force.DEFAULT_BLOCK_J)
 
@@ -369,7 +387,7 @@ def _run_block_strategy(cfg: SimConfig) -> Dict[str, Any]:
             dt_max=cfg.dt_max, n_levels=n_levels, carry=carry, eta=cfg.eta,
             order=cfg.order, eps=cfg.eps, impl=impl, strategy=cfg.strategy,
             compaction=cfg.compaction, block_i=cfg.block_i,
-            block_j=cfg.block_j, devices=cfg.devices)
+            block_j=cfg.block_j, devices=cfg.devices, dtype=cfg.dtype)
         jax.block_until_ready(state.pos)
         done += 1
         ev_now = float(carry.n_events)
@@ -476,7 +494,7 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
         1.0 - float(sum(n_active)) / (b * n_max))
     na = jnp.asarray(n_active, jnp.int32)
     kw = dict(n_active=na, order=cfg.order, eps=cfg.eps, impl=impl,
-              devices=devices)
+              devices=devices, dtype=cfg.dtype)
     batched = ens.ensemble_initialize(batched, **kw)
     jax.block_until_ready(batched.pos)
     e0 = np.asarray(ens.batched_total_energy(batched), np.float64)
@@ -558,7 +576,7 @@ def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
             recorder.meta["n_levels_auto"] = per_member
         plan = ops.CapacityPlan(
             n_max, n_max, cfg.block_i or nbody_force.DEFAULT_BLOCK_I,
-            cfg.block_j or nbody_force.DEFAULT_BLOCK_J)
+            cfg.block_j or nbody_force.DEFAULT_BLOCK_J, dtype=cfg.dtype)
         mask = np.arange(n_max)[None, :] < np.asarray(n_active)[:, None]
         carry = None
         done = 0

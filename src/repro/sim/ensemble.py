@@ -141,14 +141,17 @@ def batched_virial_ratio(batched: ParticleState) -> jax.Array:
 # --------------------------------------------------------------------------
 # engine
 # --------------------------------------------------------------------------
-def _inner_evaluator(order: int, eps: float, impl: str):
-    if impl == "fp64":
+def _inner_evaluator(order: int, eps: float, impl: str, dtype: str = "fp32"):
+    if impl == "fp64" and dtype == "mixed":
+        raise ValueError("impl='fp64' conflicts with dtype='mixed' — the "
+                         "oracle path has no reduced-precision mode")
+    if impl == "fp64" or dtype == "fp64":
         return make_evaluator(precision="fp64", order=order, eps=eps)
     if impl not in ENSEMBLE_IMPLS:
         raise ValueError(
             f"ensemble impl must be one of {ENSEMBLE_IMPLS} (the vmappable "
             f"evaluation paths); got {impl!r}")
-    return make_evaluator(order=order, eps=eps, impl=impl)
+    return make_evaluator(order=order, eps=eps, impl=impl, dtype=dtype)
 
 
 def _mask_evaluator(ev, n_active):
@@ -199,9 +202,9 @@ def _count_engine_build(kind: str) -> None:
 
 
 @functools.lru_cache(maxsize=64)
-def _engine(order: int, eps: float, impl: str, mesh):
+def _engine(order: int, eps: float, impl: str, mesh, dtype: str):
     _count_engine_build("fixed")
-    ev = _inner_evaluator(order, eps, impl)
+    ev = _inner_evaluator(order, eps, impl, dtype)
 
     @jax.jit
     def init(batched: ParticleState, n_active) -> ParticleState:
@@ -275,11 +278,12 @@ def ensemble_initialize(
     order: int = 6,
     eps: float = 1e-7,
     impl: str = "xla",
+    dtype: str = "fp32",
     devices: Optional[Sequence[jax.Device]] = None,
 ) -> ParticleState:
     """Bootstrap derivatives for every ensemble member (batched t=0 pass)."""
     mesh = _batch_mesh(devices)
-    init, _ = _engine(order, eps, impl, mesh)
+    init, _ = _engine(order, eps, impl, mesh, dtype)
     n_active = _as_n_active(batched, n_active)
     (padded, na), b = _pad_batch((batched, n_active),
                                  mesh.size if mesh else 1)
@@ -296,11 +300,12 @@ def ensemble_run(
     order: int = 6,
     eps: float = 1e-7,
     impl: str = "xla",
+    dtype: str = "fp32",
     devices: Optional[Sequence[jax.Device]] = None,
 ) -> ParticleState:
     """Advance an *initialized* batched state by ``n_steps`` fixed-dt steps."""
     mesh = _batch_mesh(devices)
-    _, run = _engine(order, eps, impl, mesh)
+    _, run = _engine(order, eps, impl, mesh, dtype)
     n_active = _as_n_active(batched, n_active)
     (padded, na), b = _pad_batch((batched, n_active),
                                  mesh.size if mesh else 1)
@@ -310,7 +315,7 @@ def ensemble_run(
 
 @functools.lru_cache(maxsize=64)
 def _adaptive_engine(order: int, eps: float, impl: str, mesh,
-                     eta: float, dt_max: float):
+                     eta: float, dt_max: float, dtype: str):
     """Per-run shared-adaptive (Aarseth) lockstep engine.
 
     Each run carries its own timestep: ``aarseth_dt`` is evaluated per
@@ -320,7 +325,7 @@ def _adaptive_engine(order: int, eps: float, impl: str, mesh,
     state is frozen by a per-run select — wasted flops, never wrong physics.
     """
     _count_engine_build("adaptive")
-    ev = _inner_evaluator(order, eps, impl)
+    ev = _inner_evaluator(order, eps, impl, dtype)
 
     def one_step(s, hp, na, t_end):
         remaining = t_end - s.time
@@ -370,6 +375,7 @@ def ensemble_run_adaptive(
     order: int = 6,
     eps: float = 1e-7,
     impl: str = "xla",
+    dtype: str = "fp32",
     devices: Optional[Sequence[jax.Device]] = None,
 ):
     """Advance an initialized batch by up to ``n_steps`` adaptive steps each.
@@ -379,16 +385,16 @@ def ensemble_run_adaptive(
     *productive* steps per run (frozen lockstep steps excluded).
     """
     mesh = _batch_mesh(devices)
-    run = _adaptive_engine(order, eps, impl, mesh, eta, dt_max)
-    dtype = batched.pos.dtype
+    run = _adaptive_engine(order, eps, impl, mesh, eta, dt_max, dtype)
+    state_dtype = batched.pos.dtype
     if h_prev is None:
-        h_prev = jnp.zeros(batch_size(batched), dtype)
+        h_prev = jnp.zeros(batch_size(batched), state_dtype)
     if n_taken is None:
         n_taken = jnp.zeros(batch_size(batched), jnp.int32)
     n_active = _as_n_active(batched, n_active)
     carry, b = _pad_batch((batched, h_prev, n_taken, n_active),
                           mesh.size if mesh else 1)
-    out, hp, cnt = run(*carry, jnp.asarray(t_end, dtype), n_steps)
+    out, hp, cnt = run(*carry, jnp.asarray(t_end, state_dtype), n_steps)
     return tuple(jax.tree_util.tree_map(lambda x: x[:b], t)
                  for t in (out, hp, cnt))
 
@@ -398,16 +404,20 @@ def ensemble_run_adaptive(
 # --------------------------------------------------------------------------
 def _block_inner_evaluator(order: int, eps: float, impl: str,
                            compaction: str, block_i: int, block_j: int,
-                           n_caps: Optional[int] = None):
+                           n_caps: Optional[int] = None,
+                           dtype: str = "fp32"):
     kw = dict(order=order, eps=eps, compaction=compaction,
               block_i=block_i, block_j=block_j, n_caps=n_caps)
-    if impl == "fp64":
+    if impl == "fp64" and dtype == "mixed":
+        raise ValueError("impl='fp64' conflicts with dtype='mixed' — the "
+                         "oracle path has no reduced-precision mode")
+    if impl == "fp64" or dtype == "fp64":
         return make_block_evaluator(precision="fp64", **kw)
     if impl not in ENSEMBLE_IMPLS:
         raise ValueError(
             f"ensemble impl must be one of {ENSEMBLE_IMPLS} (the vmappable "
             f"evaluation paths); got {impl!r}")
-    return make_block_evaluator(impl=impl, **kw)
+    return make_block_evaluator(impl=impl, dtype=dtype, **kw)
 
 
 # --- one block event, member view (shared by the vmapped ensemble engine
@@ -570,7 +580,7 @@ def _bucket_groups(n: int, n_active, block_i: int, block_j: int,
 def _block_engine(order: int, eps: float, impl: str, mesh,
                   eta: float, dt_max: float, n_levels: int,
                   compaction: str, block_i: int, block_j: int,
-                  groups: tuple):
+                  groups: tuple, dtype: str):
     """Hierarchical block-timestep engine (Aarseth dt -> power-of-two levels).
 
     Time is organized in **macro-steps** of ``dt_macro = min(dt_max,
@@ -615,7 +625,7 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
                                     order=order)
     if compaction != "gather":
         bev = _block_inner_evaluator(order, eps, impl, compaction,
-                                     block_i, block_j)
+                                     block_i, block_j, dtype=dtype)
 
     @functools.partial(jax.jit, static_argnames=("n_events",))
     def run(batched, carry: BlockCarry, n_active, t_end, n_events: int):
@@ -626,7 +636,7 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
         count_dtype = jax.dtypes.canonicalize_dtype(jnp.float64)
         if compaction == "gather":
             plan = ops.CapacityPlan(n, n, block_i, block_j,
-                                    n_passes=n_passes)
+                                    n_passes=n_passes, dtype=dtype)
             # one evaluator + switch per pre-lowered bucket group: members
             # grouped by their n_active ceiling dispatch over a schedule
             # truncated there (lax.switch needs its operand unbatched under
@@ -636,7 +646,8 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
                 (np.asarray(members, np.intp),
                  plan.restrict(plan.caps[min(n_caps, len(plan.caps)) - 1]),
                  _block_inner_evaluator(order, eps, impl, compaction,
-                                        block_i, block_j, n_caps))
+                                        block_i, block_j, n_caps,
+                                        dtype=dtype))
                 for members, n_caps in groups]
             inv = np.argsort(np.concatenate([m for m, _, _ in group_data]))
         else:
@@ -732,6 +743,7 @@ def ensemble_run_block(
     order: int = 6,
     eps: float = 1e-7,
     impl: str = "xla",
+    dtype: str = "fp32",
     compaction: str = "none",
     bucket_mode: str = "member",
     block_i: Optional[int] = None,
@@ -785,7 +797,7 @@ def ensemble_run_block(
                             bucket_mode)
     init, run = _block_engine(
         order, eps, impl, mesh, eta, dt_max, n_levels, compaction,
-        bi, bj, groups)
+        bi, bj, groups, dtype)
     if carry is None:
         carry = init(padded, na, t_end_)
     out, carry = run(padded, carry, na, t_end_, n_events)
@@ -805,6 +817,7 @@ def evolve_ensemble_block(
     eps: float = 1e-7,
     impl: Optional[str] = None,
     kernel: Optional[str] = None,
+    dtype: str = "fp32",
     compaction: str = "none",
     bucket_mode: str = "member",
     block_i: Optional[int] = None,
@@ -820,7 +833,7 @@ def evolve_ensemble_block(
     batched = states if isinstance(states, ParticleState) else \
         stack_states(list(states))
     kw = dict(n_active=n_active, order=order, eps=eps, impl=impl,
-              devices=devices)
+              dtype=dtype, devices=devices)
     batched = ensemble_initialize(batched, **kw)
     carry = None
     for _ in range(max_chunks):
@@ -841,7 +854,7 @@ def _strategy_block_engine(strategy: str, n_devices: int,
                            chips_per_card: int, order: int, eps: float,
                            impl: str, eta: float, dt_max: float,
                            n_levels: int, compaction: str,
-                           block_i: int, block_j: int):
+                           block_i: int, block_j: int, dtype: str):
     """Block-timestep engine whose force evaluation is *distributed* over a
     device mesh instead of vmapped over a batch: one run, its domain sharded
     by one of the paper's strategies, each shard compacting its own local
@@ -859,7 +872,7 @@ def _strategy_block_engine(strategy: str, n_devices: int,
     bev = make_strategy_block_evaluator(
         strategy, devices=devs, chips_per_card=chips_per_card, eps=eps,
         order=order, impl=impl, block_i=block_i, block_j=block_j,
-        compaction=compaction)
+        compaction=compaction, dtype=dtype)
     n_sub = 2 ** (n_levels - 1)
     event_init = functools.partial(_event_init, eta=eta, dt_max=dt_max,
                                    n_levels=n_levels)
@@ -935,6 +948,7 @@ def strategy_run_block(
     order: int = 6,
     eps: float = 1e-7,
     impl: str = "xla",
+    dtype: str = "fp32",
     strategy: str = "replicated",
     chips_per_card: int = 2,
     compaction: str = "none",
@@ -959,7 +973,7 @@ def strategy_run_block(
         strategy, _n_devices(devices), chips_per_card, order, eps, impl,
         eta, dt_max, n_levels, compaction,
         block_i or nbody_force.DEFAULT_BLOCK_I,
-        block_j or nbody_force.DEFAULT_BLOCK_J)
+        block_j or nbody_force.DEFAULT_BLOCK_J, dtype)
     t_end_ = jnp.asarray(t_end, state.pos.dtype)
     if carry is None:
         carry = init(state, t_end_)
@@ -978,6 +992,7 @@ def evolve_strategy_block(
     eps: float = 1e-7,
     impl: Optional[str] = None,
     kernel: Optional[str] = None,
+    dtype: str = "fp32",
     chips_per_card: int = 2,
     compaction: str = "none",
     block_i: Optional[int] = None,
@@ -997,14 +1012,15 @@ def evolve_strategy_block(
         strategy, devices=jax.devices()[:ndev],
         chips_per_card=chips_per_card, eps=eps, order=order, impl=impl,
         block_i=block_i or nbody_force.DEFAULT_BLOCK_I,
-        block_j=block_j or nbody_force.DEFAULT_BLOCK_J)
+        block_j=block_j or nbody_force.DEFAULT_BLOCK_J, dtype=dtype)
     state = hermite.initialize(state, ev)
     carry = None
     for _ in range(max_chunks):
         state, carry = strategy_run_block(
             state, t_end=t_end, n_events=n_events, dt_max=dt_max,
             n_levels=n_levels, carry=carry, eta=eta, order=order, eps=eps,
-            impl=impl, strategy=strategy, chips_per_card=chips_per_card,
+            impl=impl, dtype=dtype, strategy=strategy,
+            chips_per_card=chips_per_card,
             compaction=compaction, block_i=block_i, block_j=block_j,
             devices=ndev)
         if float(state.time) >= t_end:
@@ -1022,6 +1038,7 @@ def evolve_ensemble(
     eps: float = 1e-7,
     impl: Optional[str] = None,
     kernel: Optional[str] = None,
+    dtype: str = "fp32",
     devices: Optional[Sequence[jax.Device]] = None,
     strategy: str = "replicated",
 ) -> ParticleState:
@@ -1039,6 +1056,6 @@ def evolve_ensemble(
     batched = states if isinstance(states, ParticleState) else \
         stack_states(list(states))
     kw = dict(n_active=n_active, order=order, eps=eps, impl=impl,
-              devices=devices)
+              dtype=dtype, devices=devices)
     batched = ensemble_initialize(batched, **kw)
     return ensemble_run(batched, n_steps=n_steps, dt=dt, **kw)

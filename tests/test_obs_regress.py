@@ -173,6 +173,75 @@ def test_explicit_comparable_baseline_compares(tmp_path):
     assert regress.main([cur, "--baseline", base, "--threshold", "10"]) == 0
 
 
+def test_provenance_stamps_dtype_default_fp32(tmp_path):
+    p = regress.provenance(2, repo=str(tmp_path), jax_version="9.9.9")
+    assert p["dtype"] == "fp32"
+    p = regress.provenance(2, repo=str(tmp_path), jax_version="9.9.9",
+                           dtype="mixed")
+    assert p["dtype"] == "mixed"
+
+
+def test_cross_dtype_comparison_refused():
+    """A mixed-precision record must never gate against an fp32 baseline —
+    slower-but-cheaper arithmetic would read as a wall regression (or a
+    speedup would mask one)."""
+    ok, reason = regress.comparable(record(dtype="mixed"), record())
+    assert not ok and "dtype" in reason
+    ok, reason = regress.comparable(record(), record(dtype="mixed"))
+    assert not ok and "dtype" in reason
+    ok, _ = regress.comparable(record(dtype="mixed"), record(dtype="mixed"))
+    assert ok
+
+
+def test_absent_dtype_reads_as_fp32():
+    """Records stamped before the precision axis existed (the committed
+    history) compare against new fp32-stamped records — the gate must not go
+    vacuous across the schema addition."""
+    legacy = record()
+    legacy["provenance"].pop("dtype", None)  # pre-axis stamp has no dtype
+    ok, _ = regress.comparable(record(dtype="fp32"), legacy)
+    assert ok
+    ok, reason = regress.comparable(record(dtype="mixed"), legacy)
+    assert not ok and "dtype" in reason
+
+
+def test_cross_dtype_explicit_baseline_refuses(tmp_path, capsys):
+    cur = str(tmp_path / "cur.json")
+    base = str(tmp_path / "base.json")
+    regress.append_record(cur, record(sha="head", dtype="mixed"))
+    regress.append_record(base, record(sha="base", dtype="fp32"))
+    assert regress.main([cur, "--baseline", base]) == 2
+    assert "REFUSED" in capsys.readouterr().out
+
+
+def test_precision_sweep_rows_tracked_per_dtype(tmp_path):
+    """precision_sweep rows flatten under their own dtype key, so fp32 wall
+    only ever compares against fp32 wall, mixed |dE/E| against mixed."""
+    def sweep_record(sha, walls, des):
+        r = record(sha=sha)
+        r["precision_sweep"] = [
+            {"dtype": d, "wall_per_event_s": w, "de_rel": e}
+            for d, w, e in zip(("fp64", "fp32", "mixed"), walls, des)]
+        return r
+
+    m = regress.tracked_metrics(
+        sweep_record("x", (0.04, 0.01, 0.02), (1e-12, 1e-7, 1e-4)))
+    assert m["precision_sweep/fp32/wall_per_event_s"] == 0.01
+    assert m["precision_sweep/mixed/wall_per_event_s"] == 0.02
+    assert m["precision_sweep/mixed/de_rel"] == 1e-4
+
+    path = str(tmp_path / "BENCH_ci.json")
+    regress.append_record(
+        path, sweep_record("base", (0.04, 0.01, 0.02), (1e-12, 1e-7, 1e-4)))
+    # mixed |dE/E| blows past its own baseline -> regression, keyed by dtype
+    regress.append_record(
+        path, sweep_record("head", (0.04, 0.01, 0.02), (1e-12, 1e-7, 1e-2)))
+    result = regress.check(path)
+    assert not result.ok
+    assert {r.metric for r in result.regressions} == \
+        {"precision_sweep/mixed/de_rel"}
+
+
 def test_committed_trajectory_is_loadable_and_gated():
     """The repo's own BENCH_ci.json must parse and pass its gate."""
     import os

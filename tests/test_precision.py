@@ -1,0 +1,263 @@
+"""Precision-axis units: compensated accumulation, dtype plumbing, tiers.
+
+The mixed mode mirrors the Tensix fidelity pattern (unpack fp32 / compute
+reduced / pack fp32): each pairwise contribution is rounded through bfloat16
+and the j-loop accumulates in fp32 with a two-sum (kernel) or Neumaier
+(reference) compensation.  These units pin the three layers separately:
+
+* the compensated reduction itself, at ULP level, against a naive
+  sequential fp32 sum on adversarial wide-magnitude inputs;
+* the dtype plumbing — ``dtype="fp32"`` must stay BIT-IDENTICAL to the
+  historical default path, ``"fp64"`` must refuse to reach the kernels;
+* the capacity model — element widths change tile byte costs and occupancy.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hermite
+from repro.kernels import nbody_force, ops, ref
+
+F32 = jnp.float32
+
+
+# --------------------------------------------------------------------------
+# compensated summation, at ULP level
+# --------------------------------------------------------------------------
+def _naive_fp32_sum(x):
+    """The uncompensated sequential j-loop: one fp32 add per element."""
+    acc = np.float32(0.0)
+    for v in x:
+        acc = np.float32(acc + v)
+    return float(acc)
+
+
+def test_compensated_sum_recovers_absorbed_term():
+    """The classic absorption case: 1e8 + 1 - 1e8.  A naive fp32 sum
+    swallows the 1 entirely; the Neumaier compensation returns it exactly."""
+    x = np.asarray([1e8, 1.0, -1e8], np.float32)
+    assert _naive_fp32_sum(x) == 0.0
+    assert float(ref.compensated_sum(jnp.asarray(x))) == 1.0
+
+
+@pytest.mark.parametrize("seed", (2, 3, 4))
+def test_compensated_sum_beats_naive_at_ulp_level(seed):
+    """Adversarial input: 4096 terms spanning eight decades with random
+    signs.  The naive sequential fp32 sum drifts tens of ULPs from the fp64
+    truth; the compensated reduction stays correctly rounded (<= 1 ULP)."""
+    rng = np.random.default_rng(seed)
+    n = 4096
+    x = (10.0 ** rng.uniform(-4, 4, n)
+         * rng.choice([-1.0, 1.0], n)).astype(np.float32)
+    true = np.sum(x.astype(np.float64))
+    ulp = np.spacing(np.float32(abs(true)))
+    naive_ulp = abs(_naive_fp32_sum(x) - true) / ulp
+    comp_ulp = abs(float(ref.compensated_sum(jnp.asarray(x))) - true) / ulp
+    assert comp_ulp <= 1.0, f"compensated sum off by {comp_ulp:.2f} ULP"
+    assert naive_ulp >= 10.0, \
+        f"input not adversarial enough (naive only {naive_ulp:.2f} ULP)"
+    assert comp_ulp < naive_ulp / 10.0
+
+
+def test_compensated_sum_axis_handling():
+    """Axis semantics match jnp.sum over the reduced axis."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((5, 7, 3)), F32)
+    for axis in (0, 1):
+        got = ref.compensated_sum(x, axis=axis)
+        want = jnp.sum(x.astype(jnp.float64), axis=axis)
+        assert got.shape == want.shape
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def _cloud(n, seed, mass_span=4.0):
+    """Cluster with masses spanning ``10**mass_span`` decades — wide-
+    magnitude per-pair contributions, the case compensation exists for."""
+    rng = np.random.default_rng(seed)
+    pos = jnp.asarray(rng.standard_normal((n, 3)), F32)
+    vel = jnp.asarray(rng.standard_normal((n, 3)) * 0.1, F32)
+    mass = jnp.asarray(10.0 ** rng.uniform(-mass_span, 0, n) / n, F32)
+    return pos, vel, mass
+
+
+def test_mixed_kernel_two_sum_matches_neumaier_ref():
+    """Two independent compensated implementations — the Pallas kernel's
+    two-sum across j-blocks and the reference Neumaier scan — agree to
+    fp32 rounding on a wide-magnitude cluster tiled over MANY j-blocks
+    (block_j=32 at N=256 gives 8 accumulation steps per row).  Without
+    compensation the block-boundary partial sums would differ at ~1e-4."""
+    pos, vel, mass = _cloud(256, seed=11)
+    kw = dict(eps=1e-7, block_i=32, block_j=32)
+    a_ref, j_ref, p_ref = ops.acc_jerk_pot_rect(
+        pos, vel, pos, vel, mass, impl="xla", dtype="mixed", **kw)
+    a_k, j_k, p_k = ops.acc_jerk_pot_rect(
+        pos, vel, pos, vel, mass, impl="pallas_interpret", dtype="mixed",
+        **kw)
+    # the two compensated schemes round differently by a few fp32 ULPs of
+    # each row sum — 1e-5 relative is ~400x tighter than bf16's 2**-8
+    # rounding, so an uncompensated accumulation still fails loudly here
+    scale = float(jnp.max(jnp.abs(a_ref)))
+    assert float(jnp.max(jnp.abs(a_k - a_ref))) < 1e-5 * scale
+    assert float(jnp.max(jnp.abs(p_k - p_ref))) < 1e-5 * float(
+        jnp.max(jnp.abs(p_ref)))
+    s_ref = ops.snap_rect(pos, vel, a_ref, pos, vel, a_ref, mass,
+                          impl="xla", dtype="mixed", **kw)
+    s_k = ops.snap_rect(pos, vel, a_ref, pos, vel, a_ref, mass,
+                        impl="pallas_interpret", dtype="mixed", **kw)
+    assert float(jnp.max(jnp.abs(s_k - s_ref))) < 1e-5 * max(
+        float(jnp.max(jnp.abs(s_ref))), 1.0)
+
+
+def test_mixed_matches_fp64_within_bf16_rounding():
+    """The mixed force is the fp64 force plus bf16 per-pair rounding noise
+    (relative ~2**-8); the compensated accumulation must not let the error
+    grow with the number of j-blocks."""
+    pos, vel, mass = _cloud(192, seed=5, mass_span=2.0)
+    a64, _, _ = ref.acc_jerk_pot_rect(
+        pos.astype(jnp.float64), vel.astype(jnp.float64),
+        pos.astype(jnp.float64), vel.astype(jnp.float64),
+        mass.astype(jnp.float64), eps=1e-7)
+    for impl in ("xla", "pallas_interpret"):
+        am, _, _ = ops.acc_jerk_pot_rect(pos, vel, pos, vel, mass,
+                                         impl=impl, dtype="mixed",
+                                         eps=1e-7, block_i=32, block_j=32)
+        rel = float(jnp.max(jnp.abs(am - a64.astype(F32)))
+                    / jnp.max(jnp.abs(a64)))
+        assert rel < 2.0 ** -7, f"{impl}: mixed rel error {rel:.2e}"
+
+
+# --------------------------------------------------------------------------
+# dtype plumbing: fp32 bit-identity, fp64 refusal
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("impl", ("xla", "pallas_interpret"))
+def test_fp32_dtype_is_bit_identical_to_default(impl):
+    """dtype='fp32' must lower to EXACTLY the historical path — the golden
+    lockdown of this PR's refactor (identity rounding, plain jnp.sum)."""
+    pos, vel, mass = _cloud(96, seed=3)
+    kw = dict(eps=1e-7, block_i=64, block_j=64, impl=impl)
+    base = ops.acc_jerk_pot_rect(pos, vel, pos, vel, mass, **kw)
+    tagged = ops.acc_jerk_pot_rect(pos, vel, pos, vel, mass,
+                                   dtype="fp32", **kw)
+    for b, t in zip(base, tagged):
+        assert jnp.array_equal(b, t), "dtype='fp32' changed bits"
+    s_base = ops.snap_rect(pos, vel, base[0], pos, vel, base[0], mass, **kw)
+    s_tag = ops.snap_rect(pos, vel, base[0], pos, vel, base[0], mass,
+                          dtype="fp32", **kw)
+    assert jnp.array_equal(s_base, s_tag)
+
+
+def test_compute_dtype_for_mapping():
+    assert ops.compute_dtype_for("fp32") is None
+    assert ops.compute_dtype_for("mixed") == "bfloat16"
+    with pytest.raises(ValueError):
+        ops.compute_dtype_for("fp64")  # oracle path, never a kernel dtype
+    with pytest.raises(ValueError):
+        ops.compute_dtype_for("fp16")
+
+
+def test_rect_ops_reject_unknown_dtype():
+    pos, vel, mass = _cloud(32, seed=0)
+    with pytest.raises(ValueError):
+        ops.acc_jerk_pot_rect(pos, vel, pos, vel, mass, impl="xla",
+                              dtype="fp64")
+
+
+def test_evaluator_dtype_fp64_routes_to_oracle():
+    """make_evaluator(dtype='fp64') is the golden oracle — bit-identical to
+    precision='fp64', untouched by kernel/impl switches."""
+    from repro.core.evaluate import make_evaluator
+    pos, vel, mass = _cloud(24, seed=9)
+    pos64 = pos.astype(jnp.float64)
+    a = make_evaluator(precision="fp64")(pos64, vel.astype(jnp.float64),
+                                         mass.astype(jnp.float64))
+    b = make_evaluator(dtype="fp64")(pos64, vel.astype(jnp.float64),
+                                     mass.astype(jnp.float64))
+    assert jnp.array_equal(a.acc, b.acc) and a.acc.dtype == jnp.float64
+
+
+def test_ensemble_rejects_fp64_impl_mixed_dtype_conflict():
+    from repro.sim import ensemble as ens
+    from repro.sim import scenarios
+    state = scenarios.make("plummer", 16, seed=0)
+    with pytest.raises(ValueError, match="conflict"):
+        ens.evolve_ensemble(ens.stack_states([state]), n_steps=1, dt=0.01,
+                            impl="fp64", dtype="mixed")
+
+
+# --------------------------------------------------------------------------
+# capacity model: element width drives tile byte cost and occupancy
+# --------------------------------------------------------------------------
+def test_capacity_plan_dtype_byte_costs():
+    mk = lambda d: ops.CapacityPlan(256, 256, 64, 64, dtype=d)  # noqa: E731
+    fp64, fp32, mixed = mk("fp64"), mk("fp32"), mk("mixed")
+    assert (fp64.io_bytes_per_element, fp64.compute_bytes_per_element) \
+        == (8, 8)
+    assert (fp32.io_bytes_per_element, fp32.compute_bytes_per_element) \
+        == (4, 4)
+    # mixed: fp32 operands in/out (unpack/pack), bf16 inside the compute
+    assert (mixed.io_bytes_per_element, mixed.compute_bytes_per_element) \
+        == (4, 2)
+    assert fp64.tile_vmem_bytes > fp32.tile_vmem_bytes \
+        > mixed.tile_vmem_bytes
+    assert mixed.tile_io_bytes == fp32.tile_io_bytes
+    vmem = 1 << 20
+    assert mixed.tiles_per_vmem(vmem) >= fp32.tiles_per_vmem(vmem) \
+        >= fp64.tiles_per_vmem(vmem)
+    with pytest.raises(ValueError):
+        ops.CapacityPlan(256, 256, 64, 64, dtype="int8")
+
+
+def test_capacity_plan_dtype_survives_shard_and_restrict():
+    plan = ops.CapacityPlan(256, 256, 64, 64, dtype="mixed")
+    assert plan.shard(2).dtype == "mixed"
+    assert plan.restrict(1).dtype == "mixed"
+
+
+# --------------------------------------------------------------------------
+# hermite.block_level_dt: dtype pinned to dt_max, not the x64 flag
+# --------------------------------------------------------------------------
+def test_block_level_dt_pins_state_dtype():
+    """Regression: the level dt used to be reconstructed at
+    jnp.result_type(float), which follows jax_enable_x64 (on in this suite)
+    — an fp32 state silently got fp64 steps.  It now follows dt_max."""
+    levels = jnp.asarray([0, 1, 3], jnp.int32)
+    dt32 = hermite.block_level_dt(levels, jnp.float32(0.0625))
+    assert dt32.dtype == jnp.float32
+    dt64 = hermite.block_level_dt(levels, jnp.float64(0.0625))
+    assert dt64.dtype == jnp.float64
+    pinned = hermite.block_level_dt(levels, 0.0625, dtype=jnp.float32)
+    assert pinned.dtype == jnp.float32
+    # XLA's exp2 lowers via exp(x*ln2): 1-ULP slack on exact powers of two
+    np.testing.assert_allclose(np.asarray(dt64),
+                               [0.0625, 0.03125, 0.0078125], rtol=1e-15)
+    np.testing.assert_allclose(np.asarray(dt32), np.asarray(dt64),
+                               rtol=1e-6)
+
+
+def test_block_level_dt_python_float_follows_default():
+    """A bare python dt_max keeps the historical default-dtype behavior
+    (x64 is on in this suite), so existing callers see no change."""
+    levels = jnp.asarray([0, 2], jnp.int32)
+    out = hermite.block_level_dt(levels, 0.0625)
+    assert out.dtype == jnp.result_type(float)
+
+
+# --------------------------------------------------------------------------
+# kernel internals: the two-sum fold is gated to the LAST j-step only
+# --------------------------------------------------------------------------
+def test_packed_kernel_compute_dtype_none_matches_untagged():
+    """The packed kernels with compute_dtype=None lower the single-output
+    wiring — bitwise the historical kernel."""
+    pos, vel, mass = _cloud(64, seed=1)
+    npad = 64
+    tgt = ops.pack_targets(pos, vel, npad)
+    src = ops.pack_sources(pos, vel, mass, npad)
+    base = nbody_force.acc_jerk_pot_packed(tgt, src, eps=1e-7, block_i=32,
+                                           block_j=32, interpret=True)
+    tagged = nbody_force.acc_jerk_pot_packed(tgt, src, eps=1e-7, block_i=32,
+                                             block_j=32, interpret=True,
+                                             compute_dtype=None)
+    assert jnp.array_equal(base, tagged)

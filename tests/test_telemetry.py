@@ -28,6 +28,20 @@ def test_modeled_energy_math():
     assert m["edp_Js"] == pytest.approx(m["energy_J"] * 10.0)
 
 
+def test_modeled_energy_rejects_out_of_range_util():
+    """util is an occupancy *fraction*: util > 1 (a raw roofline ratio) or a
+    negative value would silently model above-nameplate chip power in every
+    EDP row downstream — the model must refuse, not extrapolate."""
+    for bad in (1.2, -0.1, 2.0, float("nan")):
+        with pytest.raises(ValueError):
+            energy.modeled_energy(10.0, 2, util=bad)
+    # the boundaries are legal occupancies
+    assert energy.modeled_energy(1.0, 1, util=0.0)["peak_W"] == \
+        pytest.approx(energy.P_HOST + energy.P_CHIP * energy.IDLE_FRAC)
+    assert energy.modeled_energy(1.0, 1, util=1.0)["peak_W"] == \
+        pytest.approx(energy.P_HOST + energy.P_CHIP)
+
+
 def test_energy_model_not_duplicated():
     """telemetry and benchmarks.common must re-export the obs.energy model,
     not carry their own copies (the single-source-of-truth contract)."""
