@@ -1,6 +1,6 @@
 """CI bench-smoke: the per-PR perf trajectory, consolidated to BENCH_ci.json.
 
-Six fast probes, one JSON artifact:
+Seven fast probes, one JSON artifact:
 
 1. ``ensemble_throughput`` (smoke mode) — batched vs sequential invocations;
 2. ``mixed_ensemble`` (smoke mode) — padded heterogeneous batch vs
@@ -36,7 +36,14 @@ Six fast probes, one JSON artifact:
    unpack-fp32/compute-reduced/pack-fp32 fidelity pattern).  One row per
    dtype records the median wall per event and the worst-seed |dE/E|; the
    regress gate keys these rows by dtype, so fp32 wall only ever compares
-   against fp32 wall and a mixed |dE/E| blow-up is its own regression.
+   against fp32 wall and a mixed |dE/E| blow-up is its own regression;
+7. a **server smoke** (``serve_throughput``, smoke mode) — a deterministic
+   Poisson arrival trace (B=4 slot pods, 2 forced-host devices) through the
+   continuous-batching ``repro.serve.sim_engine.SimServer`` vs the naive
+   one-process-per-request baseline.  The server subprocess asserts zero
+   ``engine.cache_miss`` after warmup (admission/retire/backfill must reuse
+   the warm engines); bars: >= 2x sustained requests/s, and the regress
+   gate tracks the server row's ``s_per_request`` / ``p99_turnaround_s``.
 
 The consolidated record is *appended* to the ``BENCH_ci.json`` trajectory
 at the repo root, stamped with its provenance (git SHA, trajectory
@@ -375,7 +382,8 @@ def run(quick: bool = False, smoke: bool = True):
     regression fails the job with the full summary in the log.
     """
     del smoke  # this module IS the smoke mode
-    from benchmarks import ensemble_throughput, mixed_ensemble
+    from benchmarks import (ensemble_throughput, mixed_ensemble,
+                            serve_throughput)
 
     t0 = time.perf_counter()
     doc = {
@@ -387,6 +395,7 @@ def run(quick: bool = False, smoke: bool = True):
         "block_compaction": compaction_sweep(quick=quick),
         "strategy_compaction": strategy_compaction_sweep(quick=quick),
         "precision_sweep": precision_sweep(quick=quick),
+        "serve_throughput": serve_throughput.run(smoke=True),
     }
     doc["wall_s_total"] = round(time.perf_counter() - t0, 1)
     doc["provenance"] = regress.provenance(STRATEGY_DEVICES, repo=common.REPO)

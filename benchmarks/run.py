@@ -7,6 +7,7 @@
   fig6_energy       : Fig. 6 (energy-to-solution / peak power, EDP minimum)
   ensemble_throughput : batched B-run ensemble vs B sequential invocations
   mixed_ensemble    : padded mixed-scenario batch vs sequential + dispersion
+  serve_throughput  : continuous-batching SimServer vs one-process-per-run
   bench_ci          : CI smoke trajectory (steppers + ensembles) -> BENCH_ci
   lm_step           : LM-side reduced-config step microbench
   roofline_table    : dry-run roofline summary (EXPERIMENTS.md §Roofline)
@@ -30,7 +31,7 @@ def suites() -> dict:
     from benchmarks import (bench_ci, ensemble_throughput, fig4_validation,
                             fig5_scaling, fig6_energy, lm_step,
                             mixed_ensemble, roofline_table,
-                            table1_strategies)
+                            serve_throughput, table1_strategies)
 
     return {
         "fig4_validation": fig4_validation.run,
@@ -40,6 +41,7 @@ def suites() -> dict:
         "table1_scenarios": table1_strategies.run_scenarios,
         "ensemble_throughput": ensemble_throughput.run,
         "mixed_ensemble": mixed_ensemble.run,
+        "serve_throughput": serve_throughput.run,
         "bench_ci": bench_ci.run,
         "lm_step": lm_step.run,
         "roofline_table": roofline_table.run,

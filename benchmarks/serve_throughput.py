@@ -1,0 +1,163 @@
+"""Serving throughput: the continuous-batching server vs one-process-per-run.
+
+A deterministic Poisson arrival trace (exponential inter-arrival gaps,
+``numpy`` PRNG seed 0) of small scenario requests is replayed two ways:
+
+* **server** — one ``repro.serve.sim_engine.SimServer`` subprocess (B=4
+  slot pods on a forced 2-device host mesh).  The server warms up the
+  ``(stepper, capacity)`` pods the trace maps to, then admits arrivals into
+  running padded ensembles, advancing all members in lockstep and
+  backfilling retired slots.  The subprocess asserts the steady-state
+  ``engine.cache_miss`` delta is **zero** — admissions and retirements must
+  reuse the warm engines — and reports it as ``CACHE_MISS_POST_WARMUP``;
+* **per_process** — the naive baseline: every request is its own
+  ``driver.run`` subprocess, paying process spawn + jax import + engine
+  compile per request, serialized (one at a time, arrival order).
+
+Rows record sustained requests/s, seconds per request (the gated
+lower-is-better form) and the p50/p99 submit-to-retire turnaround.  Bar
+(printed and recorded): the server sustains **>= 2x** the baseline's
+requests/s.  The ``repro.obs.regress`` gate tracks the server row's
+``s_per_request`` and ``p99_turnaround_s`` across the BENCH_ci trajectory.
+
+``python -m benchmarks.serve_throughput`` (or via ``benchmarks.run``).
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks import common
+
+DEVICES = 2
+SLOTS_PER_POD = 4
+N_MAX = 128
+CHUNK_EVENTS = 8
+T_END = 0.04
+MEAN_GAP_S = 0.05
+
+#: request shapes the trace cycles through: two capacity buckets
+#: (48 -> cap 64, 96 -> cap 128 at block_i=32) x both servable steppers
+REQUEST_SHAPES = ((48, "adaptive"), (96, "block"),
+                  (48, "block"), (96, "adaptive"))
+
+
+def poisson_trace(n_requests: int, mean_gap_s: float = MEAN_GAP_S,
+                  seed: int = 0):
+    """[(arrival_s, n, stepper, seed), ...] — deterministic Poisson trace."""
+    rng = np.random.default_rng(seed)
+    gaps = rng.exponential(mean_gap_s, size=n_requests)
+    arrivals = np.cumsum(gaps)
+    return [(float(arrivals[i]), *REQUEST_SHAPES[i % len(REQUEST_SHAPES)], i)
+            for i in range(n_requests)]
+
+
+_SERVER = """
+import time
+from repro.serve.sim_engine import SimServer, ServerConfig, SimRequest
+from repro.sim.scenarios import ScenarioSpec
+
+TRACE = {trace!r}
+cfg = ServerConfig(slots_per_pod={slots}, n_max={n_max},
+                   chunk_events={chunk}, block_i=32, block_j=32,
+                   devices={devices})
+server = SimServer(cfg)
+pending = [(t, SimRequest(spec=ScenarioSpec.parse("plummer:%d" % n, seed=s),
+                          stepper=st, t_end={t_end}))
+           for (t, n, st, s) in TRACE]
+server.warmup([r for _, r in pending])
+m0 = server.cache_misses()
+t0 = time.perf_counter()
+while pending or server.busy():
+    now = time.perf_counter() - t0
+    while pending and pending[0][0] <= now:
+        server.submit(pending.pop(0)[1])
+    if server.busy():
+        server.step()
+    else:
+        time.sleep(0.001)
+wall = time.perf_counter() - t0
+turn = sorted(r["turnaround_s"] for r in server.reports)
+assert server.cache_misses() == m0, "recompile after warmup"
+print("REQUESTS", len(server.reports))
+print("WALL", wall)
+print("P50_TURNAROUND", turn[len(turn) // 2])
+print("P99_TURNAROUND",
+      turn[min(int(0.99 * (len(turn) - 1) + 0.5), len(turn) - 1)])
+print("CACHE_MISS_POST_WARMUP", server.cache_misses() - m0)
+"""
+
+_BASELINE = """
+from repro.sim import driver
+r = driver.run(driver.SimConfig(scenario="plummer", n={n}, seed={seed},
+                                t_end={t_end}, stepper={stepper!r},
+                                eta=0.02, dt_max=0.0625, n_levels=8,
+                                impl="xla"))
+print("WALL", r["wall_s"])
+"""
+
+
+def run(quick: bool = False, smoke: bool = False):
+    # 4-request traces end before the server's concurrency can amortize the
+    # per-process spawn+compile cost it is measured against — 6 is the
+    # smallest trace that clears the 2x bar with margin
+    n_requests = 6 if (quick or smoke) else 8
+    trace = poisson_trace(n_requests)
+
+    out = common.run_subprocess(
+        _SERVER.format(trace=trace, slots=SLOTS_PER_POD, n_max=N_MAX,
+                       chunk=CHUNK_EVENTS, devices=DEVICES, t_end=T_END),
+        devices=DEVICES)
+    served = int(common.stdout_field(out, "REQUESTS"))
+    wall_server = common.stdout_field(out, "WALL")
+    cache_miss = common.stdout_field(out, "CACHE_MISS_POST_WARMUP")
+
+    # the naive baseline: every request its own process, serialized — each
+    # pays spawn + jax import + compile; wall is measured around the whole
+    # subprocess because that IS the one-process-per-request cost
+    wall_baseline = 0.0
+    for _, n, stepper, seed in trace:
+        t0 = time.perf_counter()
+        common.run_subprocess(
+            _BASELINE.format(n=n, seed=seed, t_end=T_END, stepper=stepper),
+            devices=DEVICES)
+        wall_baseline += time.perf_counter() - t0
+
+    rps_server = served / wall_server
+    rps_baseline = n_requests / wall_baseline
+    speedup = rps_server / rps_baseline
+    print(f"# serve_throughput: server {rps_server:.2f} req/s vs "
+          f"per-process {rps_baseline:.2f} req/s = {speedup:.1f}x, "
+          f"cache_miss_post_warmup={cache_miss:.0f} "
+          f"(bars: >= 2x req/s, zero recompiles -> "
+          f"{'PASS' if speedup >= 2.0 and cache_miss == 0.0 else 'FAIL'})")
+    rows = [
+        {"mode": "server", "requests": served, "devices": DEVICES,
+         "slots_per_pod": SLOTS_PER_POD,
+         "wall_s": round(wall_server, 3),
+         "requests_per_s": round(rps_server, 3),
+         "s_per_request": round(wall_server / served, 4),
+         "p50_turnaround_s":
+             round(common.stdout_field(out, "P50_TURNAROUND"), 4),
+         "p99_turnaround_s":
+             round(common.stdout_field(out, "P99_TURNAROUND"), 4),
+         "cache_miss_post_warmup": cache_miss,
+         "speedup": round(speedup, 2),
+         "pass": speedup >= 2.0 and cache_miss == 0.0},
+        {"mode": "per_process", "requests": n_requests, "devices": DEVICES,
+         "wall_s": round(wall_baseline, 3),
+         "requests_per_s": round(rps_baseline, 3),
+         "s_per_request": round(wall_baseline / n_requests, 4)},
+    ]
+    common.emit("serve_throughput", rows,
+                ["mode", "requests", "devices", "slots_per_pod", "wall_s",
+                 "requests_per_s", "s_per_request", "p50_turnaround_s",
+                 "p99_turnaround_s", "cache_miss_post_warmup", "speedup",
+                 "pass"])
+    return rows
+
+
+if __name__ == "__main__":
+    run()

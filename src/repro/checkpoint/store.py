@@ -96,9 +96,19 @@ def restore(ckpt_dir: str, step: int, like: Any, *,
         if tuple(arr.shape) != tuple(ref.shape):
             raise ValueError(
                 f"leaf {key!r}: checkpoint shape {arr.shape} != {ref.shape}")
+        ref_dtype = np.dtype(getattr(ref, "dtype", np.asarray(ref).dtype))
+        if arr.dtype != ref_dtype:
+            # a silent .astype here once swallowed precision (e.g. float64
+            # block-carry tile counters restored against a float32 template
+            # lose exact integer adds past 2**24) — mismatches are a caller
+            # bug, so they fail loudly on both placement paths
+            raise ValueError(
+                f"leaf {key!r}: checkpoint dtype {arr.dtype} != template "
+                f"dtype {ref_dtype} (restore never casts; fix the template "
+                "or re-save)")
         sh = flat_sh.get(key)
         loaded[key] = (jax.device_put(arr, sh) if sh is not None
-                       else jax.numpy.asarray(arr).astype(ref.dtype))
+                       else jax.numpy.asarray(arr))
 
     leaves_paths, treedef = jax.tree_util.tree_flatten_with_path(like)
     keys = ["/".join(

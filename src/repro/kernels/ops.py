@@ -299,6 +299,23 @@ class CapacityPlan:
         idx = min(idx, len(self.caps) - 1)
         return dataclasses.replace(self, caps=self.caps[: idx + 1])
 
+    def admission_cap(self, n_active: int) -> int:
+        """Host-side capacity ceiling for admitting a run with ``n_active``
+        bodies: the top bucket of :meth:`restrict`, i.e. the smallest pod
+        extent whose launch schedule the member can never exceed.
+
+        The serving layer's bucket-packing admission keys pods by this value
+        — every member of a pod shares one ceiling, so its bucket groups
+        (and with them the lowered engine) stay invariant under admit,
+        retire and backfill.
+        """
+        n_active = int(n_active)
+        if not 0 < n_active <= self.caps[-1]:
+            raise ValueError(
+                f"n_active={n_active} outside this plan's capacity range "
+                f"(0, {self.caps[-1]}]")
+        return self.restrict(n_active).caps[-1]
+
 
 def compact_targets(perm, cap: int, *rows):
     """Gather the first ``cap`` permuted rows of each per-target array.

@@ -162,7 +162,7 @@ def main(argv=None):
 
     jax.config.update("jax_enable_x64", True)
 
-    from repro.sim import driver, scenarios, telemetry
+    from repro.sim import api, scenarios, telemetry
 
     if args.list_scenarios:
         for name in scenarios.available():
@@ -186,17 +186,22 @@ def main(argv=None):
 
     # one token => homogeneous path (name:N is shorthand for --n N, so the
     # report keeps the real scenario label); several tokens => mixed padded
-    # ensemble, bare names inheriting --n
-    tokens = [scenarios.parse_mix_token(t) for t in args.scenario]
-    mixed = len(tokens) > 1
+    # ensemble, bare names inheriting --n.  ScenarioSpec.parse validates at
+    # the flag boundary (registry name, minimum N) with errors naming the
+    # bad field — the same typed requests the serving layer admits.
+    try:
+        specs = [scenarios.ScenarioSpec.parse(t, seed=args.seed)
+                 for t in args.scenario]
+    except scenarios.ScenarioError as e:
+        raise SystemExit(f"--scenario: {e}") from None
+    mixed = len(specs) > 1
     if mixed:
-        mix = tuple((name, n if n is not None else args.n)
-                    for name, n in tokens)
+        mix = tuple((s.name, s.with_n(args.n).n) for s in specs)
         scenario_name, n_arg = "mixed", max(n for _, n in mix)
     else:
         mix = None
-        scenario_name = tokens[0][0]
-        n_arg = tokens[0][1] if tokens[0][1] is not None else args.n
+        scenario_name = specs[0].name
+        n_arg = specs[0].with_n(args.n).n
     pad = None
     if args.pad is not None:
         if not mixed:
@@ -209,7 +214,7 @@ def main(argv=None):
                     f"--pad expects 'auto' or an integer, got {args.pad!r}") \
                     from None
 
-    cfg = driver.SimConfig(
+    cfg = api.SimConfig(
         scenario=scenario_name, n=n_arg, seed=args.seed,
         ensemble=args.ensemble, t_end=args.t_end, dt=args.dt,
         stepper=args.stepper, dt_max=args.dt_max, n_levels=n_levels,
@@ -228,7 +233,7 @@ def main(argv=None):
              else len(mix) * args.ensemble,
              "strategy": args.strategy}),
     )
-    report = driver.run(cfg)
+    report = api.run(cfg)
 
     desc = " ".join(f"{nm}:{n}" for nm, n in mix) if mixed \
         else f"{scenario_name} n={n_arg}"

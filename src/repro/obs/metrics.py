@@ -2,7 +2,7 @@
 
 The engine layers (``sim/ensemble.py``, ``core/strategies.py``,
 ``kernels/ops.py``) emit into the *current* registry via :func:`registry`;
-``sim/driver.py`` scopes a fresh :class:`MetricsRegistry` around each run
+``sim/api.py`` scopes a fresh :class:`MetricsRegistry` around each run
 (:func:`use`) and snapshots it into the telemetry report under a versioned
 ``metrics`` key (:meth:`MetricsRegistry.snapshot`,
 ``telemetry.finalize(metrics=...)``).
@@ -23,7 +23,13 @@ Metric taxonomy (names are ``layer.what``; units ride in the snapshot):
   fraction (force evals / events / n_active^2);
 * ``sim.pad_waste``          — padded-slot fraction of the batch;
 * ``sim.shard_imbalance``    — max/mean per-shard launched tiles;
-* ``sim.bucket_hits``        — capacity-bucket switch hit distribution.
+* ``sim.bucket_hits``        — capacity-bucket switch hit distribution;
+* ``serve.queue_depth``      — requests waiting for a slot (gauge);
+* ``serve.slot_occupancy``   — live-slot fraction across pods (gauge);
+* ``serve.admission_latency_s`` — submit -> admit wait (histogram);
+* ``serve.turnaround_s``     — submit -> retire latency (histogram);
+* ``serve.requests_admitted`` / ``serve.requests_retired`` — lifecycle
+  counters of the simulation server (``repro.serve.sim_engine``).
 
 Everything is plain Python on the host side — nothing here ever runs under
 ``jit``; traced code is annotated with ``jax.named_scope`` instead (see
@@ -108,6 +114,7 @@ class Histogram:
             "mean": self.sum / self.count if self.count else None,
             "p50": self.percentile(0.50),
             "p95": self.percentile(0.95),
+            "p99": self.percentile(0.99),
             "unit": self.unit,
         }
 

@@ -6,7 +6,8 @@ the file from an anecdote into a trajectory.  This module is the gate over
 it: the newest record is compared against the most recent *comparable*
 earlier record (or an explicit ``--baseline`` file), and CI fails when any
 tracked lower-is-better metric — wall per event, launched tiles, modeled
-EDP — regresses more than :data:`DEFAULT_THRESHOLD` (20%).
+EDP, serving seconds-per-request / p99 turnaround — regresses more than
+:data:`DEFAULT_THRESHOLD` (20%).
 
 Two refusal rules keep the gate honest:
 
@@ -174,6 +175,14 @@ def tracked_metrics(record: Dict[str, Any]) -> Dict[str, float]:
         base = f"precision_sweep/{row.get('dtype')}"
         put(f"{base}/wall_per_event_s", row.get("wall_per_event_s"))
         put(f"{base}/de_rel", row.get("de_rel"))
+    for row in record.get("serve_throughput") or ():
+        # only the server row gates: the one-process-per-request baseline
+        # is informational (its wall is dominated by interpreter startup)
+        if row.get("mode") != "server":
+            continue
+        base = "serve_throughput/server"
+        put(f"{base}/s_per_request", row.get("s_per_request"))
+        put(f"{base}/p99_turnaround_s", row.get("p99_turnaround_s"))
     return out
 
 

@@ -1,1 +1,10 @@
 from repro.serve.engine import Engine, ServeConfig, prefill_step, decode_step  # noqa: F401
+from repro.serve.sim_engine import (  # noqa: F401
+    SERVABLE_STEPPERS,
+    Pod,
+    ServerConfig,
+    SimRequest,
+    SimServer,
+    fifo_event_tiles,
+    packed_event_tiles,
+)

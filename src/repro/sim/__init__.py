@@ -18,4 +18,5 @@ Three layers on top of the core Hermite/strategy machinery:
   wired into the ``repro.launch.sim_run`` CLI.
 """
 
-from repro.sim import driver, ensemble, scenarios, telemetry  # noqa: F401
+from repro.sim import api, driver, ensemble, scenarios, \
+    telemetry  # noqa: F401

@@ -1,679 +1,29 @@
-"""Unified run loop over scenarios: single runs, strategies, and ensembles.
+"""Compatibility shim: the unified run loop moved to :mod:`repro.sim.api`.
 
-One entry point, :func:`run`, drives either
-
-* a **single simulation** under any force-distribution strategy (the seed's
-  ``single`` evaluator or one of ``repro.core.strategies.STRATEGIES``), with
-  fixed or shared-adaptive (Aarseth) timestep and per-step telemetry; or
-* a **batched ensemble** of B independent runs (seeds ``seed .. seed+B-1``)
-  advanced by ``repro.sim.ensemble`` under one of three steppers — ``fixed``
-  (shared dt), ``adaptive`` (per-run shared Aarseth lockstep) or ``block``
-  (hierarchical per-particle block timesteps inside each member; a single
-  run with ``stepper="block"`` routes here as a B=1 batch) — with the batch
-  axis sharded over the requested devices and per-chunk telemetry; or
-* a **mixed padded ensemble** (``mix=(("king", 256), ("merger", 512), ...)``)
-  of heterogeneous scenarios packed to one rectangular batch with zero-mass
-  padding (``repro.sim.scenarios.build_padded``).  Per-run diagnostics
-  (energy drift, virial ratio) and telemetry interaction counts honour the
-  per-run ``n_active`` mask, and force evaluation routes through the
-  ``kernel`` switch: ``"ref"`` (all-pairs XLA op) or ``"pallas"`` (the tiled
-  kernel — compiled on TPU, interpreted on CPU).
-
-Every run produces one JSON-ready report (wall time, steps/s,
-interactions/s, modeled energy/EDP, energy-conservation track).
+``driver.run`` / ``driver.SimConfig`` remain the stable entry names — tests,
+benchmarks and committed reports reference them — but the implementation is
+now a registry of composable build/step/collect runners (see
+:class:`repro.sim.api.Runner`): ``run()`` is the monolithic recomposition,
+and the serving layer (``repro.serve.sim_engine``) consumes the split calls
+directly.  New code should import from ``repro.sim.api``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import time
-from typing import Any, Dict, Mapping, Optional, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import hermite, nbody
-from repro.core.evaluate import make_evaluator
-from repro.core.strategies import STRATEGIES, make_strategy_evaluator
-from repro.kernels import nbody_force, ops
-from repro.obs import metrics as obs_metrics
-from repro.obs import trace as obs_trace
-from repro.sim import ensemble as ens
-from repro.sim import scenarios, telemetry
-
-MAX_STEPS = 200_000
-
-
-@dataclasses.dataclass(frozen=True)
-class SimConfig:
-    scenario: str = "plummer"
-    n: int = 256
-    seed: int = 0
-    ensemble: int = 1
-    t_end: float = 1.0
-    dt: Optional[float] = None       # fixed step (stepper="fixed")
-    stepper: Optional[str] = None    # "fixed" | "adaptive" | "block"
-    #   (None infers: "fixed" when dt is given, else "adaptive")
-    dt_max: float = 0.0625           # coarsest step (adaptive + block)
-    n_levels: Optional[int] = 8      # block hierarchy depth (None => auto:
-    #   per-member from the initial Aarseth dt distribution, clamped [1, 8])
-    compaction: str = "none"         # "none" | "gather" (block stepper only)
-    bucket_mode: str = "member"      # "member" (per-member capacity bucket
-    #   groups) | "shared" (batch-shared bucket baseline); gather mode only
-    block_i: Optional[int] = None    # kernel tile shape override (block
-    block_j: Optional[int] = None    #   stepper; None => kernel defaults)
-    eta: float = 0.02
-    order: int = 6
-    strategy: str = "single"
-    devices: int = 1
-    impl: Optional[str] = None
-    kernel: Optional[str] = None     # "ref" | "pallas" (excludes impl)
-    dtype: str = "fp32"              # "fp64" | "fp32" | "mixed" precision axis
-    mix: Optional[Tuple[Tuple[str, int], ...]] = None  # heterogeneous batch
-    pad: Optional[int] = None        # padded N_max (None => auto = max N)
-    eps: float = 1e-7
-    diag_every: int = 16             # steps between diagnostics snapshots
-    scenario_params: Mapping[str, Any] = \
-        dataclasses.field(default_factory=dict)
-    validate_ic: bool = True
-    out: Optional[str] = None        # JSON report path (None => don't write)
-    trace: Optional[str] = None      # Chrome-trace/Perfetto JSON path
-    #   (None => zero-overhead NullTracer; see repro.obs.trace)
-    metrics_interval: int = 0        # chunks between in-run metrics-registry
-    #   snapshots attached to the diagnostics series (0 => final only)
-
-    def resolved_stepper(self) -> str:
-        """Resolve (stepper, dt) to one of ``ensemble.STEPPERS``.
-
-        An explicit ``stepper`` must be consistent with ``dt``: fixed mode
-        needs a step, the adaptive/block modes choose their own (``dt_max``
-        caps them) — a silently ignored ``dt`` would misreport the run.
-        """
-        stepper = self.stepper or ("fixed" if self.dt is not None
-                                   else "adaptive")
-        if stepper not in ens.STEPPERS:
-            raise ValueError(
-                f"unknown stepper {stepper!r}; one of {ens.STEPPERS}")
-        if stepper == "fixed" and self.dt is None:
-            raise ValueError("stepper='fixed' needs an explicit dt")
-        if stepper != "fixed" and self.dt is not None:
-            raise ValueError(
-                f"stepper={stepper!r} chooses its own timestep; dt={self.dt} "
-                "would be ignored (use dt_max to cap it)")
-        if self.compaction != "none" and stepper != "block":
-            raise ValueError(
-                f"compaction={self.compaction!r} only applies to the block "
-                "stepper (the lockstep modes evaluate every target)")
-        if self.bucket_mode not in ens.BUCKET_MODES:
-            raise ValueError(
-                f"bucket_mode must be one of {ens.BUCKET_MODES}; "
-                f"got {self.bucket_mode!r}")
-        if self.bucket_mode != "member" and self.compaction != "gather":
-            raise ValueError(
-                f"bucket_mode={self.bucket_mode!r} selects the capacity-"
-                "bucket dispatch of compaction='gather'; without gather "
-                "there are no buckets to share")
-        if (self.block_i or self.block_j) and stepper != "block":
-            raise ValueError(
-                "block_i/block_j tile overrides only reach the block "
-                f"stepper's kernels; stepper={stepper!r} would silently "
-                "run at the kernel defaults")
-        if self.n_levels is None and stepper != "block":
-            raise ValueError(
-                "n_levels=None (--levels auto) sizes the block hierarchy; "
-                f"stepper={stepper!r} has no levels to size")
-        return stepper
-
-    def meta(self) -> Dict[str, Any]:
-        meta = {
-            "scenario": self.scenario, "n": self.n, "seed": self.seed,
-            "ensemble": self.ensemble, "strategy": self.strategy,
-            "t_end": self.t_end, "dt": self.dt, "order": self.order,
-            "stepper": self.resolved_stepper(),
-            "dtype": self.dtype,
-            "params": dict(self.scenario_params),
-        }
-        if meta["stepper"] == "block":
-            meta["dt_max"] = self.dt_max
-            meta["n_levels"] = self.n_levels    # None until auto-resolved
-            meta["compaction"] = self.compaction
-            if self.compaction == "gather":
-                meta["bucket_mode"] = self.bucket_mode
-        if meta["stepper"] == "adaptive":
-            meta["dt_max"] = self.dt_max
-        if self.mix is not None:
-            meta["scenario"] = "mixed"
-            meta["mix"] = [list(m) for m in self.mix]
-            meta["pad"] = self.pad
-            # the dataclass default n is meaningless for a mix; report the
-            # requested N_max so meta agrees with the batch's n_bodies
-            meta["n"] = self.pad if self.pad is not None \
-                else max(n for _, n in self.mix)
-        if self.kernel is not None:
-            meta["kernel"] = self.kernel
-        return meta
-
-
-def _device_list(cfg: SimConfig):
-    devs = jax.devices()
-    if cfg.devices > len(devs):
-        raise ValueError(
-            f"requested {cfg.devices} devices, only {len(devs)} visible "
-            "(set XLA_FLAGS=--xla_force_host_platform_device_count before "
-            "importing jax — the sim_run CLI does this)")
-    return devs[: cfg.devices]
-
-
-def _build_states(cfg: SimConfig):
-    return [
-        scenarios.make(cfg.scenario, cfg.n, seed=cfg.seed + i,
-                       validate=cfg.validate_ic, **dict(cfg.scenario_params))
-        for i in range(cfg.ensemble)
-    ]
-
-
-def run(cfg: SimConfig) -> Dict[str, Any]:
-    """Run one configuration end-to-end and return its telemetry report.
-
-    Each run gets its own :class:`repro.obs.metrics.MetricsRegistry` (scoped
-    as the module-current registry so the engine layers' emissions land in
-    it) whose snapshot rides in the report under ``metrics``; with
-    ``cfg.trace`` a live :class:`repro.obs.trace.SpanTracer` is installed
-    and the Chrome-trace JSON exported on completion (``trace_path`` in the
-    report).
-    """
-    if cfg.ensemble < 1:
-        raise ValueError(f"ensemble={cfg.ensemble} must be >= 1")
-    if cfg.metrics_interval < 0:
-        raise ValueError(
-            f"metrics_interval={cfg.metrics_interval} must be >= 0")
-    if cfg.dtype not in ops.DTYPES:
-        raise ValueError(
-            f"dtype must be one of {ops.DTYPES}; got {cfg.dtype!r}")
-    if cfg.dtype == "fp64" and (cfg.kernel is not None
-                                or cfg.impl not in (None, "fp64")):
-        raise ValueError(
-            "dtype='fp64' runs the pure-jnp oracle (no kernel); an explicit "
-            f"kernel={cfg.kernel!r}/impl={cfg.impl!r} would be silently "
-            "ignored")
-    if cfg.impl == "fp64" and cfg.dtype == "mixed":
-        raise ValueError(
-            "impl='fp64' (golden reference) conflicts with dtype='mixed' "
-            "(reduced-precision kernel mode)")
-    stepper = cfg.resolved_stepper()
-    tracer = obs_trace.SpanTracer() if cfg.trace else obs_trace.NullTracer()
-    prev_tracer = obs_trace.set_tracer(tracer)
-    try:
-        with obs_metrics.use():
-            obs_metrics.registry().gauge(
-                "sim.dtype", unit="enum",
-                help="precision axis of the run's force kernels").set(
-                cfg.dtype)
-            if cfg.mix is not None:
-                report = _run_mixed(cfg)
-            elif stepper == "block" and cfg.ensemble == 1 and \
-                    cfg.strategy != "single":
-                # a single block run under a distribution strategy shards the
-                # *domain* (shard-local compaction, per-shard tile telemetry)
-                # — batched block runs shard the batch axis instead, where
-                # the strategy label only tags the report
-                report = _run_block_strategy(cfg)
-            elif cfg.ensemble > 1 or stepper == "block":
-                # the block engine lives in the (vmapped) ensemble path; a
-                # single block run is just a B=1 batch
-                report = _run_ensemble(cfg)
-            else:
-                report = _run_single(cfg)
-    finally:
-        obs_trace.set_tracer(prev_tracer)
-    if cfg.trace:
-        report["trace_path"] = tracer.export(cfg.trace)
-    if cfg.out:
-        telemetry.write_report(report, cfg.out)
-        report["report_path"] = cfg.out
-    return report
-
-
-def _chunk_spans(tracer, t0_us: float, dur_us: float, *, chunk: int,
-                 events: int, tiles: Optional[float] = None,
-                 max_children: int = 256) -> None:
-    """One measured ``macro-step`` span per engine chunk, synthetically
-    subdivided into ``event`` -> ``kernel-launch`` children.
-
-    The per-event work runs inside ``lax.scan`` under ``jit`` — untimeable
-    from the host — so the chunk aggregate (wall, event count, launched
-    tiles) is *measured* and only the even subdivision is synthetic, flagged
-    ``{"synthetic": true}`` on every reconstructed child.
-    """
-    if not tracer.enabled:
-        return
-    args = {"chunk": chunk, "events": int(events)}
-    if tiles is not None:
-        args["tiles"] = float(tiles)
-    tracer.add_span("macro-step", t0_us, dur_us, args=args)
-    n = min(int(events), max_children)
-    if n <= 0:
-        return
-    child = dur_us / n
-    per = {"synthetic": True, "events": int(events) // n}
-    if tiles is not None:
-        per["tiles"] = float(tiles) / n
-    for i in range(n):
-        s = t0_us + i * child
-        tracer.add_span("event", s, child * 0.999, args=per)
-        if tiles is not None:
-            tracer.add_span("kernel-launch", s + 0.1 * child, 0.8 * child,
-                            args=per)
-
-
-# --------------------------------------------------------------------------
-# single run (per-step telemetry, any strategy, adaptive or fixed dt)
-# --------------------------------------------------------------------------
-def _run_single(cfg: SimConfig) -> Dict[str, Any]:
-    state = _build_states(cfg)[0]
-    # None lets make_evaluator pick the backend default; an explicit
-    # impl+kernel pair is a conflict (e.g. fp64 vs a kernel switch)
-    impl = ens.resolve_eval_impl(cfg.impl, cfg.kernel, default=None)
-    if cfg.strategy == "single":
-        if impl == "fp64" or cfg.dtype == "fp64":
-            # golden reference: a precision, not a kernel
-            evaluator = make_evaluator(precision="fp64", order=cfg.order,
-                                       eps=cfg.eps)
-        else:
-            evaluator = make_evaluator(order=cfg.order, eps=cfg.eps,
-                                       impl=impl, dtype=cfg.dtype)
-    elif cfg.strategy in STRATEGIES:
-        if impl == "fp64" or cfg.dtype == "fp64":
-            raise ValueError(
-                "fp64 (golden reference) only runs under strategy='single'")
-        evaluator = make_strategy_evaluator(
-            cfg.strategy, devices=_device_list(cfg), order=cfg.order,
-            eps=cfg.eps, impl=impl or "xla", dtype=cfg.dtype)
-    else:
-        raise ValueError(f"unknown strategy {cfg.strategy!r}")
-
-    recorder = telemetry.TelemetryRecorder(cfg.meta())
-    state = hermite.initialize(state, evaluator)
-    jax.block_until_ready(state.pos)
-    e0 = float(nbody.total_energy(state))
-    recorder.record_snapshot(0, 0.0, energy=e0, de_rel=0.0)
-
-    steps, h_prev = 0, None
-    while float(state.time) < cfg.t_end and steps < MAX_STEPS:
-        if cfg.dt is not None:
-            h = cfg.dt
-        else:
-            h = float(hermite.aarseth_dt(state, eta=cfg.eta,
-                                         dt_max=cfg.dt_max))
-            if h_prev is not None:  # rate-limit dt changes (noise robustness)
-                h = min(max(h, 0.5 * h_prev), 2.0 * h_prev)
-            h_prev = h
-        h = min(h, cfg.t_end - float(state.time))
-        t0 = time.perf_counter()
-        with obs_trace.get_tracer().span("macro-step", step=steps + 1, dt=h):
-            state = hermite.step(state, jnp.asarray(h, state.dtype),
-                                 evaluator, order=cfg.order)
-            jax.block_until_ready(state.pos)
-        steps += 1
-        obs_metrics.registry().counter(
-            "sim.events", unit="events",
-            help="productive member-events (lockstep: member-steps)").inc()
-        recorder.record_step(steps, float(state.time),
-                             time.perf_counter() - t0)
-        if steps % cfg.diag_every == 0:
-            e = float(nbody.total_energy(state))
-            recorder.record_snapshot(steps, float(state.time), energy=e,
-                                     de_rel=abs((e - e0) / e0))
-
-    e1 = float(nbody.total_energy(state))
-    return recorder.finalize(
-        n_bodies=cfg.n, ensemble=1,
-        n_devices=cfg.devices if cfg.strategy != "single" else 1,
-        per_run_pairs=[float(steps) * cfg.n * cfg.n],
-        metrics=obs_metrics.registry().snapshot(),
-        extra={"e0": e0, "e1": e1, "de_rel": abs((e1 - e0) / e0),
-               "t_final": float(state.time)})
-
-
-# --------------------------------------------------------------------------
-# single block run under a distribution strategy (shard-local compaction)
-# --------------------------------------------------------------------------
-def _run_block_strategy(cfg: SimConfig) -> Dict[str, Any]:
-    """One run, its force evaluation sharded by ``cfg.strategy``: each shard
-    compacts its own local active targets (``compaction="gather"``) and the
-    report carries the per-shard launched tiles as ``grid_tiles_per_shard``.
-    """
-    if cfg.strategy not in STRATEGIES:
-        raise ValueError(f"unknown strategy {cfg.strategy!r}")
-    impl = ens.resolve_eval_impl(cfg.impl, cfg.kernel)
-    if impl == "fp64" or cfg.dtype == "fp64":
-        raise ValueError(
-            "fp64 (golden reference) only runs under strategy='single'")
-    devices = _device_list(cfg)
-    state = _build_states(cfg)[0]
-    # same tile shape for the bootstrap pass as for the event loop, so a
-    # CLI run is bit-for-bit reproducible by ens.evolve_strategy_block
-    evaluator = make_strategy_evaluator(
-        cfg.strategy, devices=devices, order=cfg.order, eps=cfg.eps,
-        impl=impl, dtype=cfg.dtype,
-        block_i=cfg.block_i or nbody_force.DEFAULT_BLOCK_I,
-        block_j=cfg.block_j or nbody_force.DEFAULT_BLOCK_J)
-
-    recorder = telemetry.TelemetryRecorder(cfg.meta())
-    state = hermite.initialize(state, evaluator)
-    jax.block_until_ready(state.pos)
-    e0 = float(nbody.total_energy(state))
-    recorder.record_snapshot(0, 0.0, energy=e0, de_rel=0.0)
-
-    n_levels = cfg.n_levels
-    if n_levels is None:  # --levels auto, from the initial dt distribution
-        dt_i = hermite.aarseth_dt_particles(state, eta=cfg.eta,
-                                            dt_max=cfg.dt_max)
-        n_levels = int(hermite.auto_n_levels(dt_i, dt_max=cfg.dt_max))
-        recorder.meta["n_levels"] = n_levels
-        recorder.meta["n_levels_auto"] = [n_levels]
-
-    tracer = obs_trace.get_tracer()
-    reg = obs_metrics.registry()
-    carry = None
-    done = 0
-    ev_prev = tiles_prev = 0.0
-    while done * cfg.diag_every < MAX_STEPS:
-        t0 = time.perf_counter()
-        t0_us = tracer.now_us()
-        state, carry = ens.strategy_run_block(
-            state, t_end=cfg.t_end, n_events=cfg.diag_every,
-            dt_max=cfg.dt_max, n_levels=n_levels, carry=carry, eta=cfg.eta,
-            order=cfg.order, eps=cfg.eps, impl=impl, strategy=cfg.strategy,
-            compaction=cfg.compaction, block_i=cfg.block_i,
-            block_j=cfg.block_j, devices=cfg.devices, dtype=cfg.dtype)
-        jax.block_until_ready(state.pos)
-        done += 1
-        ev_now = float(carry.n_events)
-        tiles_now = float(np.asarray(carry.n_tiles).sum())
-        _chunk_spans(tracer, t0_us, tracer.now_us() - t0_us, chunk=done,
-                     events=int(ev_now - ev_prev),
-                     tiles=tiles_now - tiles_prev)
-        reg.counter("sim.events", unit="events").inc(ev_now - ev_prev)
-        reg.counter("sim.tiles_launched", unit="tiles").inc(
-            tiles_now - tiles_prev)
-        per_shard_now = np.asarray(carry.n_tiles, np.float64)
-        if per_shard_now.size and per_shard_now.mean() > 0:
-            reg.gauge(
-                "sim.shard_imbalance", unit="ratio",
-                help="max/mean per-shard launched tiles").set(
-                float(per_shard_now.max() / per_shard_now.mean()))
-        ev_prev, tiles_prev = ev_now, tiles_now
-        e = float(nbody.total_energy(state))
-        recorder.record_step(int(carry.n_events), float(state.time),
-                             time.perf_counter() - t0)
-        recorder.record_snapshot(
-            int(carry.n_events), float(state.time), energy=e,
-            de_rel=abs((e - e0) / e0),
-            **({"metrics": reg.snapshot()}
-               if cfg.metrics_interval and done % cfg.metrics_interval == 0
-               else {}))
-        if float(state.time) >= cfg.t_end:
-            break
-
-    e1 = float(nbody.total_energy(state))
-    per_shard = [float(t) for t in np.asarray(carry.n_tiles)]
-    return recorder.finalize(
-        n_bodies=cfg.n, ensemble=1, n_devices=cfg.devices,
-        per_run_steps=[int(carry.n_events)],
-        per_run_pairs=[float(carry.n_pairs)],
-        per_run_tiles=[sum(per_shard)], per_shard_tiles=per_shard,
-        metrics=reg.snapshot(),
-        extra={"e0": e0, "e1": e1, "de_rel": abs((e1 - e0) / e0),
-               "t_final": float(state.time)})
-
-
-# --------------------------------------------------------------------------
-# batched ensembles (lockstep; fixed dt or per-run shared-adaptive dt)
-# --------------------------------------------------------------------------
-def _run_ensemble(cfg: SimConfig) -> Dict[str, Any]:
-    """Homogeneous ensemble: B copies of one scenario, seeds seed..seed+B-1."""
-    batched = ens.stack_states(_build_states(cfg))
-    n_active = [cfg.n] * cfg.ensemble
-    runs_meta = [{"run": i, "scenario": cfg.scenario, "n": cfg.n,
-                  "seed": cfg.seed + i} for i in range(cfg.ensemble)]
-    return _run_batched(cfg, batched, n_active, runs_meta)
-
-
-def _mix_params(cfg: SimConfig) -> Dict[str, Dict[str, Any]]:
-    """Distribute flat CLI params over the mix: each scenario takes the keys
-    its registry spec accepts; a key no scenario accepts raises (same
-    contract as the homogeneous path, where build() rejects it)."""
-    flat = dict(cfg.scenario_params)
-    out: Dict[str, Dict[str, Any]] = {}
-    claimed = set()
-    for name, _ in cfg.mix:
-        spec = scenarios.get_spec(name)
-        kw = {k: v for k, v in flat.items() if k in spec.defaults}
-        claimed.update(kw)
-        if kw:
-            out[name] = kw
-    orphans = set(flat) - claimed
-    if orphans:
-        raise scenarios.ScenarioError(
-            f"parameter(s) {sorted(orphans)} not accepted by any scenario "
-            f"in the mix {[name for name, _ in cfg.mix]}")
-    return out
-
-
-def _run_mixed(cfg: SimConfig) -> Dict[str, Any]:
-    """Heterogeneous padded ensemble: one rectangular (B, N_max, ...) batch
-    of different scenarios/N, zero-mass padding, per-run n_active mask."""
-    specs = scenarios.make_mix(cfg.mix, seed=cfg.seed, repeat=cfg.ensemble,
-                               params=_mix_params(cfg))
-    batched, n_active = scenarios.build_padded(
-        specs, n_max=cfg.pad, validate=cfg.validate_ic)
-    runs_meta = [{"run": i, "scenario": s.name, "n": s.n, "seed": s.seed}
-                 for i, s in enumerate(specs)]
-    return _run_batched(cfg, batched, [int(a) for a in np.asarray(n_active)],
-                        runs_meta)
-
-
-def _run_batched(cfg: SimConfig, batched, n_active, runs_meta
-                 ) -> Dict[str, Any]:
-    """Shared lockstep loop: mask-aware engine calls, per-run diagnostics
-    (energy drift, virial ratio) and n_active-honest telemetry."""
-    if cfg.strategy not in STRATEGIES and cfg.strategy != "single":
-        raise ValueError(f"unknown strategy {cfg.strategy!r}")
-    impl = ens.resolve_eval_impl(cfg.impl, cfg.kernel)
-    devices = _device_list(cfg) if cfg.devices > 1 else None
-    b = ens.batch_size(batched)
-    n_max = batched.pos.shape[1]
-
-    recorder = telemetry.TelemetryRecorder(cfg.meta())
-    tracer = obs_trace.get_tracer()
-    reg = obs_metrics.registry()
-    reg.gauge("sim.pad_waste", unit="fraction",
-              help="zero-mass padded slot fraction of the batch").set(
-        1.0 - float(sum(n_active)) / (b * n_max))
-    na = jnp.asarray(n_active, jnp.int32)
-    kw = dict(n_active=na, order=cfg.order, eps=cfg.eps, impl=impl,
-              devices=devices, dtype=cfg.dtype)
-    batched = ens.ensemble_initialize(batched, **kw)
-    jax.block_until_ready(batched.pos)
-    e0 = np.asarray(ens.batched_total_energy(batched), np.float64)
-    recorder.record_snapshot(0, 0.0, energy=e0.tolist(), de_rel=0.0)
-
-    chunks_done = 0
-
-    def snapshot(done, t_sim, wall):
-        # one wall sample per chunk: lockstep ensembles sync at chunk ends
-        nonlocal chunks_done
-        chunks_done += 1
-        recorder.record_step(done, t_sim, wall)
-        e = np.asarray(ens.batched_total_energy(batched), np.float64)
-        recorder.record_snapshot(
-            done, t_sim, energy=e.tolist(),
-            de_rel=float(np.abs((e - e0) / e0).max()),
-            **({"metrics": reg.snapshot()}
-               if cfg.metrics_interval
-               and chunks_done % cfg.metrics_interval == 0 else {}))
-
-    stepper = cfg.resolved_stepper()
-    per_run_steps = per_run_tiles = None
-    if stepper == "fixed":
-        n_steps = max(1, int(round(cfg.t_end / cfg.dt)))
-        done = 0
-        while done < n_steps:
-            chunk = min(cfg.diag_every, n_steps - done)
-            t0 = time.perf_counter()
-            t0_us = tracer.now_us()
-            batched = ens.ensemble_run(batched, n_steps=chunk, dt=cfg.dt,
-                                       **kw)
-            jax.block_until_ready(batched.pos)
-            done += chunk
-            _chunk_spans(tracer, t0_us, tracer.now_us() - t0_us,
-                         chunk=chunks_done + 1, events=chunk * b)
-            reg.counter("sim.events", unit="events").inc(chunk * b)
-            snapshot(done, done * cfg.dt, time.perf_counter() - t0)
-        t_final = n_steps * cfg.dt
-        per_run_pairs = [float(n_steps) * a * a for a in n_active]
-    elif stepper == "adaptive":
-        # per-run shared-adaptive dt: each member steps at its own Aarseth
-        # criterion; finished members freeze until the whole batch is done
-        h_prev = n_taken = None
-        done = 0
-        ev_prev = 0.0
-        while done * cfg.diag_every < MAX_STEPS:
-            t0 = time.perf_counter()
-            t0_us = tracer.now_us()
-            batched, h_prev, n_taken = ens.ensemble_run_adaptive(
-                batched, t_end=cfg.t_end, n_steps=cfg.diag_every,
-                h_prev=h_prev, n_taken=n_taken, eta=cfg.eta,
-                dt_max=cfg.dt_max, **kw)
-            jax.block_until_ready(batched.pos)
-            done += 1
-            ev_now = float(np.asarray(n_taken, np.float64).sum())
-            _chunk_spans(tracer, t0_us, tracer.now_us() - t0_us,
-                         chunk=done, events=int(ev_now - ev_prev))
-            reg.counter("sim.events", unit="events").inc(ev_now - ev_prev)
-            ev_prev = ev_now
-            snapshot(int(np.max(np.asarray(n_taken))),
-                     float(np.min(np.asarray(batched.time))),
-                     time.perf_counter() - t0)
-            if float(np.min(np.asarray(batched.time))) >= cfg.t_end:
-                break
-        per_run_steps = [int(c) for c in np.asarray(n_taken)]
-        t_final = float(np.min(np.asarray(batched.time)))
-        per_run_pairs = [float(s) * a * a
-                         for s, a in zip(per_run_steps, n_active)]
-    else:
-        # hierarchical block timesteps: each member's active block is
-        # evaluated per event; the engine *measures* its pairwise work
-        # and the kernel grid tiles it launched (what compaction shrinks)
-        n_levels = cfg.n_levels
-        if n_levels is None:  # auto: size each member's hierarchy from its
-            # initial Aarseth dt distribution, run the batch at the deepest
-            per_member = _auto_levels(cfg, batched)
-            n_levels = max(per_member)
-            recorder.meta["n_levels"] = n_levels
-            recorder.meta["n_levels_auto"] = per_member
-        plan = ops.CapacityPlan(
-            n_max, n_max, cfg.block_i or nbody_force.DEFAULT_BLOCK_I,
-            cfg.block_j or nbody_force.DEFAULT_BLOCK_J, dtype=cfg.dtype)
-        mask = np.arange(n_max)[None, :] < np.asarray(n_active)[:, None]
-        carry = None
-        done = 0
-        ev_prev = np.zeros(b)
-        tiles_prev = np.zeros(b)
-        pairs_prev = np.zeros(b)
-        bound_total = 0.0
-        while done * cfg.diag_every < MAX_STEPS:
-            t0 = time.perf_counter()
-            t0_us = tracer.now_us()
-            batched, carry = ens.ensemble_run_block(
-                batched, t_end=cfg.t_end, n_events=cfg.diag_every,
-                dt_max=cfg.dt_max, n_levels=n_levels, carry=carry,
-                eta=cfg.eta, compaction=cfg.compaction,
-                bucket_mode=cfg.bucket_mode,
-                block_i=cfg.block_i, block_j=cfg.block_j, **kw)
-            jax.block_until_ready(batched.pos)
-            done += 1
-            ev = np.asarray(carry.n_events, np.float64)
-            tiles = np.asarray(carry.n_tiles, np.float64)
-            pairs = np.asarray(carry.n_pairs, np.float64)
-            ev_d, tiles_d = ev - ev_prev, tiles - tiles_prev
-            pairs_d = pairs - pairs_prev
-            _chunk_spans(tracer, t0_us, tracer.now_us() - t0_us, chunk=done,
-                         events=int(ev_d.sum()), tiles=float(tiles_d.sum()))
-            reg.counter("sim.events", unit="events").inc(float(ev_d.sum()))
-            reg.counter("sim.tiles_launched", unit="tiles").inc(
-                float(tiles_d.sum()))
-            reg.counter(
-                "sim.tiles_dense_baseline", unit="tiles",
-                help="what compaction='none' would have enqueued").inc(
-                float(ev_d.sum()) * plan.dense_tiles)
-            # analytic a-priori tile bound: occupancy entry 0 (every real
-            # particle) is the largest active set any tick of the block
-            # schedule can see, so per member and event the launch can
-            # never exceed the tiles of occ[0]'s capacity bucket
-            occ0 = np.asarray(jax.vmap(
-                lambda lv, m: hermite.block_level_occupancy(
-                    lv, n_levels=n_levels, mask=m))(carry.levels,
-                                                    jnp.asarray(mask)))[:, 0]
-            for i in range(b):
-                per_event = (int(plan.tiles(plan.bucket(int(occ0[i]))))
-                             if cfg.compaction == "gather"
-                             else plan.dense_tiles)
-                bound_total += ev_d[i] * per_event
-                if ev_d[i] > 0 and n_active[i] > 0:
-                    reg.histogram(
-                        "sim.active_fraction", unit="fraction",
-                        help="per-chunk mean active-target fraction"
-                    ).observe(pairs_d[i]
-                              / (ev_d[i] * float(n_active[i]) ** 2))
-            reg.gauge("sim.tiles_occupancy_bound", unit="tiles",
-                      help="analytic bound; launched <= bound").set(
-                bound_total)
-            if cfg.compaction == "gather":
-                reg.gauge(
-                    "sim.bucket_hits", unit="hits",
-                    help="capacity-bucket switch hit counts (full "
-                         "schedule, summed over members)").set(
-                    [float(h) for h in
-                     np.asarray(carry.bucket_hits, np.float64).sum(axis=0)])
-            ev_prev, tiles_prev, pairs_prev = ev, tiles, pairs
-            snapshot(int(np.max(np.asarray(carry.n_events))),
-                     float(np.min(np.asarray(batched.time))),
-                     time.perf_counter() - t0)
-            if float(np.min(np.asarray(batched.time))) >= cfg.t_end:
-                break
-        per_run_steps = [int(c) for c in np.asarray(carry.n_events)]
-        t_final = float(np.min(np.asarray(batched.time)))
-        per_run_pairs = [float(p) for p in np.asarray(carry.n_pairs)]
-        per_run_tiles = [float(t) for t in np.asarray(carry.n_tiles)]
-
-    e1 = np.asarray(ens.batched_total_energy(batched), np.float64)
-    de = np.abs((e1 - e0) / e0)
-    virial = np.asarray(ens.batched_virial_ratio(batched), np.float64)
-    runs = [{**runs_meta[i], "e0": float(e0[i]), "e1": float(e1[i]),
-             "de_rel": float(de[i]), "virial_ratio": float(virial[i]),
-             "force_evals": per_run_pairs[i],
-             **({"steps": per_run_steps[i]} if per_run_steps else {}),
-             **({"grid_tiles": per_run_tiles[i]} if per_run_tiles else {})}
-            for i in range(b)]
-    return recorder.finalize(
-        n_bodies=n_max, ensemble=b, n_devices=max(cfg.devices, 1),
-        n_active=n_active, per_run_steps=per_run_steps,
-        per_run_pairs=per_run_pairs, per_run_tiles=per_run_tiles,
-        metrics=reg.snapshot(),
-        extra={"e0": e0.tolist(), "e1": e1.tolist(),
-               "de_rel": float(de.max()), "t_final": t_final,
-               "runs": runs})
-
-
-def _auto_levels(cfg: SimConfig, batched) -> list:
-    """Per-member block hierarchy depth from the initial (post-initialize)
-    Aarseth dt distribution, clamped to [1, 8] (``--levels auto``)."""
-    dt_i = jax.vmap(
-        lambda s: hermite.aarseth_dt_particles(s, eta=cfg.eta,
-                                               dt_max=cfg.dt_max))(batched)
-    depth = jax.vmap(
-        lambda d: hermite.auto_n_levels(d, dt_max=cfg.dt_max))(dt_i)
-    return [int(d) for d in np.asarray(depth)]
+from repro.sim.api import (  # noqa: F401
+    MAX_STEPS,
+    RUNNERS,
+    RunHandle,
+    Runner,
+    SimConfig,
+    _auto_levels,
+    _build_states,
+    _chunk_spans,
+    _device_list,
+    _mix_params,
+    get_runner,
+    register_runner,
+    resolve_kind,
+    run,
+    validate_config,
+)

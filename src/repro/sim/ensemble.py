@@ -271,6 +271,26 @@ def _as_n_active(batched: ParticleState, n_active) -> jax.Array:
     return n_active
 
 
+def _as_t_end(batched: ParticleState, t_end) -> jax.Array:
+    """Normalize ``t_end`` to a (B,) vector in the state dtype.
+
+    A scalar broadcasts to every member (bit-identical to the historical
+    shared-deadline behaviour — the per-member subtraction ``t_end - time``
+    sees the same value either way); a vector gives each member its own
+    deadline, which is how the serving layer freezes retired slots without
+    perturbing — or recompiling for — their batch-mates.
+    """
+    b = batch_size(batched)
+    t = jnp.asarray(t_end, batched.pos.dtype)
+    if t.ndim == 0:
+        return jnp.full((b,), t, batched.pos.dtype)
+    if t.shape != (b,):
+        raise ValueError(
+            f"t_end must be a scalar or shape ({b},) for a B={b} batch; "
+            f"got {t.shape}")
+    return t
+
+
 def ensemble_initialize(
     batched: ParticleState,
     *,
@@ -350,7 +370,7 @@ def _adaptive_engine(order: int, eps: float, impl: str, mesh,
 
         def body(carry, _):
             s, hp, cnt = carry
-            s1, hp1, active = jax.vmap(one_step, in_axes=(0, 0, 0, None))(
+            s1, hp1, active = jax.vmap(one_step, in_axes=(0, 0, 0, 0))(
                 s, hp, n_active, t_end)
             return (_constrain(s1, mesh), hp1,
                     cnt + active.astype(cnt.dtype)), None
@@ -382,7 +402,9 @@ def ensemble_run_adaptive(
 
     Returns ``(batched, h_prev, n_taken)``; call again with the returned
     carries until ``batched.time.min() >= t_end``.  ``n_taken`` counts the
-    *productive* steps per run (frozen lockstep steps excluded).
+    *productive* steps per run (frozen lockstep steps excluded).  ``t_end``
+    is a shared scalar or a per-member ``(B,)`` vector (see
+    :func:`_as_t_end`).
     """
     mesh = _batch_mesh(devices)
     run = _adaptive_engine(order, eps, impl, mesh, eta, dt_max, dtype)
@@ -392,9 +414,10 @@ def ensemble_run_adaptive(
     if n_taken is None:
         n_taken = jnp.zeros(batch_size(batched), jnp.int32)
     n_active = _as_n_active(batched, n_active)
-    carry, b = _pad_batch((batched, h_prev, n_taken, n_active),
+    t_end_ = _as_t_end(batched, t_end)
+    carry, b = _pad_batch((batched, h_prev, n_taken, n_active, t_end_),
                           mesh.size if mesh else 1)
-    out, hp, cnt = run(*carry, jnp.asarray(t_end, state_dtype), n_steps)
+    out, hp, cnt = run(*carry, n_steps)
     return tuple(jax.tree_util.tree_map(lambda x: x[:b], t)
                  for t in (out, hp, cnt))
 
@@ -660,7 +683,7 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
             s, c = acc
             with jax.named_scope("event.pre"):
                 live, t_next, active, h, xp, vp, ap, perm = jax.vmap(
-                    member_pre, in_axes=(0, 0, 0, 0, 0, None))(
+                    member_pre, in_axes=(0, 0, 0, 0, 0, 0))(
                         s, c.t_last, c.levels, c.dt_macro, n_active, t_end)
             hits_event = None
             if compaction == "gather":
@@ -694,7 +717,7 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
             with jax.named_scope("event.post"):
                 s1, t_last, levels, dt_macro, dp, live = jax.vmap(
                     member_post,
-                    in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, None))(
+                    in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0))(
                         s, ev, live, t_next, active, h, c.t_last, c.levels,
                         c.dt_macro, n_active, t_end)
             c1 = BlockCarry(t_last=t_last, levels=levels, dt_macro=dt_macro,
@@ -714,7 +737,7 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
     @jax.jit
     def init(batched, n_active, t_end):
         t_last, levels, dt_macro = jax.vmap(
-            member_init, in_axes=(0, 0, None))(batched, n_active, t_end)
+            member_init, in_axes=(0, 0, 0))(batched, n_active, t_end)
         b, n = t_last.shape
         # counters accumulate at host precision (exact integer adds far past
         # float32's 2**24 window; silently float32 when x64 is disabled)
@@ -754,7 +777,9 @@ def ensemble_run_block(
 
     Returns ``(batched, carry)``; call again with the returned carry until
     ``batched.time.min() >= t_end`` (a member's ``time`` advances at its
-    macro boundaries).  ``carry.n_pairs`` accumulates the per-run pairwise
+    macro boundaries).  ``t_end`` is a shared scalar or a per-member ``(B,)``
+    vector (see :func:`_as_t_end`) — a member whose deadline has passed
+    freezes whole while its batch-mates keep integrating.  ``carry.n_pairs`` accumulates the per-run pairwise
     force evaluations actually performed (per Hermite pass) — the measured
     cost telemetry reports; ``carry.n_events`` counts productive events;
     ``carry.n_tiles`` the kernel grid tiles launched per member (both
@@ -781,13 +806,13 @@ def ensemble_run_block(
     # ValueError) when the engine is first built — no duplicate check here
     mesh = _batch_mesh(devices)
     n_active = _as_n_active(batched, n_active)
-    t_end_ = jnp.asarray(t_end, batched.pos.dtype)
+    t_end_ = _as_t_end(batched, t_end)
     if carry is None:
-        (padded, na), b = _pad_batch((batched, n_active),
-                                     mesh.size if mesh else 1)
+        (padded, na, t_end_), b = _pad_batch((batched, n_active, t_end_),
+                                             mesh.size if mesh else 1)
     else:
-        (padded, na, carry), b = _pad_batch((batched, n_active, carry),
-                                            mesh.size if mesh else 1)
+        (padded, na, t_end_, carry), b = _pad_batch(
+            (batched, n_active, t_end_, carry), mesh.size if mesh else 1)
     bi = block_i or nbody_force.DEFAULT_BLOCK_I
     bj = block_j or nbody_force.DEFAULT_BLOCK_J
     # groups come from the *padded* batch (padding repeats the first run,
@@ -803,6 +828,35 @@ def ensemble_run_block(
     out, carry = run(padded, carry, na, t_end_, n_events)
     return tuple(jax.tree_util.tree_map(lambda x: x[:b], t)
                  for t in (out, carry))
+
+
+def block_admit_member(carry: BlockCarry, member: ParticleState, slot: int,
+                       t_end, *, eta: float = 0.02, dt_max: float = 0.0625,
+                       n_levels: int = 8) -> BlockCarry:
+    """Splice a freshly admitted member's block carry into ``slot``.
+
+    The serving layer backfills a retired slot by writing the new member's
+    *initialized* ``(N,)`` state into the batch and resetting that slot's
+    carry: fresh levels/ticks from the member's own Aarseth dt distribution
+    (:func:`_event_init`, the same bootstrap ``init`` runs batch-wide) and
+    zeroed per-member counters, so the retiring run's telemetry never bleeds
+    into its successor's.  Every other slot's carry leaves are untouched —
+    batch-mates stay bit-identical (the backfill invariance test pins this).
+    ``eta``/``dt_max``/``n_levels`` must match the engine the pod runs.
+    """
+    t_end_ = jnp.asarray(t_end, member.pos.dtype)
+    t_last, levels, dt_macro = _event_init(
+        member, member.pos.shape[0], t_end_, eta=eta, dt_max=dt_max,
+        n_levels=n_levels)
+    return BlockCarry(
+        t_last=carry.t_last.at[slot].set(t_last),
+        levels=carry.levels.at[slot].set(levels),
+        dt_macro=carry.dt_macro.at[slot].set(dt_macro),
+        n_pairs=carry.n_pairs.at[slot].set(0),
+        n_events=carry.n_events.at[slot].set(0),
+        n_tiles=carry.n_tiles.at[slot].set(0),
+        bucket_hits=carry.bucket_hits.at[slot].set(0)
+        if carry.bucket_hits.ndim == 2 else carry.bucket_hits)
 
 
 def evolve_ensemble_block(

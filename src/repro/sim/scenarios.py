@@ -49,7 +49,7 @@ class ScenarioError(ValueError):
 # registry
 # --------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
-class ScenarioSpec:
+class ScenarioDef:
     """Registry entry: the generator plus its validation contract."""
 
     name: str
@@ -61,13 +61,13 @@ class ScenarioSpec:
     min_n: int = 2
 
 
-SCENARIOS: Dict[str, ScenarioSpec] = {}
+SCENARIOS: Dict[str, ScenarioDef] = {}
 
 
 def register(name: str, *, equilibrium: bool, rescale: bool = True,
              description: str = "", min_n: int = 2, **defaults):
     def deco(fn: Generator) -> Generator:
-        SCENARIOS[name] = ScenarioSpec(
+        SCENARIOS[name] = ScenarioDef(
             name=name, generator=fn, equilibrium=equilibrium,
             rescale=rescale, description=description, defaults=dict(defaults),
             min_n=min_n)
@@ -79,7 +79,7 @@ def available() -> Tuple[str, ...]:
     return tuple(sorted(SCENARIOS))
 
 
-def get_spec(name: str) -> ScenarioSpec:
+def get_spec(name: str) -> ScenarioDef:
     try:
         return SCENARIOS[name]
     except KeyError:
@@ -103,6 +103,99 @@ class Scenario:
     def describe(self) -> dict:
         return {"scenario": self.name, "n": self.n, "seed": self.seed,
                 "params": dict(self.params)}
+
+
+@dataclasses.dataclass(frozen=True)
+class ScenarioSpec:
+    """A validated scenario *request*: registry name + size (+ seed/params).
+
+    The typed replacement for the stringly ``name[:N]`` CLI tokens —
+    :meth:`parse` / :meth:`format` round-trip exactly, and :meth:`validate`
+    raises a :class:`ScenarioError` that names the offending field
+    (``ScenarioSpec.name: ...``, ``ScenarioSpec.n: ...``), so a bad request
+    fails at the admission boundary (CLI flag parsing, server submit) instead
+    of deep inside a generator.  ``n=None`` means "caller's default N"; fill
+    it with :meth:`with_n` before building.
+    """
+
+    name: str
+    n: Optional[int] = None
+    seed: int = 0
+    params: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+
+    @classmethod
+    def parse(cls, token: str, *, seed: int = 0) -> "ScenarioSpec":
+        """Parse ``name[:N]`` (e.g. ``"king:256"``) into a validated spec."""
+        name, sep, count = str(token).partition(":")
+        n: Optional[int] = None
+        if sep:
+            try:
+                n = int(count)
+            except ValueError:
+                raise ScenarioError(
+                    f"ScenarioSpec.n: {count!r} (from token {token!r}) "
+                    "is not an integer N") from None
+        return cls(name=name, n=n, seed=seed).validate()
+
+    def format(self) -> str:
+        """Inverse of :meth:`parse`: ``"king:256"``, or ``"king"`` (n=None)."""
+        return self.name if self.n is None else f"{self.name}:{self.n}"
+
+    def validate(self) -> "ScenarioSpec":
+        """Check every field against the registry; return ``self``.
+
+        Errors name the bad field so callers (CLI, server admission) can
+        surface them without reverse-engineering the message.
+        """
+        if not isinstance(self.name, str) or not self.name:
+            raise ScenarioError(
+                f"ScenarioSpec.name: expected a non-empty scenario name, "
+                f"got {self.name!r}")
+        spec = SCENARIOS.get(self.name)
+        if spec is None:
+            raise ScenarioError(
+                f"ScenarioSpec.name: unknown scenario {self.name!r}; "
+                f"available: {available()}")
+        if self.n is not None:
+            if not isinstance(self.n, int) or isinstance(self.n, bool):
+                raise ScenarioError(
+                    f"ScenarioSpec.n: expected an int (or None), "
+                    f"got {self.n!r}")
+            if self.n < spec.min_n:
+                raise ScenarioError(
+                    f"ScenarioSpec.n: n={self.n} below {self.name!r}'s "
+                    f"minimum {spec.min_n}")
+        if not isinstance(self.seed, int) or isinstance(self.seed, bool) \
+                or self.seed < 0:
+            raise ScenarioError(
+                f"ScenarioSpec.seed: expected a non-negative int, "
+                f"got {self.seed!r}")
+        unknown = set(self.params) - set(spec.defaults)
+        if unknown:
+            raise ScenarioError(
+                f"ScenarioSpec.params: unknown parameter(s) "
+                f"{sorted(unknown)} for {self.name!r}; "
+                f"accepts {sorted(spec.defaults)}")
+        return self
+
+    def with_n(self, default_n: int) -> "ScenarioSpec":
+        """Fill an unset ``n`` with the caller's default."""
+        if self.n is not None:
+            return self
+        return dataclasses.replace(self, n=default_n)
+
+    def scenario(self, *, dtype=jnp.float64) -> Scenario:
+        """Lower to a buildable :class:`Scenario` (requires ``n`` set)."""
+        if self.n is None:
+            raise ScenarioError(
+                "ScenarioSpec.n: unset; call with_n(default) before building")
+        return Scenario(name=self.name, n=self.n, seed=self.seed,
+                        dtype=dtype, params=dict(self.params))
+
+    def build(self, *, dtype=jnp.float64, validate: bool = True
+              ) -> ParticleState:
+        self.validate()
+        return build(self.scenario(dtype=dtype), validate=validate)
 
 
 # --------------------------------------------------------------------------
@@ -147,7 +240,7 @@ def state_diagnostics(state: ParticleState) -> dict:
                        np.asarray(state.mass, np.float64))
 
 
-def _validate(spec: ScenarioSpec, diag: dict) -> None:
+def _validate(spec: ScenarioDef, diag: dict) -> None:
     for key in ("kinetic", "potential", "energy"):
         if not math.isfinite(diag[key]):
             raise ScenarioError(f"{spec.name}: non-finite {key}: {diag[key]}")
@@ -303,18 +396,10 @@ def parse_mix_token(token: str) -> Tuple[str, Optional[int]]:
 
     ``"king:256"`` -> ``("king", 256)``; a bare ``"king"`` leaves N to the
     caller's ``--n`` default.  The name is validated against the registry.
+    Thin tuple view over :meth:`ScenarioSpec.parse` (the typed surface).
     """
-    name, sep, count = token.partition(":")
-    get_spec(name)  # raises ScenarioError with the available list
-    if not sep:
-        return name, None
-    try:
-        n = int(count)
-    except ValueError:
-        raise ScenarioError(
-            f"scenario token {token!r}: {count!r} is not an integer N") \
-            from None
-    return name, n
+    spec = ScenarioSpec.parse(token)
+    return spec.name, spec.n
 
 
 def make_mix(mix: Sequence[Tuple[str, int]], *, seed: int = 0,

@@ -13,11 +13,87 @@ import json
 import os
 import statistics
 import time
+import warnings
 from typing import Any, Dict, List, Optional
 
 from repro.obs import metrics as obs_metrics
 from repro.obs.energy import DEFAULT_UTIL, modeled_energy  # noqa: F401
 #   (re-exported: callers historically read telemetry.DEFAULT_UTIL)
+
+#: schema version stamped into every RunReport (bump on breaking key changes)
+REPORT_SCHEMA_VERSION = 1
+
+
+class RunReport(dict):
+    """Versioned, typed telemetry report of one run.
+
+    A ``dict`` subclass, so every historical consumer (``report["wall_s"]``,
+    ``json.dump``, ``report.get(...)``) keeps working unchanged — but new
+    code should treat the mapping surface as legacy and use the typed one:
+    the ``schema_version`` stamp, :meth:`to_json` / :meth:`from_json` (an
+    exact round-trip, validated on load) and the read-only field properties.
+    """
+
+    def __init__(self, data: Optional[Dict[str, Any]] = None, **kw):
+        super().__init__(data or {}, **kw)
+        self.setdefault("schema_version", REPORT_SCHEMA_VERSION)
+
+    # ------------------------------------------------------------- typed view
+    @property
+    def schema_version(self) -> int:
+        return int(self["schema_version"])
+
+    @property
+    def wall_s(self) -> float:
+        return float(self["wall_s"])
+
+    @property
+    def steps(self) -> int:
+        return int(self["steps"])
+
+    @property
+    def steps_per_s(self) -> float:
+        return float(self["steps_per_s"])
+
+    @property
+    def interactions_per_s(self) -> float:
+        return float(self["interactions_per_s"])
+
+    @property
+    def snapshots(self) -> List[Dict[str, Any]]:
+        return self["snapshots"]
+
+    @property
+    def as_dict(self) -> Dict[str, Any]:
+        """Deprecated: a plain-dict copy for legacy consumers.
+
+        ``RunReport`` *is* a mapping — index it directly, or use the typed
+        properties.  This escape hatch exists only for callers that type-check
+        against ``dict`` exactly; it will be removed once none remain.
+        """
+        warnings.warn(
+            "RunReport.as_dict is deprecated: RunReport is a dict — index "
+            "it directly or use the typed properties", DeprecationWarning,
+            stacklevel=2)
+        return dict(self)
+
+    # ------------------------------------------------------------ round-trip
+    def to_json(self) -> str:
+        return json.dumps(self, default=float)
+
+    @classmethod
+    def from_json(cls, text: str) -> "RunReport":
+        data = json.loads(text)
+        if not isinstance(data, dict):
+            raise ValueError(
+                f"RunReport.from_json: expected a JSON object, "
+                f"got {type(data).__name__}")
+        version = data.get("schema_version")
+        if version != REPORT_SCHEMA_VERSION:
+            raise ValueError(
+                f"RunReport.from_json: schema_version {version!r} does not "
+                f"match this reader ({REPORT_SCHEMA_VERSION})")
+        return cls(data)
 
 
 @dataclasses.dataclass
@@ -52,8 +128,8 @@ class TelemetryRecorder:
                  per_run_tiles: Optional[List[float]] = None,
                  per_shard_tiles: Optional[List[float]] = None,
                  metrics: Optional[Dict[str, Any]] = None,
-                 extra: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
-        """Assemble the JSON-ready report for this run.
+                 extra: Optional[Dict[str, Any]] = None) -> RunReport:
+        """Assemble the versioned :class:`RunReport` for this run.
 
         For padded ensembles pass ``n_active`` (per-run real particle
         counts): interaction throughput then counts ``n_active**2`` pairs per
@@ -147,7 +223,7 @@ class TelemetryRecorder:
         }
         if extra:
             report.update(extra)
-        return report
+        return RunReport(report)
 
 
 def write_report(report: Dict[str, Any], path: str) -> str:

@@ -1,0 +1,109 @@
+"""``repro.checkpoint.store`` on simulation pytrees: ``BlockCarry``
+round-trips (including the strategy engines' per-shard ``(P,)`` tile
+counters) must preserve every leaf's dtype and value exactly, and a
+template/checkpoint dtype mismatch must raise instead of silently casting."""
+
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import store
+from repro.sim import ensemble as ens
+from repro.sim import scenarios
+
+
+def _block_state_and_carry():
+    state = ens.stack_states(
+        [scenarios.pad_state(scenarios.make("plummer", 24), 32),
+         scenarios.pad_state(scenarios.make("two_body", 2), 32)])
+    state = ens.ensemble_initialize(state, order=6, eps=1e-7, impl="xla")
+    state, carry = ens.ensemble_run_block(
+        state, t_end=0.02, n_events=4, dt_max=0.0625, n_levels=4,
+        eta=0.02, order=6, eps=1e-7, impl="xla",
+        block_i=32, block_j=32)
+    return state, carry
+
+
+def test_blockcarry_roundtrip_exact(tmp_path):
+    state, carry = _block_state_and_carry()
+    tree = {"state": state, "carry": carry}
+    store.save(str(tmp_path), 5, tree)
+
+    like = {"state": jax.tree_util.tree_map(jnp.zeros_like, state),
+            "carry": jax.tree_util.tree_map(jnp.zeros_like, carry)}
+    step, back = store.restore_latest(str(tmp_path), like)
+    assert step == 5
+    assert isinstance(back["carry"], ens.BlockCarry)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(back)):
+        assert a.dtype == b.dtype  # the once-lost part: no silent casting
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the fractional-capable accumulators must still be the wide count dtype
+    count_dtype = jax.dtypes.canonicalize_dtype(jnp.float64)
+    assert back["carry"].n_tiles.dtype == count_dtype
+    assert back["carry"].n_pairs.dtype == count_dtype
+    assert back["carry"].n_events.dtype == jnp.int32
+
+
+def test_restore_refuses_dtype_mismatch(tmp_path):
+    _, carry = _block_state_and_carry()
+    store.save(str(tmp_path), 1, {"carry": carry})
+    narrow = carry._replace(
+        n_tiles=jnp.zeros(carry.n_tiles.shape, jnp.float32))
+    with pytest.raises(ValueError, match="restore never casts"):
+        store.restore(str(tmp_path), 1, {"carry": narrow})
+
+
+def test_restore_refuses_shape_mismatch(tmp_path):
+    _, carry = _block_state_and_carry()
+    store.save(str(tmp_path), 1, {"carry": carry})
+    wrong = jax.tree_util.tree_map(
+        lambda a: jnp.zeros((3,) + tuple(a.shape[1:]), a.dtype), carry)
+    with pytest.raises(ValueError, match="shape"):
+        store.restore(str(tmp_path), 1, {"carry": wrong})
+
+
+# strategy engines carry a per-shard (P,) tile vector; a 2-device carry must
+# round-trip bit-exactly too (subprocess: device count is fixed at import)
+_PER_SHARD = r"""
+import numpy as np
+import jax, jax.numpy as jnp, sys
+jax.config.update("jax_enable_x64", True)
+from repro.checkpoint import store
+from repro.sim import ensemble as ens
+from repro.sim import scenarios
+
+state = scenarios.pad_state(scenarios.make("plummer", 24), 32)
+state, carry = ens.strategy_run_block(
+    state, t_end=0.02, n_events=4, dt_max=0.0625, n_levels=4,
+    strategy="mesh_sharded", impl="xla", block_i=32, block_j=32,
+    devices=jax.devices())
+assert carry.n_tiles.shape == (2,), carry.n_tiles.shape
+
+store.save(sys.argv[1], 2, {"carry": carry})
+like = jax.tree_util.tree_map(jnp.zeros_like, carry)
+step, back = store.restore_latest(sys.argv[1], {"carry": like})
+assert step == 2
+for a, b in zip(jax.tree_util.tree_leaves(carry),
+                jax.tree_util.tree_leaves(back["carry"])):
+    assert a.dtype == b.dtype, (a.dtype, b.dtype)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+assert back["carry"].n_tiles.shape == (2,)
+print("PER-SHARD-ROUNDTRIP OK")
+"""
+
+
+@pytest.mark.slow
+def test_per_shard_tile_counters_roundtrip(tmp_path):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+    res = subprocess.run([sys.executable, "-c", _PER_SHARD, str(tmp_path)],
+                         env=env, capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stdout + res.stderr
+    assert "PER-SHARD-ROUNDTRIP OK" in res.stdout

@@ -1,0 +1,174 @@
+"""The public simulation API (``repro.sim.api``): registry-based
+build/step/collect dispatch, the typed ``ScenarioSpec`` request surface and
+the versioned ``RunReport`` — plus the ``driver`` compatibility shim."""
+
+import json
+
+import pytest
+
+from repro.sim import api, driver, scenarios, telemetry
+from repro.sim.scenarios import ScenarioError, ScenarioSpec
+from repro.sim.telemetry import REPORT_SCHEMA_VERSION, RunReport
+
+
+# --------------------------------------------------------------------------
+# registry dispatch
+# --------------------------------------------------------------------------
+def _cfg(**kw):
+    base = dict(scenario="plummer", n=16, t_end=0.02, dt=1.0 / 256,
+                diag_every=4, validate_ic=False)
+    base.update(kw)
+    return api.SimConfig(**base)
+
+
+@pytest.mark.parametrize("cfg,kind", [
+    (_cfg(), "single"),
+    (_cfg(ensemble=2), "ensemble"),
+    (_cfg(stepper="block", dt=None, n_levels=2, impl="xla"), "ensemble"),
+    (_cfg(stepper="block", dt=None, n_levels=2, impl="xla",
+          strategy="mesh_sharded"), "block_strategy"),
+    (_cfg(mix=(("plummer", 16), ("two_body", 2)), scenario="mixed"),
+     "mixed"),
+])
+def test_resolve_kind_dispatch(cfg, kind):
+    assert api.resolve_kind(cfg) == kind
+
+
+def test_get_runner_unknown_kind():
+    with pytest.raises(ValueError, match="unknown runner kind"):
+        api.get_runner("warp_drive")
+
+
+def test_resolve_kind_validates_first():
+    with pytest.raises(ValueError):
+        api.resolve_kind(_cfg(ensemble=0))
+
+
+def test_driver_shim_is_the_api():
+    """The legacy ``driver`` module re-exports the api surface unchanged."""
+    assert driver.run is api.run
+    assert driver.SimConfig is api.SimConfig
+    assert driver.RUNNERS is api.RUNNERS
+
+
+# --------------------------------------------------------------------------
+# build/step/collect == run()
+# --------------------------------------------------------------------------
+#: physics-deterministic report fields (wall-clock fields excluded)
+_DETERMINISTIC = ("scenario", "n_bodies", "ensemble", "steps", "e0", "e1",
+                  "de_rel", "t_final", "force_evals_total")
+
+
+def _deterministic(report):
+    return {k: report[k] for k in _DETERMINISTIC if k in report}
+
+
+@pytest.mark.parametrize("cfg", [
+    _cfg(),
+    _cfg(ensemble=2, stepper="adaptive", dt=None, t_end=0.01),
+    _cfg(mix=(("plummer", 16), ("two_body", 2)), scenario="mixed"),
+])
+def test_build_step_collect_matches_run(cfg):
+    """Driving the triple by hand reproduces ``run()``'s physics exactly."""
+    monolithic = api.run(cfg)
+    runner = api.get_runner(api.resolve_kind(cfg))
+    h = runner.build(cfg)
+    while not runner.step(h):
+        pass
+    composed = runner.collect(h)
+    assert isinstance(composed, RunReport)
+    assert _deterministic(composed) == _deterministic(monolithic)
+
+
+def test_run_twice_is_deterministic():
+    cfg = _cfg()
+    a, b = api.run(cfg), api.run(cfg)
+    assert _deterministic(a) == _deterministic(b)
+
+
+# --------------------------------------------------------------------------
+# ScenarioSpec: the typed name[:N] request
+# --------------------------------------------------------------------------
+def test_scenariospec_parse_format_roundtrip():
+    for token in ("plummer:24", "two_body:2", "king:32"):
+        spec = ScenarioSpec.parse(token)
+        assert spec.format() == token
+        assert ScenarioSpec.parse(spec.format()) == spec
+    bare = ScenarioSpec.parse("plummer")
+    assert bare.n is None and bare.format() == "plummer"
+
+
+def test_scenariospec_parse_bad_int_names_field():
+    with pytest.raises(ScenarioError, match="ScenarioSpec.n"):
+        ScenarioSpec.parse("plummer:abc")
+
+
+def test_scenariospec_unknown_name_names_field():
+    with pytest.raises(ScenarioError, match="ScenarioSpec.name"):
+        ScenarioSpec.parse("warp_core:16")
+
+
+def test_scenariospec_negative_seed_names_field():
+    with pytest.raises(ScenarioError, match="ScenarioSpec.seed"):
+        ScenarioSpec(name="plummer", n=16, seed=-1).validate()
+
+
+def test_scenariospec_unknown_param_names_field():
+    with pytest.raises(ScenarioError, match="ScenarioSpec.params"):
+        ScenarioSpec(name="plummer", n=16,
+                     params={"warp_factor": 9}).validate()
+
+
+def test_scenariospec_with_n_and_build():
+    spec = ScenarioSpec.parse("plummer").with_n(24)
+    assert spec.n == 24
+    state = spec.build()
+    assert state.pos.shape == (24, 3)
+    with pytest.raises(ScenarioError, match="ScenarioSpec.n"):
+        ScenarioSpec.parse("plummer").scenario()
+
+
+def test_parse_mix_token_delegates_to_spec():
+    assert scenarios.parse_mix_token("king:128") == ("king", 128)
+    assert scenarios.parse_mix_token("king") == ("king", None)
+    with pytest.raises(ScenarioError):
+        scenarios.parse_mix_token("king:x")
+
+
+# --------------------------------------------------------------------------
+# RunReport: versioned, typed, round-trippable
+# --------------------------------------------------------------------------
+def test_finalize_returns_versioned_runreport():
+    rec = telemetry.TelemetryRecorder({"scenario": "x"})
+    rec.record_step(4, 0.1, 0.5)
+    report = rec.finalize(n_bodies=8)
+    assert isinstance(report, RunReport)
+    assert isinstance(report, dict)          # legacy consumers keep working
+    assert report.schema_version == REPORT_SCHEMA_VERSION
+    assert report["schema_version"] == REPORT_SCHEMA_VERSION
+    assert report.steps == 4 and report.wall_s == 0.5
+
+
+def test_runreport_json_roundtrip():
+    rec = telemetry.TelemetryRecorder({"scenario": "x"})
+    rec.record_step(2, 0.05, 0.25)
+    report = rec.finalize(n_bodies=8, n_active=[6])
+    back = RunReport.from_json(report.to_json())
+    assert back == json.loads(report.to_json())
+    assert back.schema_version == report.schema_version
+    assert back["n_active"] == [6]
+
+
+def test_runreport_from_json_rejects_wrong_version():
+    bad = json.dumps({"schema_version": REPORT_SCHEMA_VERSION + 1})
+    with pytest.raises(ValueError, match="schema_version"):
+        RunReport.from_json(bad)
+    with pytest.raises(ValueError, match="JSON object"):
+        RunReport.from_json("[1, 2]")
+
+
+def test_runreport_as_dict_deprecated():
+    report = RunReport({"wall_s": 1.0})
+    with pytest.deprecated_call():
+        plain = report.as_dict
+    assert plain == dict(report) and type(plain) is dict
