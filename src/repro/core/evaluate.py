@@ -35,6 +35,50 @@ from repro.kernels import nbody_force, ops
 COMPACTIONS = ("none", "gather")
 
 
+def _rect_passes(*, eps, impl, block_i, block_j, precision, dtype):
+    """The two Hermite passes in rectangular (targets x sources) form with
+    the activity mask applied — the only layer that differs between the
+    FP32 kernels and the FP64 oracle.  Shared by the full-source block
+    evaluator and the Ahmad-Cohen neighbor-window evaluator; returns
+    ``(cast, rect1, rect2)``."""
+    if dtype is None:
+        dtype = "fp64" if precision == "fp64" else "fp32"
+    if dtype not in ops.DTYPES:
+        raise ValueError(f"dtype must be one of {ops.DTYPES}; got {dtype!r}")
+    if dtype == "fp64" or precision == "fp64":
+        from repro.kernels import ref
+
+        def cast(x):
+            return jnp.asarray(x)
+
+        def rect1(pt, vt, ps, vs, m, mask_c):
+            acc, jerk, pot = ref.acc_jerk_pot_rect(pt, vt, ps, vs, m, eps=eps)
+            m3 = mask_c[:, None]
+            return (jnp.where(m3, acc, 0.0), jnp.where(m3, jerk, 0.0),
+                    jnp.where(mask_c, pot, 0.0))
+
+        def rect2(pt, vt, at, ps, vs, as_, m, mask_c):
+            snp = ref.snap_rect(pt, vt, at, ps, vs, as_, m, eps=eps)
+            return jnp.where(mask_c[:, None], snp, 0.0)
+    else:
+        impl_ = impl or ops.default_impl()
+        kw = dict(eps=eps, block_i=block_i, block_j=block_j, impl=impl_,
+                  dtype=dtype)
+
+        def cast(x):
+            return jnp.asarray(x, jnp.float32)
+
+        def rect1(pt, vt, ps, vs, m, mask_c):
+            return ops.acc_jerk_pot_rect(pt, vt, ps, vs, m, mask_t=mask_c,
+                                         **kw)
+
+        def rect2(pt, vt, at, ps, vs, as_, m, mask_c):
+            return ops.snap_rect(pt, vt, at, ps, vs, as_, m, mask_t=mask_c,
+                                 **kw)
+
+    return cast, rect1, rect2
+
+
 def make_block_evaluator(
     *,
     eps: float = 1e-7,
@@ -92,44 +136,9 @@ def make_block_evaluator(
     if compaction not in COMPACTIONS:
         raise ValueError(
             f"compaction must be one of {COMPACTIONS}; got {compaction!r}")
-    if dtype is None:
-        dtype = "fp64" if precision == "fp64" else "fp32"
-    if dtype not in ops.DTYPES:
-        raise ValueError(f"dtype must be one of {ops.DTYPES}; got {dtype!r}")
-
-    # rect1/rect2: the two Hermite passes in rectangular (targets x sources)
-    # form with the activity mask applied — the only layer that differs
-    # between the FP32 kernels and the FP64 oracle.
-    if dtype == "fp64" or precision == "fp64":
-        from repro.kernels import ref
-
-        def cast(x):
-            return jnp.asarray(x)
-
-        def rect1(pt, vt, ps, vs, m, mask_c):
-            acc, jerk, pot = ref.acc_jerk_pot_rect(pt, vt, ps, vs, m, eps=eps)
-            m3 = mask_c[:, None]
-            return (jnp.where(m3, acc, 0.0), jnp.where(m3, jerk, 0.0),
-                    jnp.where(mask_c, pot, 0.0))
-
-        def rect2(pt, vt, at, ps, vs, as_, m, mask_c):
-            snp = ref.snap_rect(pt, vt, at, ps, vs, as_, m, eps=eps)
-            return jnp.where(mask_c[:, None], snp, 0.0)
-    else:
-        impl_ = impl or ops.default_impl()
-        kw = dict(eps=eps, block_i=block_i, block_j=block_j, impl=impl_,
-                  dtype=dtype)
-
-        def cast(x):
-            return jnp.asarray(x, jnp.float32)
-
-        def rect1(pt, vt, ps, vs, m, mask_c):
-            return ops.acc_jerk_pot_rect(pt, vt, ps, vs, m, mask_t=mask_c,
-                                         **kw)
-
-        def rect2(pt, vt, at, ps, vs, as_, m, mask_c):
-            return ops.snap_rect(pt, vt, at, ps, vs, as_, m, mask_t=mask_c,
-                                 **kw)
+    cast, rect1, rect2 = _rect_passes(eps=eps, impl=impl, block_i=block_i,
+                                      block_j=block_j, precision=precision,
+                                      dtype=dtype)
 
     if compaction == "none":
 
@@ -178,6 +187,119 @@ def make_block_evaluator(
                               p, v, ap, m, mask_t, perm)
 
     return evaluate_gather
+
+
+def make_neighbor_block_evaluator(
+    *,
+    n: int,
+    eps: float = 1e-7,
+    impl: Optional[str] = None,
+    block_i: int = nbody_force.DEFAULT_BLOCK_I,
+    block_j: int = nbody_force.DEFAULT_BLOCK_J,
+    precision: str = "fp32",
+    dtype: Optional[str] = None,
+):
+    """Near-window (regular-force) evaluator of the Ahmad-Cohen split.
+
+    The source-axis dual of :func:`make_block_evaluator`'s compaction: the
+    *targets* stay dense (every block launches — the activity mask handles
+    inactive rows), but each target block sweeps only its gathered window
+    of neighbor source blocks (``kernels.neighbor.build_windows``) instead
+    of the full source extent.  The window capacity is one of the plan's
+    static ``source_caps`` buckets, dispatched through ``lax.switch`` —
+    ``w_idx`` must bound every live window count and, under ``vmap``, must
+    be unbatched (``in_axes=None``), exactly like the target-side
+    ``cap_idx``.  The last bucket is the full padded source extent, so an
+    overflowing window dispatches the exact all-pairs sweep.
+
+    Returns ``(near1, near2)``::
+
+        near1(pos, vel, mass, mask_t, win_idx, win_cnt, w_idx)
+            -> (acc, jerk, pot)                     # near-field only
+        near2(pos, vel, acc_t, acc_s, mass, mask_t, win_idx, win_cnt, w_idx)
+            -> snap                                 # near-field only
+
+    ``acc_t`` is the *total* (near + far) acceleration of the targets and
+    ``acc_s`` the total acceleration of every source row — the snap term
+    depends on both particles' full accelerations even when only the near
+    pairs are summed.  Window slots past ``win_cnt`` gather with their mass
+    zeroed, so by the kernels' mask contract they contribute exactly zero:
+    growing a shared bucket only appends exact zeros to each row's
+    reduction tail.
+    """
+    cast, rect1, rect2 = _rect_passes(eps=eps, impl=impl, block_i=block_i,
+                                      block_j=block_j, precision=precision,
+                                      dtype=dtype)
+    nbt = -(-n // block_i)
+    nsb = -(-n // block_j)
+    nt_pad, ns_pad = nbt * block_i, nsb * block_j
+    # window capacities in source *blocks* per target block
+    w_caps = tuple(c // block_j for c in ops.capacity_buckets(n, block_j))
+
+    def _blocks(x, nb, block, rows):
+        pad = ((0, rows - n),) + ((0, 0),) * (x.ndim - 1)
+        return jnp.pad(x, pad).reshape((nb, block) + x.shape[1:])
+
+    def _blocks_t(x):
+        return _blocks(x, nbt, block_i, nt_pad)
+
+    def _blocks_s(x):
+        return _blocks(x, nsb, block_j, ns_pad)
+
+    def _unblock(x):
+        return x.reshape((nt_pad,) + x.shape[2:])[:n]
+
+    def _gather(win_idx, win_cnt, w, sm, *blocks):
+        """First ``w`` window entries of every target block, flattened to
+        (nbt, w*block_j, ...); slots past ``win_cnt`` zero their mass."""
+        idx = win_idx[:, :w]
+        val = jnp.arange(w)[None, :] < win_cnt[:, None]
+        gm = jnp.where(val[..., None], sm[idx], 0.0)
+        flat = [gm.reshape(nbt, w * block_j)]
+        for b in blocks:
+            g = b[idx]
+            flat.append(g.reshape((nbt, w * block_j) + g.shape[3:]))
+        return flat
+
+    def near1(pos, vel, mass, mask_t, win_idx, win_cnt, w_idx):
+        p, v, m = cast(pos), cast(vel), cast(mass)
+        tm = _blocks_t(jnp.asarray(mask_t, bool))
+        tp, tv = _blocks_t(p), _blocks_t(v)
+        sp, sv, sm = _blocks_s(p), _blocks_s(v), _blocks_s(m)
+
+        def make_branch(w: int):
+            def branch(tp, tv, tm, sp, sv, sm, win_idx, win_cnt):
+                gm, gp, gv = _gather(win_idx, win_cnt, w, sm, sp, sv)
+                return jax.vmap(rect1)(tp, tv, gp, gv, gm, tm)
+
+            return branch
+
+        acc, jerk, pot = jax.lax.switch(
+            w_idx, [make_branch(w) for w in w_caps],
+            tp, tv, tm, sp, sv, sm, win_idx, win_cnt)
+        return _unblock(acc), _unblock(jerk), _unblock(pot)
+
+    def near2(pos, vel, acc_t, acc_s, mass, mask_t, win_idx, win_cnt, w_idx):
+        p, v, m = cast(pos), cast(vel), cast(mass)
+        at, as_ = cast(acc_t), cast(acc_s)
+        tm = _blocks_t(jnp.asarray(mask_t, bool))
+        tp, tv, ta = _blocks_t(p), _blocks_t(v), _blocks_t(at)
+        sp, sv, sa, sm = (_blocks_s(p), _blocks_s(v), _blocks_s(as_),
+                          _blocks_s(m))
+
+        def make_branch(w: int):
+            def branch(tp, tv, ta, tm, sp, sv, sa, sm, win_idx, win_cnt):
+                gm, gp, gv, ga = _gather(win_idx, win_cnt, w, sm, sp, sv, sa)
+                return jax.vmap(rect2)(tp, tv, ta, gp, gv, ga, gm, tm)
+
+            return branch
+
+        snp = jax.lax.switch(
+            w_idx, [make_branch(w) for w in w_caps],
+            tp, tv, ta, tm, sp, sv, sa, sm, win_idx, win_cnt)
+        return _unblock(snp)
+
+    return near1, near2
 
 
 def make_evaluator(

@@ -226,6 +226,26 @@ def block_level_occupancy(levels, *, n_levels: int, mask=None):
     return jnp.sum(lev, axis=1).astype(jnp.int32)
 
 
+def tick_threshold_level(tick, *, n_levels: int):
+    """Threshold level of a block-schedule tick:
+    ``n_levels - 1 - trailing_zeros(tick)``.
+
+    A particle is active at ``tick`` iff its level is at least this value
+    (its period ``2**(n_levels - 1 - level)`` divides the tick), so
+    ``block_level_occupancy(levels)[tick_threshold_level(t)]`` is the
+    analytic active-count bound the strategy engine sizes its capacity
+    buckets from — host-side tile scheduling without a runtime gather of
+    the activity mask.  Trace-safe: trailing zeros are counted by modulo
+    tests against the static power-of-two periods (no bit intrinsics), and
+    the macro-boundary tick ``2**(n_levels - 1)`` maps to threshold 0
+    (every particle synchronizes).
+    """
+    t = jnp.asarray(tick, jnp.int32)
+    pows = jnp.asarray([2 ** k for k in range(1, n_levels)], jnp.int32)
+    tz = jnp.sum((t % pows) == 0).astype(jnp.int32)
+    return jnp.asarray(n_levels - 1, jnp.int32) - tz
+
+
 def auto_n_levels(dt_i, *, dt_max, max_levels: int = 8):
     """Hierarchy depth that resolves the tightest of the given Aarseth
     timesteps, clamped to ``[1, max_levels]``.

@@ -436,9 +436,21 @@ def _dense_pass1(pos, vel, ap, mask, kw, src, order):
     return acc, jerk, pot, acc_s
 
 
-def _shard_block_body(pos, vel, ap, mask, src, *, kw, order, compaction,
-                      n_passes):
+def _shard_bucket(plan, bound):
+    """Bucket index from the shard's ``(1,)`` active-count bound (clamped
+    to the local extent, so an over-wide analytic bound still lands on the
+    full-window bucket instead of out of range)."""
+    return plan.bucket(jnp.minimum(bound[0], plan.caps[-1]))
+
+
+def _shard_block_body(pos, vel, ap, mask, bound, src, *, kw, order,
+                      compaction, n_passes):
     """Shared per-shard two-pass block evaluation against resident sources.
+
+    ``bound`` is the shard's ``(1,)`` active-count bound — the measured
+    local count, or the analytic ``hermite.block_level_occupancy`` bound
+    the block engine schedules tiles from (host-side sizing: never below
+    the true active count, so the bucket never underestimates).
 
     Returns (acc, jerk, snp, pot, acc_s, tiles) in the local layout; the
     caller supplies the gather of ``acc_s`` between the passes (the only
@@ -448,7 +460,7 @@ def _shard_block_body(pos, vel, ap, mask, src, *, kw, order, compaction,
     plan = _shard_plan(n_local, n_src, kw, n_passes)
     if compaction == "gather":
         perm = jnp.argsort(~mask, stable=True)
-        cap_idx = plan.bucket(jnp.sum(mask))
+        cap_idx = _shard_bucket(plan, bound)
         acc, jerk, pot, acc_s = _shard_pass1(pos, vel, ap, mask, perm,
                                              cap_idx, plan, kw, src, order)
         tiles = jnp.reshape(plan.tiles(cap_idx), (1,))
@@ -471,9 +483,17 @@ def _resident_snap(pos, vel, acc, mask, src, ga, compacted, kw):
 def _wrap_block(p, eval_padded):
     """Pad N (and the activity mask/predicted acc) to a device multiple,
     evaluate, slice back.  Padding rows carry mask = False (never gathered
-    as targets) and m = 0 (invisible as sources)."""
+    as targets) and m = 0 (invisible as sources).
 
-    def evaluate(pos, vel, acc_pred, mass, mask_t):
+    ``n_bound`` (optional ``(P,)`` int32) is a per-shard active-count bound
+    for the compaction bucket switch — the block engine passes the analytic
+    ``hermite.block_level_occupancy`` bound over each shard's contiguous
+    row chunk (host-side tile scheduling).  ``None`` falls back to the
+    measured per-shard mask sum, which selects the identical bucket (the
+    bound is exact for a schedule-consistent carry) — either way the
+    chosen branch, and therefore the physics, is bit-for-bit unchanged."""
+
+    def evaluate(pos, vel, acc_pred, mass, mask_t, n_bound=None):
         n = pos.shape[0]
         f32 = jnp.float32
         pos32 = jnp.asarray(pos, f32)
@@ -485,7 +505,11 @@ def _wrap_block(p, eval_padded):
         pp, vp, mp = _pad_particles(pos32, vel32, mass32, n_pad)
         app = jnp.pad(ap32, ((0, n_pad - n), (0, 0)))
         mk = jnp.pad(mask, ((0, n_pad - n),))
-        acc, jerk, snp, pot, tiles = eval_padded(pp, vp, app, mp, mk)
+        if n_bound is None:
+            bound = jnp.sum(mk.reshape(p, -1), axis=1).astype(jnp.int32)
+        else:
+            bound = jnp.asarray(n_bound, jnp.int32).reshape(p)
+        acc, jerk, snp, pot, tiles = eval_padded(pp, vp, app, mp, mk, bound)
         return (Evaluation(acc[:n], jerk[:n], snp[:n], pot[:n]), tiles)
 
     return evaluate
@@ -503,19 +527,28 @@ def make_strategy_block_evaluator(
     block_j: int = nbody_force.DEFAULT_BLOCK_J,
     compaction: str = "none",
     dtype: str = "fp32",
+    sources: str = "full",
 ):
     """Distributed active-target evaluator for the block-timestep scheme.
 
     Signature of the returned callable::
 
-        evaluate(pos, vel, acc_pred, mass, mask_t) -> (Evaluation, tiles)
+        evaluate(pos, vel, acc_pred, mass, mask_t, n_bound=None) \
+            -> (Evaluation, tiles)
 
     ``mask_t`` is the (N,) target-activity mask; ``acc_pred`` the predicted
     acceleration of every particle (the snap pass's source operand for
-    inactive rows).  ``tiles`` is the ``(P,)`` vector of kernel grid tiles
-    each shard enqueued for this event (both Hermite passes) — the per-shard
-    launch cost telemetry reports, and the count ``compaction="gather"``
-    shrinks by gathering each shard's local active targets before launch.
+    inactive rows).  ``n_bound``, when given, is a ``(P,)`` host-side upper
+    bound on each shard's active-target count — ``compaction="gather"``
+    sizes its launch bucket from it instead of a runtime mask reduction
+    (ROADMAP 5c host-side tile scheduling; the block scheme's analytic
+    :func:`repro.core.hermite.block_level_occupancy` bound is *exact*, so
+    the selected bucket — and hence the physics and tile count — is
+    identical to the measured path).  ``None`` falls back to measuring.
+    ``tiles`` is the ``(P,)`` vector of kernel grid tiles each shard
+    enqueued for this event (both Hermite passes) — the per-shard launch
+    cost telemetry reports, and the count ``compaction="gather"`` shrinks
+    by gathering each shard's local active targets before launch.
 
     With an all-ones mask and ``compaction="none"`` this reduces to the
     lockstep :func:`make_strategy_evaluator` math; with ``"gather"`` the
@@ -530,6 +563,14 @@ def make_strategy_block_evaluator(
     if compaction not in COMPACTIONS:
         raise ValueError(
             f"compaction must be one of {COMPACTIONS}; got {compaction!r}")
+    if sources not in ops.SOURCES:
+        raise ValueError(f"sources must be one of {ops.SOURCES}; "
+                         f"got {sources!r}")
+    if sources == "neighbor":
+        raise ValueError(
+            "sources='neighbor' runs on the vmapped ensemble block engine "
+            "(strategy='single'); the sharded strategies evaluate full "
+            "sources only")
     devs = np.asarray(devices if devices is not None else jax.devices())
     p = devs.size
     kw = _force_kw(impl, block_i, block_j, eps, dtype)
@@ -555,12 +596,12 @@ def _gathered_block(mesh, order, kw, compaction, n_passes, gather):
     axes = mesh.axis_names
 
     @jax.jit
-    @_smap(mesh, (P(axes),) * 5,
+    @_smap(mesh, (P(axes),) * 6,
            (P(axes), P(axes), P(axes), P(axes), P(axes)), kw["impl"])
-    def eval_padded(pos, vel, ap, mass, mask):
+    def eval_padded(pos, vel, ap, mass, mask, bound):
         src = (gather(pos), gather(vel), gather(mass))
         acc, jerk, pot, acc_s, compacted, tiles = _shard_block_body(
-            pos, vel, ap, mask, src, kw=kw, order=order,
+            pos, vel, ap, mask, bound, src, kw=kw, order=order,
             compaction=compaction, n_passes=n_passes)
         if order >= 6:
             ga = gather(acc_s)  # the one collective between the switches
@@ -598,36 +639,36 @@ def _mesh_sharded_block(mesh, order, kw, compaction, n_passes):
     axes = mesh.axis_names
     sh, rep = P(axes), P()
 
-    @_smap(mesh, (sh, sh, sh, sh, rep, rep, rep),
+    @_smap(mesh, (sh, sh, sh, sh, sh, rep, rep, rep),
            (sh, sh, sh, sh, sh), kw["impl"])
-    def pass1(pos, vel, ap, mask, gp, gv, gm):
+    def pass1(pos, vel, ap, mask, bound, gp, gv, gm):
         acc, jerk, pot, acc_s, _, tiles = _shard_block_body(
-            pos, vel, ap, mask, (gp, gv, gm), kw=kw, order=order,
+            pos, vel, ap, mask, bound, (gp, gv, gm), kw=kw, order=order,
             compaction=compaction, n_passes=n_passes)
         return acc, jerk, pot, acc_s, tiles
 
-    @_smap(mesh, (sh, sh, sh, sh, rep, rep, rep, rep), sh, kw["impl"])
-    def pass2(pos, vel, acc, mask, gp, gv, ga, gm):
+    @_smap(mesh, (sh, sh, sh, sh, sh, rep, rep, rep, rep), sh, kw["impl"])
+    def pass2(pos, vel, acc, mask, bound, gp, gv, ga, gm):
         src = (gp, gv, gm)
         n_local, n_src = pos.shape[0], gp.shape[0]
         plan = _shard_plan(n_local, n_src, kw, n_passes)
         if compaction == "gather":
             # same bucket as pass 1: the local active set did not change
             perm = jnp.argsort(~mask, stable=True)
-            cap_idx = plan.bucket(jnp.sum(mask))
+            cap_idx = _shard_bucket(plan, bound)
             return _shard_pass2(pos, vel, acc, mask, perm, cap_idx, plan,
                                 kw, src, ga)
         return ops.snap_rect(pos, vel, acc, gp, gv, ga, gm,
                              mask_t=mask, **kw)
 
     @jax.jit
-    def eval_padded(pos, vel, ap, mass, mask):
+    def eval_padded(pos, vel, ap, mass, mask, bound):
         # targets arrive sharded, sources replicated — the same arrays bound
         # twice with different specs; the runtime inserts the all-gathers
-        acc, jerk, pot, acc_s, tiles = pass1(pos, vel, ap, mask,
+        acc, jerk, pot, acc_s, tiles = pass1(pos, vel, ap, mask, bound,
                                              pos, vel, mass)
         if order >= 6:
-            snp = pass2(pos, vel, acc, mask, pos, vel, acc_s, mass)
+            snp = pass2(pos, vel, acc, mask, bound, pos, vel, acc_s, mass)
         else:
             snp = jnp.zeros_like(acc)
         return acc, jerk, snp, pot, tiles
@@ -650,9 +691,9 @@ def _ring_block(mesh, order, kw, compaction, n_passes):
             return jax.lax.ppermute(x, axes[0], ring)
 
     @jax.jit
-    @_smap(mesh, (P(axes),) * 5,
+    @_smap(mesh, (P(axes),) * 6,
            (P(axes), P(axes), P(axes), P(axes), P(axes)), kw["impl"])
-    def eval_padded(pos, vel, ap, mass, mask):
+    def eval_padded(pos, vel, ap, mass, mask, bound):
         n_local = pos.shape[0]
         # each of the n_passes sweeps launches once per streamed shard
         plan = _shard_plan(n_local, n_local, kw, n_passes * p)
@@ -665,7 +706,7 @@ def _ring_block(mesh, order, kw, compaction, n_passes):
             # and partial sums accumulate in the window layout (same adds,
             # one scatter at the end)
             perm = jnp.argsort(~mask, stable=True)
-            cap_idx = plan.bucket(jnp.sum(mask))
+            cap_idx = _shard_bucket(plan, bound)
             tiles = jnp.reshape(plan.tiles(cap_idx), (1,))
             cap_max = plan.caps[-1]
             window = ops.compact_targets(perm, cap_max, pos, vel, mask)

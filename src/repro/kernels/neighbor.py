@@ -1,0 +1,199 @@
+"""Neighbor-list construction for the Ahmad-Cohen block scheme.
+
+The Ahmad-Cohen split (``--sources neighbor``) evaluates each target
+block's *regular* (near) force against a small gathered window of source
+blocks at every event, and refreshes the *irregular* (far) remainder on a
+slower power-of-two level.  This module builds those windows:
+
+* :func:`block_bounds` / :func:`block_spheres` — per-block axis-aligned
+  bounding box / bounding sphere (validity-masked) over the contiguous
+  index blocks the kernels tile by;
+* :func:`build_windows` — the neighbor test itself: source block ``J``
+  joins target block ``I``'s window iff the *box-to-box* distance
+  between their AABBs is ``<= r``.  The box distance lower-bounds every
+  particle-pair distance across the two blocks, so a pair inside the
+  neighbor radius is *never* dropped — the Hypothesis property in
+  ``tests/test_neighbor.py`` pins exactly this.  Boxes, not spheres: a
+  sparse halo block legitimately spans a huge cell, and the sphere test
+  ``|c_I - c_J| <= r_I + r_J + r`` would put it in *every* window (its
+  radius covers the cluster) even though its box — ORB cells are
+  disjoint — comes nowhere near most targets.  Windows are returned as
+  a fixed-shape ``(n_blocks_i, n_blocks_j)`` index table whose first
+  ``win_cnt[i]`` entries are the selected source blocks in ascending
+  order (a stable argsort of the boolean test — deterministic,
+  batch-independent);
+* :func:`kd_perm` — the entry-point ordering: balanced orthogonal
+  recursive bisection (median split on the widest extent), so every
+  aligned ``leaf``-row index block is exactly one compact spatial cell.
+  The scheme tiles *index* blocks, so spatial locality of contiguous
+  rows is what makes the bounding spheres tight; a Morton (Z-order)
+  sort (:func:`morton_keys` / :func:`morton_perm`) is kept as the cheap
+  alternative, but its contiguous key runs straddle octant jumps — on
+  centrally concentrated models (Plummer cores with heavy halos) that
+  inflates the median block radius several-fold and the windows with
+  it, which is why ORB is the default.  The physics is
+  permutation-invariant, and entry points apply the sort once at build
+  time (never mid-run — see docs/ensembles.md).
+
+Capacity semantics live in :class:`repro.kernels.ops.CapacityPlan`: the
+gathered window is dispatched over the plan's ``source_caps`` schedule
+(block-aligned powers of two whose *last* bucket is the full padded
+source extent), so a window that outgrows every smaller bucket falls back
+to the full all-pairs window — overflow degrades to the exact result,
+never to silent truncation.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _spread_bits(x: jax.Array) -> jax.Array:
+    """Spread the low 10 bits of ``x`` to every third bit (Morton)."""
+    x = x & jnp.uint32(0x3FF)
+    x = (x | (x << 16)) & jnp.uint32(0xFF0000FF)
+    x = (x | (x << 8)) & jnp.uint32(0x0300F00F)
+    x = (x | (x << 4)) & jnp.uint32(0x030C30C3)
+    x = (x | (x << 2)) & jnp.uint32(0x09249249)
+    return x
+
+
+def morton_keys(pos: jax.Array, valid: jax.Array) -> jax.Array:
+    """Morton (Z-order) key per row: 10 bits per axis, quantized in the
+    valid rows' bounding box.  Invalid rows key to ``0xFFFFFFFF`` (all
+    real keys fit in 30 bits) so a stable sort keeps them last."""
+    v = valid[:, None]
+    lo = jnp.min(jnp.where(v, pos, jnp.inf), axis=0)
+    hi = jnp.max(jnp.where(v, pos, -jnp.inf), axis=0)
+    span = jnp.maximum(hi - lo, jnp.asarray(1e-30, pos.dtype))
+    q = jnp.clip((pos - lo) / span * 1024.0, 0.0, 1023.0).astype(jnp.uint32)
+    key = (_spread_bits(q[:, 0])
+           | (_spread_bits(q[:, 1]) << 1)
+           | (_spread_bits(q[:, 2]) << 2))
+    return jnp.where(valid, key, jnp.uint32(0xFFFFFFFF))
+
+
+def morton_perm(pos: jax.Array, valid: jax.Array) -> jax.Array:
+    """Permutation that Z-orders the valid rows (invalid rows stay last,
+    in their original relative order — the stable-sort tie rule)."""
+    return jnp.argsort(morton_keys(pos, valid), stable=True)
+
+
+def kd_perm(pos: jax.Array, valid: jax.Array, *, leaf: int = 32
+            ) -> jax.Array:
+    """Balanced orthogonal-recursive-bisection (k-d) ordering.
+
+    Recursively halves the row set by the median of its widest coordinate
+    extent until every cell holds ``leaf`` rows, and returns the
+    permutation that lays the cells out contiguously — so every aligned
+    block of ``leaf`` (or any multiple of it) consecutive rows is one
+    compact axis-aligned cell.  This is the classic ORB domain
+    decomposition of parallel N-body codes, applied to *row order*: the
+    neighbor windows test bounding spheres of contiguous index blocks,
+    and median splits keep those spheres tight even in the heavy halo of
+    a centrally concentrated model (where Morton runs go wide).
+
+    Invalid rows key as ``+inf`` at every split, so they migrate to the
+    right half of any cell that contains them and end the recursion as a
+    right-aligned suffix in their original relative order — exactly the
+    padding layout the engines expect (``arange(n) < n_active``).
+
+    ``leaf`` should divide the kernel block sizes that will tile the
+    sorted rows (any divisor keeps blocks cell-aligned); the number of
+    bisection levels is static, derived from ``ceil(n / leaf)``.
+    """
+    n = pos.shape[0]
+    depth = 0
+    while leaf << depth < n:
+        depth += 1
+    p2 = leaf << depth
+    pp = jnp.pad(pos, ((0, p2 - n), (0, 0)))
+    vv = jnp.pad(valid, (0, p2 - n))
+    order = jnp.arange(p2, dtype=jnp.int32)
+    for level in range(depth):
+        cells = order.reshape(1 << level, -1)
+        cp, cv = pp[cells], vv[cells]
+        v3 = cv[..., None]
+        lo = jnp.min(jnp.where(v3, cp, jnp.inf), axis=1)
+        hi = jnp.max(jnp.where(v3, cp, -jnp.inf), axis=1)
+        ext = jnp.where(jnp.any(cv, axis=1)[:, None], hi - lo, 0.0)
+        dim = jnp.argmax(ext, axis=1)
+        key = jnp.take_along_axis(cp, dim[:, None, None], axis=2)[..., 0]
+        key = jnp.where(cv, key, jnp.inf)
+        cperm = jnp.argsort(key, axis=1, stable=True)
+        order = jnp.take_along_axis(cells, cperm, axis=1).reshape(-1)
+    return order[:n]
+
+
+def block_spheres(pos: jax.Array, valid: jax.Array, block: int):
+    """Bounding sphere of every contiguous ``block``-row index block.
+
+    Centers and radii are weighted by the validity mask so zero-position
+    padding rows never inflate a sphere; a block with no valid rows gets
+    a zero-radius sphere at the origin and count 0 (callers must exclude
+    empty blocks from the neighbor test — :func:`build_windows` does).
+
+    Returns ``(centers (nb, 3), radii (nb,), counts (nb,) int32)``.
+    """
+    n = pos.shape[0]
+    nb = -(-n // block)
+    pad = nb * block - n
+    p = jnp.pad(pos, ((0, pad), (0, 0))).reshape(nb, block, 3)
+    w = jnp.pad(valid, ((0, pad),)).reshape(nb, block)
+    cnt = jnp.sum(w, axis=1).astype(jnp.int32)
+    wf = w[..., None].astype(p.dtype)
+    c = jnp.sum(p * wf, axis=1) / jnp.maximum(cnt, 1)[:, None]
+    r = jnp.max(jnp.where(w, jnp.linalg.norm(p - c[:, None, :], axis=-1),
+                          jnp.asarray(0.0, p.dtype)), axis=1)
+    return c, r, cnt
+
+
+def block_bounds(pos: jax.Array, valid: jax.Array, block: int):
+    """Axis-aligned bounding box of every contiguous ``block``-row block.
+
+    Returns ``(lo (nb, 3), hi (nb, 3), counts (nb,) int32)``.  A block
+    with no valid rows gets an inverted box (``lo = +inf, hi = -inf``)
+    whose distance to anything is ``+inf`` — naturally never a neighbor.
+    """
+    n = pos.shape[0]
+    nb = -(-n // block)
+    pad = nb * block - n
+    p = jnp.pad(pos, ((0, pad), (0, 0))).reshape(nb, block, 3)
+    w = jnp.pad(valid, ((0, pad),)).reshape(nb, block)[..., None]
+    lo = jnp.min(jnp.where(w, p, jnp.inf), axis=1)
+    hi = jnp.max(jnp.where(w, p, -jnp.inf), axis=1)
+    cnt = jnp.sum(w[..., 0], axis=1).astype(jnp.int32)
+    return lo, hi, cnt
+
+
+def build_windows(pos: jax.Array, valid: jax.Array, *, block_i: int,
+                  block_j: int, radius: float):
+    """Per-target-block neighbor windows over the source blocks.
+
+    Source block ``J`` is selected for target block ``I`` iff the
+    distance between their bounding boxes is ``<= radius``.  The box
+    distance lower-bounds the distance of every particle pair across the
+    two blocks, so every pair within ``radius`` is covered; unlike the
+    bounding-sphere test it stays tight when block cells are large but
+    disjoint (a sparse halo shell next to a dense core).  Blocks with no
+    valid rows are never selected — their boxes are inverted, at
+    ``+inf`` distance from everything — and an empty *target* block
+    selects nothing (it must not widen the shared capacity bucket).
+
+    Returns ``(win_idx (nbt, nsb) int32, win_cnt (nbt,) int32)``:
+    ``win_idx[i, :win_cnt[i]]`` are the selected source blocks in
+    ascending order; the remaining entries are the unselected blocks
+    (also ascending) so every prefix of the row is a valid gather index.
+    """
+    tlo, thi, tcnt = block_bounds(pos, valid, block_i)
+    slo, shi, scnt = block_bounds(pos, valid, block_j)
+    zero = jnp.zeros((), pos.dtype)
+    gap = jnp.maximum(jnp.maximum(slo[None, :] - thi[:, None],
+                                  tlo[:, None] - shi[None, :]), zero)
+    d = jnp.linalg.norm(gap, axis=-1)
+    nbr = d <= jnp.asarray(radius, d.dtype)
+    nbr &= (scnt > 0)[None, :] & (tcnt > 0)[:, None]
+    win_cnt = jnp.sum(nbr, axis=1).astype(jnp.int32)
+    win_idx = jnp.argsort(~nbr, axis=1, stable=True).astype(jnp.int32)
+    return win_idx, win_cnt

@@ -63,6 +63,14 @@ _COMPUTE_DTYPE = {"fp32": None, "mixed": "bfloat16"}
 _IO_BYTES = {"fp64": 8, "fp32": 4, "mixed": 4}
 _COMPUTE_BYTES = {"fp64": 8, "fp32": 4, "mixed": 2}
 
+# The source axis (--sources): "full" sweeps every launch over the complete
+# source extent (the historical all-pairs path, bit-identical to before the
+# axis existed); "neighbor" is the Ahmad-Cohen split — each target block
+# sweeps only its gathered neighbor window of source blocks at every event,
+# with the far-field remainder refreshed on a slower level (see
+# kernels/neighbor.py and docs/ensembles.md "Neighbor scheme").
+SOURCES = ("full", "neighbor")
+
 
 def compute_dtype_for(dtype: str):
     """Kernel compute dtype for a precision-axis name (None = full fp32).
@@ -208,11 +216,15 @@ class CapacityPlan:
     n_passes: int = 2
     caps: tuple = ()
     dtype: str = "fp32"
+    sources: str = "full"
 
     def __post_init__(self):
         if self.dtype not in DTYPES:
             raise ValueError(
                 f"plan dtype must be one of {DTYPES}, got {self.dtype!r}")
+        if self.sources not in SOURCES:
+            raise ValueError(
+                f"plan sources must be one of {SOURCES}, got {self.sources!r}")
         if not self.caps:
             object.__setattr__(
                 self, "caps", capacity_buckets(self.n_targets, self.block_i))
@@ -233,9 +245,18 @@ class CapacityPlan:
     @property
     def tile_io_bytes(self) -> int:
         """Bytes one (i, j) grid tile stages: the (BI, 8) target block and
-        (8, BJ) source block in, the (BI, 8) output block out."""
-        return (2 * self.block_i * 8 + 8 * self.block_j) \
+        (8, BJ) source block in, the (BI, 8) output block out.
+
+        A ``sources="neighbor"`` plan additionally pays the window gather
+        per tile: the (8, BJ) source block is read from its resident slot
+        and written into the per-target-block gathered window before the
+        kernel streams it — the staging cost the Ahmad-Cohen split trades
+        for sweeping far fewer j-tiles per event."""
+        base = (2 * self.block_i * 8 + 8 * self.block_j) \
             * self.io_bytes_per_element
+        if self.sources == "neighbor":
+            base += 2 * 8 * self.block_j * self.io_bytes_per_element
+        return base
 
     @property
     def tile_vmem_bytes(self) -> int:
@@ -274,6 +295,37 @@ class CapacityPlan:
     def tiles(self, idx) -> jax.Array:
         """Traced lookup: tiles one event enqueues at bucket ``idx``."""
         return jnp.asarray(self.tiles_by_cap, jnp.int32)[idx]
+
+    # -- the source-extent schedule (the Ahmad-Cohen neighbor windows) -----
+    @property
+    def source_caps(self) -> tuple:
+        """Static *source*-extent schedule, in rows: block_j-aligned powers
+        of two up to the padded full source extent — the target-side
+        ``caps`` idea applied to the source axis.  The last bucket **is**
+        the full window, so a neighbor window that outgrows every smaller
+        bucket dispatches the exact all-pairs sweep: overflow falls back to
+        the full window, never to silent truncation (the same
+        never-underestimate semantics as :func:`bucket_index`)."""
+        return capacity_buckets(self.n_sources, self.block_j)
+
+    def source_bucket(self, n_src_rows) -> jax.Array:
+        """Traced index of the smallest source bucket holding
+        ``n_src_rows`` gathered source rows."""
+        return bucket_index(n_src_rows, self.source_caps)
+
+    @property
+    def window_tiles_by_cap(self) -> tuple:
+        """Grid tiles one *neighbor* event enqueues at each source-window
+        capacity (all passes): every target block sweeps its gathered
+        window of ``cap / BJ`` source blocks instead of the full j-extent."""
+        i_tiles = -(-self.n_targets // self.block_i)
+        return tuple(i_tiles * (c // self.block_j) * self.n_passes
+                     for c in self.source_caps)
+
+    def window_tiles(self, idx) -> jax.Array:
+        """Traced lookup: tiles one neighbor event enqueues at source
+        bucket ``idx``."""
+        return jnp.asarray(self.window_tiles_by_cap, jnp.int32)[idx]
 
     def shard(self, n_shards: int) -> "CapacityPlan":
         """The per-shard local plan: each shard compacts its own

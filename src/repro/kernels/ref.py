@@ -74,6 +74,32 @@ def _precision_ops(compute_dtype):
     return rnd, compensated_sum
 
 
+#: pair-count ceiling of one dense rectangle evaluation (~2^26 pairs keeps
+#: the fused (N_t, N_s, 3) temporaries around ~6 GB at fp64).  Larger
+#: rectangles stream row chunks of the *target* side through ``lax.map``:
+#: each output row is a row-local reduction over the full source axis, so
+#: chunking the rows never reorders any sum — rectangles at or under the
+#: ceiling take the historical single-fusion path untouched, and a
+#: 65536-body sweep peaks at the chunk footprint instead of >100 GiB.
+DENSE_PAIR_LIMIT = 1 << 26
+
+
+def _map_row_chunks(fn, targets, n_s):
+    """``fn(*targets)`` evaluated over row chunks of the target-side arrays
+    when the rectangle exceeds :data:`DENSE_PAIR_LIMIT` pairs."""
+    n_t = targets[0].shape[0]
+    if n_t * max(n_s, 1) <= DENSE_PAIR_LIMIT:
+        return fn(*targets)
+    rows = min(n_t, max(1, DENSE_PAIR_LIMIT // n_s))
+    pad = -n_t % rows
+    chunked = tuple(
+        jnp.pad(a, ((0, pad),) + ((0, 0),) * (a.ndim - 1))
+        .reshape((-1, rows) + a.shape[1:]) for a in targets)
+    out = jax.lax.map(lambda xs: fn(*xs), chunked)
+    return jax.tree_util.tree_map(
+        lambda o: o.reshape((-1,) + o.shape[2:])[:n_t], out)
+
+
 def _pairwise_geometry(pos_t, pos_s, eps):
     """Displacements r_ij = r_j - r_i and softened inverse distances.
 
@@ -107,18 +133,22 @@ def acc_jerk_pot_rect(pos_t, vel_t, pos_s, vel_s, mass_s, *,
         acc (N_t, 3), jerk (N_t, 3), pot (N_t,) in ``pos_t.dtype``.
     """
     rnd, sum_ = _precision_ops(compute_dtype)
-    dr, d2, inv_r = _pairwise_geometry(pos_t, pos_s, eps)
-    inv_r3 = inv_r * inv_r * inv_r
-    dv = vel_s[None, :, :] - vel_t[:, None, :]
 
-    t = mass_s[None, :] * inv_r3                    # m_j / d^3
-    rv = jnp.sum(dr * dv, axis=-1)                  # r_ij . v_ij
-    q = -3.0 * rv / jnp.where(d2 > 0, d2, 1.0)      # A_ij * v_r in the paper
+    def dense(pt, vt):
+        dr, d2, inv_r = _pairwise_geometry(pt, pos_s, eps)
+        inv_r3 = inv_r * inv_r * inv_r
+        dv = vel_s[None, :, :] - vt[:, None, :]
 
-    acc = sum_(rnd(t[:, :, None] * dr), axis=1)
-    jerk = sum_(rnd(t[:, :, None] * (dv + q[:, :, None] * dr)), axis=1)
-    pot = -sum_(rnd(mass_s[None, :] * inv_r), axis=1)
-    return acc, jerk, pot
+        t = mass_s[None, :] * inv_r3                 # m_j / d^3
+        rv = jnp.sum(dr * dv, axis=-1)               # r_ij . v_ij
+        q = -3.0 * rv / jnp.where(d2 > 0, d2, 1.0)   # A_ij * v_r in the paper
+
+        acc = sum_(rnd(t[:, :, None] * dr), axis=1)
+        jerk = sum_(rnd(t[:, :, None] * (dv + q[:, :, None] * dr)), axis=1)
+        pot = -sum_(rnd(mass_s[None, :] * inv_r), axis=1)
+        return acc, jerk, pot
+
+    return _map_row_chunks(dense, (pos_t, vel_t), pos_s.shape[0])
 
 
 def acc_jerk_pot(pos, vel, mass, *, eps: float = 1e-7, compute_dtype=None):
@@ -139,23 +169,27 @@ def snap_rect(
     4th order; see DESIGN.md §2.2.
     """
     rnd, sum_ = _precision_ops(compute_dtype)
-    dr, d2, inv_r = _pairwise_geometry(pos_t, pos_s, eps)
-    inv_r3 = inv_r * inv_r * inv_r
-    d2s = jnp.where(d2 > 0, d2, 1.0)
-    dv = vel_s[None, :, :] - vel_t[:, None, :]
-    da = acc_s[None, :, :] - acc_t[:, None, :]
-    mass = mass_s
 
-    t = mass[None, :] * inv_r3
-    alpha = jnp.sum(dr * dv, axis=-1) / d2s
-    beta = (jnp.sum(dv * dv, axis=-1) + jnp.sum(dr * da, axis=-1)) / d2s \
-        + alpha * alpha
+    def dense(pt, vt, at):
+        dr, d2, inv_r = _pairwise_geometry(pt, pos_s, eps)
+        inv_r3 = inv_r * inv_r * inv_r
+        d2s = jnp.where(d2 > 0, d2, 1.0)
+        dv = vel_s[None, :, :] - vt[:, None, :]
+        da = acc_s[None, :, :] - at[:, None, :]
+        mass = mass_s
 
-    p_pair = t[:, :, None] * dr                                   # A0
-    j_pair = t[:, :, None] * dv - 3.0 * alpha[:, :, None] * p_pair  # A1
-    s_pair = t[:, :, None] * da - 6.0 * alpha[:, :, None] * j_pair \
-        - 3.0 * beta[:, :, None] * p_pair                          # A2
-    return sum_(rnd(s_pair), axis=1)
+        t = mass[None, :] * inv_r3
+        alpha = jnp.sum(dr * dv, axis=-1) / d2s
+        beta = (jnp.sum(dv * dv, axis=-1) + jnp.sum(dr * da, axis=-1)) \
+            / d2s + alpha * alpha
+
+        p_pair = t[:, :, None] * dr                                    # A0
+        j_pair = t[:, :, None] * dv - 3.0 * alpha[:, :, None] * p_pair  # A1
+        s_pair = t[:, :, None] * da - 6.0 * alpha[:, :, None] * j_pair \
+            - 3.0 * beta[:, :, None] * p_pair                           # A2
+        return sum_(rnd(s_pair), axis=1)
+
+    return _map_row_chunks(dense, (pos_t, vel_t, acc_t), pos_s.shape[0])
 
 
 def snap(pos, vel, acc, mass, *, eps: float = 1e-7, compute_dtype=None):

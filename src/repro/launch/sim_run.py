@@ -118,6 +118,21 @@ def main(argv=None):
                          "compaction has tiles to drop)")
     ap.add_argument("--block-j", type=int, default=None,
                     help="kernel source-tile columns (block stepper)")
+    ap.add_argument("--sources", default="full",
+                    choices=("full", "neighbor"),
+                    help="block stepper force sources: 'full' (all-pairs, "
+                         "bit-identical to the historical path) or "
+                         "'neighbor' (Ahmad-Cohen split: near force from "
+                         "gathered per-block neighbor windows every event, "
+                         "far field Taylor-predicted between refreshes)")
+    ap.add_argument("--neighbor-radius", type=float, default=0.25,
+                    help="neighbor window radius in simulation length units "
+                         "(--sources neighbor; larger = more exact near "
+                         "force, wider gathers)")
+    ap.add_argument("--refresh-levels", type=int, default=2,
+                    help="far-field refresh cadence: rebuild windows every "
+                         "n_sub >> K ticks of the block hierarchy "
+                         "(--sources neighbor; 0 = once per macro step)")
     ap.add_argument("--eta", type=float, default=0.02)
     ap.add_argument("--order", type=int, default=6, choices=(4, 6))
     ap.add_argument("--strategy", default="single",
@@ -220,7 +235,9 @@ def main(argv=None):
         stepper=args.stepper, dt_max=args.dt_max, n_levels=n_levels,
         compaction=args.compaction, bucket_mode=args.bucket_mode,
         block_i=args.block_i,
-        block_j=args.block_j, eta=args.eta,
+        block_j=args.block_j, sources=args.sources,
+        neighbor_radius=args.neighbor_radius,
+        refresh_levels=args.refresh_levels, eta=args.eta,
         order=args.order, strategy=args.strategy, devices=args.devices,
         impl=args.impl, kernel=args.kernel, dtype=args.dtype,
         mix=mix, pad=pad,
@@ -242,6 +259,7 @@ def main(argv=None):
           f"devices={args.devices} order={args.order} "
           f"stepper={report.get('stepper', 'fixed')} "
           f"dtype={args.dtype}"
+          + (f" sources={args.sources}" if args.sources != "full" else "")
           + (f" kernel={args.kernel}" if args.kernel else ""))
     if mixed:
         print(f"[sim] padded N_max={report['n_bodies']} "

@@ -6,7 +6,8 @@ the file from an anecdote into a trajectory.  This module is the gate over
 it: the newest record is compared against the most recent *comparable*
 earlier record (or an explicit ``--baseline`` file), and CI fails when any
 tracked lower-is-better metric — wall per event, launched tiles, modeled
-EDP, serving seconds-per-request / p99 turnaround — regresses more than
+EDP, the neighbor-scheme wall and |dE/E|, serving seconds-per-request /
+p99 turnaround — regresses more than
 :data:`DEFAULT_THRESHOLD` (20%).
 
 Two refusal rules keep the gate honest:
@@ -175,6 +176,16 @@ def tracked_metrics(record: Dict[str, Any]) -> Dict[str, float]:
         base = f"precision_sweep/{row.get('dtype')}"
         put(f"{base}/wall_per_event_s", row.get("wall_per_event_s"))
         put(f"{base}/de_rel", row.get("de_rel"))
+    for row in record.get("neighbor_sweep") or ():
+        # only the CI-reproducible rows gate (``gate=True``): the large-N
+        # rows exist only in BENCH_NEIGHBOR_FULL=1 local sweeps, and a
+        # tracked metric missing from the next record reads as a regression
+        if not row.get("gate"):
+            continue
+        base = f"neighbor_sweep/n{row.get('n')}"
+        put(f"{base}/wall_per_event_neighbor_s",
+            row.get("wall_per_event_neighbor_s"))
+        put(f"{base}/de_rel_neighbor", row.get("de_rel_neighbor"))
     for row in record.get("serve_throughput") or ():
         # only the server row gates: the one-process-per-request baseline
         # is informational (its wall is dominated by interpreter startup)

@@ -44,6 +44,7 @@ from __future__ import annotations
 import collections
 import dataclasses
 import json
+import math
 import os
 import time
 from typing import Any, Deque, Dict, List, Optional, Tuple
@@ -86,6 +87,9 @@ class ServerConfig:
     compaction: str = "none"         # block pods ("none" | "gather")
     block_i: Optional[int] = None
     block_j: Optional[int] = None
+    sources: str = "full"            # block pods ("full" | "neighbor")
+    neighbor_radius: float = 0.25
+    refresh_levels: int = 2
     devices: int = 1
 
     def validate(self) -> "ServerConfig":
@@ -102,6 +106,16 @@ class ServerConfig:
         if self.dtype not in ops.DTYPES:
             raise ValueError(
                 f"dtype must be one of {ops.DTYPES}; got {self.dtype!r}")
+        if self.sources not in ops.SOURCES:
+            raise ValueError(
+                f"sources must be one of {ops.SOURCES}; got {self.sources!r}")
+        if self.sources == "neighbor" and self.compaction != "none":
+            raise ValueError(
+                "sources='neighbor' gathers its own per-block source "
+                "windows; it composes with compaction='none' only")
+        if self.refresh_levels < 0:
+            raise ValueError(
+                f"refresh_levels={self.refresh_levels} must be >= 0")
         plan = self.plan()
         if self.n_max != plan.caps[-1]:
             raise ValueError(
@@ -251,6 +265,12 @@ class Pod:
         derivatives are bit-identical to a cold ``(1, cap)`` start.
         """
         member = request.spec.build(dtype=self.state_dtype)
+        if self.stepper == "block" and self.cfg.sources == "neighbor":
+            # sort once at admission (row order is carry-aligned and must
+            # never change mid-run) so contiguous index blocks are compact
+            # spatial cells and the member's neighbor windows stay tight
+            member = ens.spatial_sort_state(
+                member, leaf=math.gcd(*self.cfg.tile_shape))
         b1 = ens.stack_states([scenarios.pad_state(member, self.cap)])
         b1 = ens.ensemble_initialize(
             b1, n_active=[request.spec.n], devices=None, **self._engine_kw())
@@ -303,7 +323,9 @@ class Pod:
                 self.batched, t_end=self.t_end, n_events=cfg.chunk_events,
                 dt_max=cfg.dt_max, n_levels=cfg.n_levels, carry=self.carry,
                 eta=cfg.eta, compaction=cfg.compaction,
-                block_i=cfg.block_i, block_j=cfg.block_j, **kw)
+                block_i=cfg.block_i, block_j=cfg.block_j,
+                sources=cfg.sources, neighbor_radius=cfg.neighbor_radius,
+                refresh_levels=cfg.refresh_levels, **kw)
         jax.block_until_ready(self.batched.pos)
         wall = time.perf_counter() - t0
         times = np.asarray(self.batched.time, np.float64)
@@ -345,15 +367,20 @@ class Pod:
             tiles = [float(np.asarray(self.carry.n_tiles)[slot])]
         de_rel = abs(e1 - s.e0) / max(abs(s.e0), np.finfo(np.float64).tiny)
         s.recorder.record_snapshot(steps, t_final, energy=e1, de_rel=de_rel)
+        extra = {"e0": s.e0, "e1": e1, "de_rel": de_rel,
+                 "t_final": t_final, "request_id": s.request_id,
+                 "pod_cap": self.cap,
+                 "admission_latency_s": s.t_admit - s.t_submit,
+                 "turnaround_s": now - s.t_submit}
+        if self.carry is not None and self.carry.nbr is not None:
+            extra["neighbor_refreshes"] = int(
+                np.asarray(self.carry.nbr.n_refresh)[slot])
+            extra["neighbor_overflows"] = int(
+                np.asarray(self.carry.nbr.n_overflow)[slot])
         report = s.recorder.finalize(
             n_bodies=self.cap, ensemble=1, n_devices=max(cfg.devices, 1),
             n_active=[n], per_run_steps=[steps], per_run_pairs=pairs,
-            per_run_tiles=tiles,
-            extra={"e0": s.e0, "e1": e1, "de_rel": de_rel,
-                   "t_final": t_final, "request_id": s.request_id,
-                   "pod_cap": self.cap,
-                   "admission_latency_s": s.t_admit - s.t_submit,
-                   "turnaround_s": now - s.t_submit})
+            per_run_tiles=tiles, extra=extra)
         self.slots[slot] = None
         return report
 
@@ -379,6 +406,19 @@ class Pod:
         bi, bj = cfg.tile_shape
         count_dtype = jax.dtypes.canonicalize_dtype(jnp.float64)
         n_caps = len(ops.CapacityPlan(cap, cap, bi, bj).caps)
+        nbr = None
+        if self.stepper == "block" and cfg.sources == "neighbor":
+            nbt, nsb = -(-cap // bi), -(-cap // bj)
+            nbr = ens.NeighborCarry(
+                win_idx=jnp.zeros((b, nbt, nsb), jnp.int32),
+                win_cnt=jnp.zeros((b, nbt), jnp.int32),
+                acc_far=jnp.zeros((b, cap, 3), self.state_dtype),
+                jerk_far=jnp.zeros((b, cap, 3), self.state_dtype),
+                snap_far=jnp.zeros((b, cap, 3), self.state_dtype),
+                pot_far=jnp.zeros((b, cap), self.state_dtype),
+                t_ref=jnp.full((b,), -1, jnp.int32),
+                n_refresh=jnp.zeros((b,), jnp.int32),
+                n_overflow=jnp.zeros((b,), jnp.int32))
         return ens.BlockCarry(
             t_last=jnp.zeros((b, cap), jnp.int32),
             levels=jnp.zeros((b, cap), jnp.int32),
@@ -386,7 +426,8 @@ class Pod:
             n_pairs=jnp.zeros(b, count_dtype),
             n_events=jnp.zeros(b, jnp.int32),
             n_tiles=jnp.zeros(b, count_dtype),
-            bucket_hits=jnp.zeros((b, n_caps), count_dtype))
+            bucket_hits=jnp.zeros((b, n_caps), count_dtype),
+            nbr=nbr)
 
     def load_tree(self, tree: Dict[str, Any]) -> None:
         self.batched = tree["state"]

@@ -28,6 +28,7 @@ seed's if/elif chain exactly).
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Dict, Mapping, Optional, Tuple
 
@@ -66,6 +67,10 @@ class SimConfig:
     #   groups) | "shared" (batch-shared bucket baseline); gather mode only
     block_i: Optional[int] = None    # kernel tile shape override (block
     block_j: Optional[int] = None    #   stepper; None => kernel defaults)
+    sources: str = "full"            # "full" | "neighbor" (Ahmad-Cohen
+    #   near/far split; block stepper only — see docs/ensembles.md)
+    neighbor_radius: float = 0.25    # AC window radius (simulation length)
+    refresh_levels: int = 2          # far-field refresh: levels below macro
     eta: float = 0.02
     order: int = 6
     strategy: str = "single"
@@ -122,6 +127,33 @@ class SimConfig:
                 "block_i/block_j tile overrides only reach the block "
                 f"stepper's kernels; stepper={stepper!r} would silently "
                 "run at the kernel defaults")
+        if self.sources not in ops.SOURCES:
+            raise ValueError(
+                f"sources must be one of {ops.SOURCES}; "
+                f"got {self.sources!r}")
+        if self.sources == "neighbor":
+            if stepper != "block":
+                raise ValueError(
+                    "sources='neighbor' is the Ahmad-Cohen split of the "
+                    f"block stepper's event loop; stepper={stepper!r} has "
+                    "no regular/irregular levels to split")
+            if self.compaction != "none":
+                raise ValueError(
+                    "sources='neighbor' gathers its own per-block source "
+                    "windows; it composes with compaction='none' only")
+            if self.strategy != "single":
+                raise ValueError(
+                    "sources='neighbor' runs on the vmapped batch engine "
+                    f"only; strategy={self.strategy!r} shards full sources "
+                    "(see docs/ensembles.md)")
+            if self.mix is not None:
+                raise ValueError(
+                    "sources='neighbor' shares one window-capacity bucket "
+                    "across the batch; a mixed-N ensemble would let its "
+                    "widest member size every member's gather")
+        if self.refresh_levels < 0:
+            raise ValueError(
+                f"refresh_levels={self.refresh_levels} must be >= 0")
         if self.n_levels is None and stepper != "block":
             raise ValueError(
                 "n_levels=None (--levels auto) sizes the block hierarchy; "
@@ -143,6 +175,10 @@ class SimConfig:
             meta["compaction"] = self.compaction
             if self.compaction == "gather":
                 meta["bucket_mode"] = self.bucket_mode
+            meta["sources"] = self.sources
+            if self.sources == "neighbor":
+                meta["neighbor_radius"] = self.neighbor_radius
+                meta["refresh_levels"] = self.refresh_levels
         if meta["stepper"] == "adaptive":
             meta["dt_max"] = self.dt_max
         if self.mix is not None:
@@ -570,11 +606,19 @@ class EnsembleRunner(Runner):
         return batched, n_active, runs_meta
 
     def build(self, cfg: SimConfig) -> RunHandle:
-        validate_config(cfg)
+        stepper = validate_config(cfg)
         if cfg.strategy not in STRATEGIES and cfg.strategy != "single":
             raise ValueError(f"unknown strategy {cfg.strategy!r}")
         h = RunHandle(cfg, self.kind)
         batched, n_active, runs_meta = self._batch(cfg)
+        if stepper == "block" and cfg.sources == "neighbor":
+            # sort once at build (row order is carry-aligned for the whole
+            # run) so contiguous index blocks are compact spatial cells and
+            # the gathered neighbor windows stay tight
+            batched = ens.spatial_sort_batched(
+                batched, n_active,
+                leaf=math.gcd(cfg.block_i or nbody_force.DEFAULT_BLOCK_I,
+                              cfg.block_j or nbody_force.DEFAULT_BLOCK_J))
         impl = ens.resolve_eval_impl(cfg.impl, cfg.kernel)
         devices = _device_list(cfg) if cfg.devices > 1 else None
         h.b = ens.batch_size(batched)
@@ -631,6 +675,7 @@ class EnsembleRunner(Runner):
             h.tiles_prev = np.zeros(h.b)
             h.pairs_prev = np.zeros(h.b)
             h.bound_total = 0.0
+            h.nref_prev = h.nov_prev = 0.0
         return h
 
     def _snapshot(self, h: RunHandle, done, t_sim, wall) -> None:
@@ -706,7 +751,9 @@ class EnsembleRunner(Runner):
             dt_max=cfg.dt_max, n_levels=h.n_levels, carry=h.carry,
             eta=cfg.eta, compaction=cfg.compaction,
             bucket_mode=cfg.bucket_mode,
-            block_i=cfg.block_i, block_j=cfg.block_j, **h.kw)
+            block_i=cfg.block_i, block_j=cfg.block_j,
+            sources=cfg.sources, neighbor_radius=cfg.neighbor_radius,
+            refresh_levels=cfg.refresh_levels, **h.kw)
         jax.block_until_ready(h.batched.pos)
         h.done += 1
         ev = np.asarray(h.carry.n_events, np.float64)
@@ -752,6 +799,32 @@ class EnsembleRunner(Runner):
                      "schedule, summed over members)").set(
                 [float(hits) for hits in
                  np.asarray(h.carry.bucket_hits, np.float64).sum(axis=0)])
+        if h.carry.nbr is not None:
+            nbr = h.carry.nbr
+            nref = float(np.asarray(nbr.n_refresh, np.float64).sum())
+            nov = float(np.asarray(nbr.n_overflow, np.float64).sum())
+            reg.counter(
+                "sim.neighbor_refreshes", unit="refreshes",
+                help="Ahmad-Cohen window rebuilds (far-field "
+                     "re-anchors, summed over members)").inc(
+                nref - h.nref_prev)
+            reg.counter(
+                "sim.neighbor_overflow", unit="fallbacks",
+                help="refreshes whose widest active window fit no "
+                     "bucket below the full source extent").inc(
+                nov - h.nov_prev)
+            h.nref_prev, h.nov_prev = nref, nov
+            wc = np.asarray(nbr.win_cnt, np.float64)
+            nsb = nbr.win_idx.shape[-1]
+            blk_valid = (np.arange(wc.shape[1])[None, :]
+                         * h.plan.block_i) \
+                < np.asarray(h.n_active)[:, None]
+            occ_hist = reg.histogram(
+                "sim.neighbor_occupancy", unit="fraction",
+                help="per-target-block neighbor window fraction of "
+                     "the full source extent (sampled per chunk)")
+            for v in (wc[blk_valid] / nsb).tolist():
+                occ_hist.observe(v)
         h.ev_prev, h.tiles_prev, h.pairs_prev = ev, tiles, pairs
         self._snapshot(h, int(np.max(np.asarray(h.carry.n_events))),
                        float(np.min(np.asarray(h.batched.time))),
@@ -788,14 +861,23 @@ class EnsembleRunner(Runner):
                  **({"grid_tiles": per_run_tiles[i]}
                     if per_run_tiles else {})}
                 for i in range(h.b)]
+        extra = {"e0": h.e0.tolist(), "e1": e1.tolist(),
+                 "de_rel": float(de.max()), "t_final": t_final,
+                 "runs": runs}
+        if h.stepper == "block" and h.carry.nbr is not None:
+            nref = np.asarray(h.carry.nbr.n_refresh, np.int64)
+            nov = np.asarray(h.carry.nbr.n_overflow, np.int64)
+            for i, r in enumerate(runs):
+                r["neighbor_refreshes"] = int(nref[i])
+                r["neighbor_overflows"] = int(nov[i])
+            extra["neighbor_refreshes"] = int(nref.sum())
+            extra["neighbor_overflows"] = int(nov.sum())
         return h.recorder.finalize(
             n_bodies=h.n_max, ensemble=h.b, n_devices=max(cfg.devices, 1),
             n_active=h.n_active, per_run_steps=per_run_steps,
             per_run_pairs=per_run_pairs, per_run_tiles=per_run_tiles,
             metrics=obs_metrics.registry().snapshot(),
-            extra={"e0": h.e0.tolist(), "e1": e1.tolist(),
-                   "de_rel": float(de.max()), "t_final": t_final,
-                   "runs": runs})
+            extra=extra)
 
 
 class MixedRunner(EnsembleRunner):
@@ -848,6 +930,10 @@ def run(cfg: SimConfig) -> RunReport:
                 "sim.dtype", unit="enum",
                 help="precision axis of the run's force kernels").set(
                 cfg.dtype)
+            obs_metrics.registry().gauge(
+                "sim.sources", unit="enum",
+                help="force-source mode (full all-pairs vs Ahmad-Cohen "
+                     "neighbor windows)").set(cfg.sources)
             runner = get_runner(resolve_kind(cfg))
             handle = runner.build(cfg)
             while not runner.step(handle):

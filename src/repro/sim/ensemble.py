@@ -44,6 +44,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from typing import List, NamedTuple, Optional, Sequence
 
 import jax
@@ -52,11 +53,12 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import hermite, nbody
-from repro.core.evaluate import make_block_evaluator, make_evaluator
+from repro.core.evaluate import (make_block_evaluator, make_evaluator,
+                                 make_neighbor_block_evaluator)
 from repro.core.hermite import Evaluation
 from repro.core.nbody import ParticleState
 from repro.core.strategies import STRATEGIES, make_batch_mesh
-from repro.kernels import nbody_force, ops
+from repro.kernels import nbody_force, neighbor, ops
 from repro.obs import metrics as obs_metrics
 
 BATCH_AXIS = "ensemble"
@@ -443,6 +445,65 @@ def _block_inner_evaluator(order: int, eps: float, impl: str,
     return make_block_evaluator(impl=impl, dtype=dtype, **kw)
 
 
+def _neighbor_evaluators(n: int, eps: float, impl: str, block_i: int,
+                         block_j: int, dtype: str):
+    """Windowed near-pass evaluator pair for ``sources="neighbor"`` (same
+    impl/precision routing as :func:`_block_inner_evaluator`)."""
+    kw = dict(n=n, eps=eps, block_i=block_i, block_j=block_j)
+    if impl == "fp64" and dtype == "mixed":
+        raise ValueError("impl='fp64' conflicts with dtype='mixed' — the "
+                         "oracle path has no reduced-precision mode")
+    if impl == "fp64" or dtype == "fp64":
+        return make_neighbor_block_evaluator(precision="fp64", **kw)
+    if impl not in ENSEMBLE_IMPLS:
+        raise ValueError(
+            f"ensemble impl must be one of {ENSEMBLE_IMPLS} (the vmappable "
+            f"evaluation paths); got {impl!r}")
+    return make_neighbor_block_evaluator(impl=impl, dtype=dtype, **kw)
+
+
+def _window_pairs(mask, win_cnt, block_i: int, block_j: int, out_dtype):
+    """(B,) gathered interaction rows of one neighbor event: each masked
+    target sweeps its block's ``win_cnt * block_j`` gathered source rows —
+    the measured ``n_pairs`` cost the scheme shrinks from ``active * N``."""
+    b, n = mask.shape
+    nbt = win_cnt.shape[1]
+    pad = nbt * block_i - n
+    per_block = jnp.sum(
+        jnp.pad(mask, ((0, 0), (0, pad))).reshape(b, nbt, block_i), axis=2)
+    return (jnp.sum(per_block * win_cnt, axis=1).astype(out_dtype)
+            * block_j)
+
+
+def spatial_sort_state(state: ParticleState, n_active=None, *,
+                       leaf: int = 32) -> ParticleState:
+    """Spatial sort of one run's rows (padding rows stay last).
+
+    The neighbor scheme windows *contiguous index blocks*, so spatial
+    locality of adjacent rows is what keeps the per-block bounding spheres
+    — and with them the gathered windows — tight.  Rows are laid out by
+    balanced orthogonal recursive bisection (``kernels.neighbor.kd_perm``;
+    ``leaf`` should divide the kernel block sizes), whose aligned blocks
+    are compact cells even in a heavy halo.  The physics is
+    permutation-invariant; entry points apply this once at build/admission
+    time and never mid-run (windows are rebuilt at refreshes, so slowly
+    decaying locality degrades only the *cost*, never the result).
+    """
+    n = state.pos.shape[0]
+    valid = jnp.arange(n) < (n if n_active is None else n_active)
+    perm = neighbor.kd_perm(state.pos, valid, leaf=leaf)
+    return jax.tree_util.tree_map(
+        lambda x: x[perm] if getattr(x, "ndim", 0) >= 1 else x, state)
+
+
+def spatial_sort_batched(batched: ParticleState, n_active=None, *,
+                         leaf: int = 32) -> ParticleState:
+    """Per-member :func:`spatial_sort_state` over a batched state."""
+    na = _as_n_active(batched, n_active)
+    return jax.vmap(
+        functools.partial(spatial_sort_state, leaf=leaf))(batched, na)
+
+
 # --- one block event, member view (shared by the vmapped ensemble engine
 # --- and the single-run strategy engine; statics bound via functools.partial)
 def _macro_levels(s, dt_macro, *, eta, n_levels: int):
@@ -538,6 +599,31 @@ def _event_post(s, ev, live, t_next, active, h, t_last, levels,
     return st1, t_last1, lev1, dt_macro1, dp, live
 
 
+class NeighborCarry(NamedTuple):
+    """Per-batch carry of the Ahmad-Cohen neighbor scheme.
+
+    ``win_idx``/``win_cnt`` are the current neighbor windows (per target
+    block, see ``kernels.neighbor.build_windows``); ``acc_far``/``jerk_far``
+    /``snap_far``/``pot_far`` the far-field Taylor coefficients captured at
+    the last refresh (``far = full - near`` at the refresh anchor, predicted
+    between refreshes as ``a_far(h) = A + h J + h^2/2 S``); ``t_ref`` the
+    ``(B,)`` refresh anchor tick (``-1`` = never refreshed, forces a refresh
+    at the member's next event); ``n_refresh``/``n_overflow`` accumulate
+    refresh events and window-overflow fallbacks (a refresh whose widest
+    window fit no bucket below the full-extent one) for telemetry.
+    """
+
+    win_idx: jax.Array
+    win_cnt: jax.Array
+    acc_far: jax.Array
+    jerk_far: jax.Array
+    snap_far: jax.Array
+    pot_far: jax.Array
+    t_ref: jax.Array
+    n_refresh: jax.Array
+    n_overflow: jax.Array
+
+
 class BlockCarry(NamedTuple):
     """Opaque per-batch carry of the block engine (pass back unchanged).
 
@@ -554,6 +640,10 @@ class BlockCarry(NamedTuple):
     prefixes, so indices align).  All zeros without ``compaction="gather"``;
     the strategy engine carries an empty ``(0,)`` vector (its switch lives
     inside the shards — see ``grid_tiles_per_shard`` for the per-chip view).
+
+    ``nbr`` is the Ahmad-Cohen :class:`NeighborCarry` under
+    ``sources="neighbor"`` and ``None`` (an empty pytree node — existing
+    carries keep their treedef) under the default full-source evaluation.
     """
 
     t_last: jax.Array
@@ -563,6 +653,7 @@ class BlockCarry(NamedTuple):
     n_events: jax.Array
     n_tiles: jax.Array
     bucket_hits: jax.Array
+    nbr: Optional[NeighborCarry] = None
 
 
 #: per-member capacity-bucket dispatch modes of the block engine
@@ -603,7 +694,8 @@ def _bucket_groups(n: int, n_active, block_i: int, block_j: int,
 def _block_engine(order: int, eps: float, impl: str, mesh,
                   eta: float, dt_max: float, n_levels: int,
                   compaction: str, block_i: int, block_j: int,
-                  groups: tuple, dtype: str):
+                  groups: tuple, dtype: str, sources: str = "full",
+                  radius: float = 0.25, refresh_levels: int = 2):
     """Hierarchical block-timestep engine (Aarseth dt -> power-of-two levels).
 
     Time is organized in **macro-steps** of ``dt_macro = min(dt_max,
@@ -628,6 +720,23 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
     synchronization point: every particle is active there, levels are
     requantized from scratch, and per-member diagnostics (energy, virial)
     are exact.
+
+    ``sources="neighbor"`` is the **Ahmad-Cohen split** of the same event
+    loop: the force on each event's active block is the *near* sum over its
+    target blocks' gathered neighbor windows plus a Taylor-*predicted* far
+    field.  Far coefficients are captured at **refresh events** — the full
+    evaluation minus the near sum over the freshly built windows, both at
+    the refresh anchor's predicted positions — and a member refreshes when
+    ``refresh_levels`` irregular levels have elapsed since its anchor
+    (``t_next - t_ref >= n_sub >> refresh_levels``), at every macro
+    synchronization, and at its first event.  Windows come from
+    ``kernels.neighbor.build_windows`` (bounding-sphere test with
+    ``radius``; no pair within the radius is ever dropped) and dispatch
+    over the plan's ``source_caps`` schedule, whose last bucket is the full
+    source extent — overflow falls back to the exact full window, never to
+    truncation.  Refresh-event members get the full evaluation itself
+    (prediction horizon zero), so macro boundaries remain exact
+    synchronization points.
     """
     _count_engine_build("block")
     if compaction == "gather":
@@ -730,8 +839,200 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
                             + jnp.where(live[:, None], hits_event, 0.0))
             return (_constrain(s1, mesh), c1), None
 
-        (batched, carry), _ = jax.lax.scan(body, (batched, carry), None,
-                                           length=n_events)
+        step_body = body
+        if sources == "neighbor":
+            near1, near2 = _neighbor_evaluators(n, eps, impl, block_i,
+                                                block_j, dtype)
+            nplan = ops.CapacityPlan(n, n, block_i, block_j,
+                                     n_passes=n_passes, dtype=dtype,
+                                     sources="neighbor")
+            src_caps = nplan.source_caps
+            refresh_period = max(1, n_sub >> refresh_levels)
+            state_dtype = batched.pos.dtype
+
+            def neighbor_body(acc, _):
+                s, c = acc
+                nb = c.nbr
+                with jax.named_scope("event.pre"):
+                    live, t_next, active, h, xp, vp, ap, _ = jax.vmap(
+                        member_pre, in_axes=(0, 0, 0, 0, 0, 0))(
+                            s, c.t_last, c.levels, c.dt_macro, n_active,
+                            t_end)
+                need = live & ((nb.t_ref < 0)
+                               | (t_next - nb.t_ref >= refresh_period)
+                               | (t_next == n_sub))
+                real = jnp.arange(n)[None, :] < n_active[:, None]
+                cd = count_dtype
+                zero = jnp.zeros((), cd)
+
+                def near_total(mask, win_idx, win_cnt, w_idx):
+                    """Near(windows) + NM08-predicted far, every member.
+
+                    The far anchor never moves inside this event (the
+                    refresh branch *replaces* it), so the same prediction
+                    serves both the acc operands and the returned
+                    Evaluation; members whose result the caller discards
+                    (refreshing ones) just ride the vmap.
+                    """
+                    a_n, j_n, p_n = jax.vmap(
+                        near1, in_axes=(0, 0, 0, 0, 0, 0, None))(
+                            xp, vp, s.mass, mask, win_idx, win_cnt, w_idx)
+                    hf = ((t_next - jnp.maximum(nb.t_ref, 0))
+                          .astype(state_dtype) * c.dt_macro / n_sub)
+                    h1 = hf[:, None, None]
+                    a_far = (nb.acc_far + h1 * nb.jerk_far
+                             + (0.5 * h1 * h1) * nb.snap_far)
+                    acc_t = a_n.astype(state_dtype) + a_far
+                    if order >= 6:
+                        acc_s = jnp.where(mask[..., None], acc_t, ap)
+                        s_n = jax.vmap(
+                            near2, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None))(
+                                xp, vp, acc_t, acc_s, s.mass, mask,
+                                win_idx, win_cnt, w_idx)
+                        snp = s_n.astype(state_dtype) + nb.snap_far
+                    else:
+                        snp = jnp.zeros_like(acc_t)
+                    return Evaluation(
+                        acc=acc_t,
+                        jerk=(j_n.astype(state_dtype) + nb.jerk_far
+                              + h1 * nb.snap_far),
+                        snap=snp,
+                        pot=p_n.astype(state_dtype) + nb.pot_far)
+
+                zi = jnp.zeros_like(nb.t_ref)
+                # the gathered window width of one event is shared by every
+                # launched target block, so size it over the blocks that
+                # hold *active* targets: the frequently stepping core has
+                # tight windows, while a sparse halo block's full-extent
+                # window only widens the (rare) events that step it — the
+                # Ahmad-Cohen economics at block granularity
+                npad_i = nb.win_cnt.shape[1] * block_i - n
+                act_blk = jnp.any(jnp.pad(active, ((0, 0), (0, npad_i)))
+                                  .reshape(active.shape[0], -1, block_i),
+                                  axis=2)
+
+                def no_refresh(_):
+                    wmax = jnp.max(jnp.where(live[:, None] & act_blk,
+                                             nb.win_cnt, 0))
+                    w_idx = nplan.source_bucket(wmax * block_j)
+                    ev = near_total(active, nb.win_idx, nb.win_cnt, w_idx)
+                    dp = jnp.where(live, _window_pairs(
+                        active, nb.win_cnt, block_i, block_j, cd), zero)
+                    tiles = jnp.where(
+                        live, nplan.window_tiles(w_idx).astype(cd), zero)
+                    return (ev, nb.win_idx, nb.win_cnt, nb.acc_far,
+                            nb.jerk_far, nb.snap_far, nb.pot_far, nb.t_ref,
+                            zi, zi, dp, tiles)
+
+                def do_refresh(_):
+                    # members keeping their anchor still need this event's
+                    # near force over their OLD windows (bucket sized over
+                    # them alone — an all-refresh event launches the
+                    # cheapest bucket and discards it)
+                    keep = live & ~need
+                    wmax_o = jnp.max(jnp.where(keep[:, None] & act_blk,
+                                               nb.win_cnt, 0))
+                    w_old = nplan.source_bucket(wmax_o * block_j)
+                    ev_o = near_total(active, nb.win_idx, nb.win_cnt, w_old)
+                    # refresh anchor: full force at the event's predicted
+                    # positions; new windows from the same positions; far =
+                    # full - near with IDENTICAL acc operands in both
+                    with jax.named_scope("event.neighbor_refresh"):
+                        ev_f = jax.vmap(bev)(xp, vp, ap, s.mass, real)
+                    win_idx_n, win_cnt_n = jax.vmap(
+                        lambda p_, v_: neighbor.build_windows(
+                            p_, v_, block_i=block_i, block_j=block_j,
+                            radius=radius))(xp, real)
+                    wmax_n = jnp.max(jnp.where(need[:, None],
+                                               win_cnt_n, 0))
+                    w_new = nplan.source_bucket(wmax_n * block_j)
+                    a_nn, j_nn, p_nn = jax.vmap(
+                        near1, in_axes=(0, 0, 0, 0, 0, 0, None))(
+                            xp, vp, s.mass, real, win_idx_n, win_cnt_n,
+                            w_new)
+                    af = ev_f.acc.astype(state_dtype)
+                    jf = ev_f.jerk.astype(state_dtype)
+                    pf = ev_f.pot.astype(state_dtype)
+                    if order >= 6:
+                        acc_s = jnp.where(real[..., None], af, ap)
+                        s_nn = jax.vmap(
+                            near2, in_axes=(0, 0, 0, 0, 0, 0, 0, 0, None))(
+                                xp, vp, af, acc_s, s.mass, real,
+                                win_idx_n, win_cnt_n, w_new)
+                        sf = ev_f.snap.astype(state_dtype)
+                        snapf_n = sf - s_nn.astype(state_dtype)
+                        snap_ev = jnp.where(need[:, None, None], sf,
+                                            ev_o.snap)
+                    else:
+                        snapf_n = jnp.zeros_like(af)
+                        snap_ev = jnp.zeros_like(af)
+                    sel3, sel2 = need[:, None, None], need[:, None]
+                    ev = Evaluation(
+                        acc=jnp.where(sel3, af, ev_o.acc),
+                        jerk=jnp.where(sel3, jf, ev_o.jerk),
+                        snap=snap_ev,
+                        pot=jnp.where(sel2, pf, ev_o.pot))
+                    tref = jnp.where(
+                        need, jnp.where(t_next == n_sub, 0, t_next),
+                        nb.t_ref)
+                    if len(src_caps) > 1:
+                        rows = jnp.max(win_cnt_n, axis=1) * block_j
+                        dov = (need & (rows > src_caps[-2])).astype(
+                            jnp.int32)
+                    else:
+                        dov = zi  # one bucket == the full window already
+                    na_f = n_active.astype(cd)
+                    dp = jnp.where(live, jnp.where(
+                        need,
+                        na_f * na_f + _window_pairs(real, win_cnt_n,
+                                                    block_i, block_j, cd),
+                        _window_pairs(active, nb.win_cnt, block_i, block_j,
+                                      cd)), zero)
+                    tiles = jnp.where(live, jnp.where(
+                        need,
+                        jnp.asarray(full_tiles, cd)
+                        + nplan.window_tiles(w_new).astype(cd),
+                        nplan.window_tiles(w_old).astype(cd)), zero)
+                    return (
+                        ev,
+                        jnp.where(sel3, win_idx_n, nb.win_idx),
+                        jnp.where(sel2, win_cnt_n, nb.win_cnt),
+                        jnp.where(sel3, af - a_nn.astype(state_dtype),
+                                  nb.acc_far),
+                        jnp.where(sel3, jf - j_nn.astype(state_dtype),
+                                  nb.jerk_far),
+                        jnp.where(sel3, snapf_n, nb.snap_far),
+                        jnp.where(sel2, pf - p_nn.astype(state_dtype),
+                                  nb.pot_far),
+                        tref, need.astype(jnp.int32), dov, dp, tiles)
+
+                with jax.named_scope("event.neighbor"):
+                    (ev, wi, wc, accf, jerkf, snapf, potf, tref, dref,
+                     dov, dp, tiles) = jax.lax.cond(
+                        jnp.any(need), do_refresh, no_refresh, None)
+                with jax.named_scope("event.post"):
+                    s1, t_last, levels, dt_macro, _, live = jax.vmap(
+                        member_post,
+                        in_axes=(0, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0))(
+                            s, ev, live, t_next, active, h, c.t_last,
+                            c.levels, c.dt_macro, n_active, t_end)
+                c1 = BlockCarry(
+                    t_last=t_last, levels=levels, dt_macro=dt_macro,
+                    n_pairs=c.n_pairs + dp,
+                    n_events=c.n_events + live.astype(jnp.int32),
+                    n_tiles=c.n_tiles + tiles,
+                    bucket_hits=c.bucket_hits,
+                    nbr=NeighborCarry(
+                        win_idx=wi, win_cnt=wc, acc_far=accf,
+                        jerk_far=jerkf, snap_far=snapf, pot_far=potf,
+                        t_ref=tref, n_refresh=nb.n_refresh + dref,
+                        n_overflow=nb.n_overflow + dov))
+                return (_constrain(s1, mesh), c1), None
+
+            step_body = neighbor_body
+
+        (batched, carry), _ = jax.lax.scan(step_body, (batched, carry),
+                                           None, length=n_events)
         return batched, carry
 
     @jax.jit
@@ -743,12 +1044,29 @@ def _block_engine(order: int, eps: float, impl: str, mesh,
         # float32's 2**24 window; silently float32 when x64 is disabled)
         count_dtype = jax.dtypes.canonicalize_dtype(jnp.float64)
         n_caps = len(ops.CapacityPlan(n, n, block_i, block_j).caps)
+        nbr = None
+        if sources == "neighbor":
+            # t_ref = -1 forces a refresh at every member's first event, so
+            # the zeroed windows/coefficients here are never consumed
+            sd = batched.pos.dtype
+            nbt, nsb = -(-n // block_i), -(-n // block_j)
+            nbr = NeighborCarry(
+                win_idx=jnp.zeros((b, nbt, nsb), jnp.int32),
+                win_cnt=jnp.zeros((b, nbt), jnp.int32),
+                acc_far=jnp.zeros((b, n, 3), sd),
+                jerk_far=jnp.zeros((b, n, 3), sd),
+                snap_far=jnp.zeros((b, n, 3), sd),
+                pot_far=jnp.zeros((b, n), sd),
+                t_ref=jnp.full((b,), -1, jnp.int32),
+                n_refresh=jnp.zeros((b,), jnp.int32),
+                n_overflow=jnp.zeros((b,), jnp.int32))
         return BlockCarry(
             t_last=t_last, levels=levels, dt_macro=dt_macro,
             n_pairs=jnp.zeros(b, count_dtype),
             n_events=jnp.zeros(b, jnp.int32),
             n_tiles=jnp.zeros(b, count_dtype),
-            bucket_hits=jnp.zeros((b, n_caps), count_dtype))
+            bucket_hits=jnp.zeros((b, n_caps), count_dtype),
+            nbr=nbr)
 
     return init, run
 
@@ -771,6 +1089,9 @@ def ensemble_run_block(
     bucket_mode: str = "member",
     block_i: Optional[int] = None,
     block_j: Optional[int] = None,
+    sources: str = "full",
+    neighbor_radius: float = 0.25,
+    refresh_levels: int = 2,
     devices: Optional[Sequence[jax.Device]] = None,
 ):
     """Advance an initialized batch by up to ``n_events`` block events each.
@@ -799,9 +1120,28 @@ def ensemble_run_block(
     ``block_i``/``block_j`` override the kernel tile shape (default: the
     kernel's own); the compaction win is bounded by ``N / block_i``, so
     small-N runs want a smaller ``block_i`` than the all-pairs default.
+
+    ``sources="neighbor"`` switches the force evaluation to the
+    Ahmad-Cohen near/far split (see :func:`_block_engine`):
+    ``neighbor_radius`` is the bounding-sphere window radius in simulation
+    length units, ``refresh_levels`` how many levels below the macro the
+    far-field refresh cadence sits (refresh every ``n_sub >>
+    refresh_levels`` ticks).  The batch should be Morton-sorted first
+    (:func:`spatial_sort_batched`; the convenience entry points do it) so
+    index blocks are spatially tight.  ``sources="full"`` is bit-identical
+    to the pre-neighbor engine.
     """
     if n_levels < 1:
         raise ValueError(f"n_levels={n_levels} must be >= 1")
+    if sources not in ops.SOURCES:
+        raise ValueError(
+            f"sources must be one of {ops.SOURCES}; got {sources!r}")
+    if sources == "neighbor" and compaction != "none":
+        raise ValueError(
+            "sources='neighbor' gathers its own per-block source windows; "
+            "it composes with compaction='none' only")
+    if refresh_levels < 0:
+        raise ValueError(f"refresh_levels={refresh_levels} must be >= 0")
     # an unknown compaction mode fails in make_block_evaluator (same
     # ValueError) when the engine is first built — no duplicate check here
     mesh = _batch_mesh(devices)
@@ -822,7 +1162,8 @@ def ensemble_run_block(
                             bucket_mode)
     init, run = _block_engine(
         order, eps, impl, mesh, eta, dt_max, n_levels, compaction,
-        bi, bj, groups, dtype)
+        bi, bj, groups, dtype, sources, float(neighbor_radius),
+        refresh_levels)
     if carry is None:
         carry = init(padded, na, t_end_)
     out, carry = run(padded, carry, na, t_end_, n_events)
@@ -848,6 +1189,21 @@ def block_admit_member(carry: BlockCarry, member: ParticleState, slot: int,
     t_last, levels, dt_macro = _event_init(
         member, member.pos.shape[0], t_end_, eta=eta, dt_max=dt_max,
         n_levels=n_levels)
+    nbr = carry.nbr
+    if nbr is not None:
+        # t_ref = -1 forces the new member to refresh (and rebuild its
+        # windows) at its first event; the retiring run's far field and
+        # neighbor telemetry never bleed into its successor
+        nbr = NeighborCarry(
+            win_idx=nbr.win_idx.at[slot].set(0),
+            win_cnt=nbr.win_cnt.at[slot].set(0),
+            acc_far=nbr.acc_far.at[slot].set(0),
+            jerk_far=nbr.jerk_far.at[slot].set(0),
+            snap_far=nbr.snap_far.at[slot].set(0),
+            pot_far=nbr.pot_far.at[slot].set(0),
+            t_ref=nbr.t_ref.at[slot].set(-1),
+            n_refresh=nbr.n_refresh.at[slot].set(0),
+            n_overflow=nbr.n_overflow.at[slot].set(0))
     return BlockCarry(
         t_last=carry.t_last.at[slot].set(t_last),
         levels=carry.levels.at[slot].set(levels),
@@ -856,7 +1212,8 @@ def block_admit_member(carry: BlockCarry, member: ParticleState, slot: int,
         n_events=carry.n_events.at[slot].set(0),
         n_tiles=carry.n_tiles.at[slot].set(0),
         bucket_hits=carry.bucket_hits.at[slot].set(0)
-        if carry.bucket_hits.ndim == 2 else carry.bucket_hits)
+        if carry.bucket_hits.ndim == 2 else carry.bucket_hits,
+        nbr=nbr)
 
 
 def evolve_ensemble_block(
@@ -876,16 +1233,27 @@ def evolve_ensemble_block(
     bucket_mode: str = "member",
     block_i: Optional[int] = None,
     block_j: Optional[int] = None,
+    sources: str = "full",
+    neighbor_radius: float = 0.25,
+    refresh_levels: int = 2,
     devices: Optional[Sequence[jax.Device]] = None,
     n_events: int = 256,
     max_chunks: int = 100_000,
 ):
     """One-shot block-timestep convenience: stack, initialize, evolve to
     ``t_end``.  Returns ``(batched, carry)`` (see
-    :func:`ensemble_run_block`)."""
+    :func:`ensemble_run_block`).  ``sources="neighbor"`` ORB-sorts the
+    batch (``spatial_sort_batched``) before the bootstrap so the neighbor
+    windows see spatially tight index blocks; the returned batch is in
+    that sorted order."""
     impl = resolve_eval_impl(impl, kernel)
     batched = states if isinstance(states, ParticleState) else \
         stack_states(list(states))
+    if sources == "neighbor":
+        bi = block_i or nbody_force.DEFAULT_BLOCK_I
+        bj = block_j or nbody_force.DEFAULT_BLOCK_J
+        batched = spatial_sort_batched(batched, n_active,
+                                       leaf=math.gcd(bi, bj))
     kw = dict(n_active=n_active, order=order, eps=eps, impl=impl,
               dtype=dtype, devices=devices)
     batched = ensemble_initialize(batched, **kw)
@@ -894,7 +1262,9 @@ def evolve_ensemble_block(
         batched, carry = ensemble_run_block(
             batched, t_end=t_end, n_events=n_events, dt_max=dt_max,
             n_levels=n_levels, carry=carry, eta=eta, compaction=compaction,
-            bucket_mode=bucket_mode, block_i=block_i, block_j=block_j, **kw)
+            bucket_mode=bucket_mode, block_i=block_i, block_j=block_j,
+            sources=sources, neighbor_radius=neighbor_radius,
+            refresh_levels=refresh_levels, **kw)
         if float(jnp.min(batched.time)) >= t_end:
             break
     return batched, carry
@@ -908,7 +1278,8 @@ def _strategy_block_engine(strategy: str, n_devices: int,
                            chips_per_card: int, order: int, eps: float,
                            impl: str, eta: float, dt_max: float,
                            n_levels: int, compaction: str,
-                           block_i: int, block_j: int, dtype: str):
+                           block_i: int, block_j: int, dtype: str,
+                           sources: str = "full"):
     """Block-timestep engine whose force evaluation is *distributed* over a
     device mesh instead of vmapped over a batch: one run, its domain sharded
     by one of the paper's strategies, each shard compacting its own local
@@ -918,6 +1289,16 @@ def _strategy_block_engine(strategy: str, n_devices: int,
     (:func:`_event_pre` / :func:`_event_post`), so the event schedule — and
     with it the committed block golden trajectory — is identical; only the
     evaluator (and the per-*shard* tile accounting in the carry) differs.
+
+    Capacity buckets are sized **host-side** (ROADMAP 5c): each event's
+    per-shard launch extent comes from the analytic
+    ``block_level_occupancy`` bound at the tick's threshold level — no
+    runtime gather of the activity mask feeds the bucket switch.  A
+    particle at level ``l`` steps at exactly the multiples of its period
+    (promotion is commensurate, demotion lands on doubled-period ticks),
+    so the tick's active set IS ``{level >= threshold}`` and the bound
+    equals the measured count — identical buckets, tiles, and physics
+    (``test_obs_metrics.py`` pins ``launched <= bound-sized <= dense``).
     """
     from repro.core.strategies import make_strategy_block_evaluator
 
@@ -926,7 +1307,7 @@ def _strategy_block_engine(strategy: str, n_devices: int,
     bev = make_strategy_block_evaluator(
         strategy, devices=devs, chips_per_card=chips_per_card, eps=eps,
         order=order, impl=impl, block_i=block_i, block_j=block_j,
-        compaction=compaction, dtype=dtype)
+        compaction=compaction, dtype=dtype, sources=sources)
     n_sub = 2 ** (n_levels - 1)
     event_init = functools.partial(_event_init, eta=eta, dt_max=dt_max,
                                    n_levels=n_levels)
@@ -948,7 +1329,19 @@ def _strategy_block_engine(strategy: str, n_devices: int,
             # the shard-local permutations live inside the shards — the
             # global argsort from event_pre is not used here
             with jax.named_scope("event.force"):
-                ev, tiles = bev(xp, vp, ap, s.mass, active)
+                # host-side bucket sizing: padded rows carry level -1, so
+                # each shard's contiguous chunk counts only real particles
+                # at or above the tick's threshold level
+                thr = hermite.tick_threshold_level(t_next,
+                                                   n_levels=n_levels)
+                n_pad = -(-n // n_devices) * n_devices
+                lev_pad = jnp.pad(c.levels, (0, n_pad - n),
+                                  constant_values=-1)
+                bound = jax.vmap(
+                    lambda lv: hermite.block_level_occupancy(
+                        lv, n_levels=n_levels)[thr]
+                )(lev_pad.reshape(n_devices, -1))
+                ev, tiles = bev(xp, vp, ap, s.mass, active, bound)
             with jax.named_scope("event.post"):
                 s1, t_last, levels, dt_macro, dp, live = event_post(
                     s, ev, live, t_next, active, h, c.t_last, c.levels,
@@ -1008,11 +1401,15 @@ def strategy_run_block(
     compaction: str = "none",
     block_i: Optional[int] = None,
     block_j: Optional[int] = None,
+    sources: str = "full",
     devices=None,
 ):
     """Advance ONE initialized run by up to ``n_events`` block events, the
     force evaluation distributed by ``strategy`` over ``devices`` (an int
     count, a device sequence, or None for all visible devices).
+    ``sources`` is validated by the strategy evaluator — the sharded
+    strategies evaluate full sources only (``"neighbor"`` runs on the
+    ensemble engine, strategy ``"single"``).
 
     Returns ``(state, carry)`` like :func:`ensemble_run_block`, except the
     carry's scalar leaves are unbatched and ``carry.n_tiles`` is the
@@ -1027,7 +1424,7 @@ def strategy_run_block(
         strategy, _n_devices(devices), chips_per_card, order, eps, impl,
         eta, dt_max, n_levels, compaction,
         block_i or nbody_force.DEFAULT_BLOCK_I,
-        block_j or nbody_force.DEFAULT_BLOCK_J, dtype)
+        block_j or nbody_force.DEFAULT_BLOCK_J, dtype, sources)
     t_end_ = jnp.asarray(t_end, state.pos.dtype)
     if carry is None:
         carry = init(state, t_end_)

@@ -69,6 +69,20 @@ CASES = {
         compaction="gather", block_i=8, block_j=128,
         dt_max=1.0 / 64, n_levels=4, t_end=0.0625, eta=0.02, order=6,
         eps=1e-7),
+    # Ahmad-Cohen neighbor split (sources="neighbor"): near force from
+    # gathered per-block windows, far field NM08-predicted between level
+    # refreshes.  The fp64 oracle pins the split itself (window build, far
+    # capture, prediction blend) — the recorded positions are in the
+    # engine's ORB-sorted row order, pos0 in build order.  The radius is
+    # chosen so windows are real subsets (some blocks see all sources,
+    # some few): both gather paths and the fallback-free steady state get
+    # exercised.
+    "binary_plummer_neighbor.json": dict(
+        scenario="binary_plummer", n=64, seed=1, mode="block",
+        sources="neighbor", neighbor_radius=0.5, refresh_levels=2,
+        block_i=16, block_j=16,
+        dt_max=1.0 / 64, n_levels=4, t_end=0.0625, eta=0.02, order=6,
+        eps=1e-7),
 }
 
 
@@ -83,10 +97,13 @@ def integrate(meta: dict):
             block_j=meta["block_j"], devices=meta["devices"])
         return state, out, int(carry.n_events)
     if meta.get("mode") == "block":
+        kw = {k: meta[k] for k in ("sources", "neighbor_radius",
+                                   "refresh_levels", "block_i", "block_j")
+              if k in meta}
         batched, carry = ens.evolve_ensemble_block(
             [state], t_end=meta["t_end"], dt_max=meta["dt_max"],
             n_levels=meta["n_levels"], eta=meta["eta"], order=meta["order"],
-            eps=meta["eps"], impl="fp64")
+            eps=meta["eps"], impl="fp64", **kw)
         out = jax.tree_util.tree_map(lambda x: x[0], batched)
         return state, out, int(carry.n_events[0])
     ev = make_evaluator(precision="fp64", order=meta["order"],

@@ -66,6 +66,32 @@ def test_snap_matches_ref(n, block_i, block_j):
     np.testing.assert_allclose(s_k, s_r, rtol=5e-4, atol=5e-4)
 
 
+def test_row_chunked_rect_matches_dense(monkeypatch):
+    """Above ``DENSE_PAIR_LIMIT`` the oracle streams target-row chunks
+    through ``lax.map`` instead of fusing one (N_t, N_s) rectangle (the
+    memory wall a 65536-body sweep hits at >100 GiB).  Row chunking never
+    reorders a row-local source reduction, so the chunked results must
+    match the dense path to reduction-vectorization rounding — and be
+    shape-exact through padding (n_t not a multiple of the chunk rows)."""
+    pt, vt, _ = _cloud(100, seed=1)
+    at = jnp.asarray(np.random.default_rng(3).standard_normal((100, 3)), F32)
+    ps, vs, ms = _cloud(64, seed=2)
+    dense = ref.acc_jerk_pot_rect(pt, vt, ps, vs, ms)
+    dense_s = ref.snap_rect(pt, vt, at, ps, vs, at[:64], ms)
+    monkeypatch.setattr(ref, "DENSE_PAIR_LIMIT", 1 << 9)  # 8-row chunks
+    chunked = ref.acc_jerk_pot_rect(pt, vt, ps, vs, ms)
+    chunked_s = ref.snap_rect(pt, vt, at, ps, vs, at[:64], ms)
+    for d, c in zip(dense + (dense_s,), chunked + (chunked_s,)):
+        assert d.shape == c.shape
+        np.testing.assert_allclose(np.asarray(c), np.asarray(d),
+                                   rtol=1e-6, atol=1e-6)
+    # under vmap (the batched ensemble engines) chunking lowers via scan
+    bat = jax.vmap(lambda p, v: ref.acc_jerk_pot_rect(p, v, ps, vs, ms))
+    a_b, _, _ = bat(jnp.stack([pt, pt]), jnp.stack([vt, vt]))
+    np.testing.assert_allclose(np.asarray(a_b[0]), np.asarray(chunked[0]),
+                               rtol=0, atol=0)
+
+
 def test_zero_mass_padding_is_exact():
     """Padding particles carry m=0 => exactly zero contribution."""
     pos, vel, mass = _cloud(200)

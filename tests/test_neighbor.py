@@ -1,0 +1,302 @@
+"""Ahmad-Cohen neighbor scheme: windows, ordering, capacity, physics.
+
+The load-bearing invariant is **coverage**: source block J joins target
+block I's window whenever the box-to-box distance of their AABBs is within
+the neighbor radius, and the box distance lower-bounds every cross-block
+pair distance — so no pair inside the radius is ever evaluated through the
+(approximate) far field.  The property is pinned twice: a deterministic
+seeded grid that always runs, and a Hypothesis search over the same check
+when the package is available (the grid is the floor, not the ceiling).
+Alongside: the ORB ordering is a valid permutation that preserves the
+padding suffix, window capacity never truncates (overflow degrades to the
+exact full-window result), and the split trajectory agrees with all-pairs
+evaluation within the far-field prediction tier.
+"""
+
+import math
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    import hypothesis
+    import hypothesis.strategies as st
+    from hypothesis import given, settings
+    HAVE_HYPOTHESIS = True
+    COMMON = dict(deadline=None, max_examples=20,
+                  suppress_health_check=[hypothesis.HealthCheck.too_slow])
+except ImportError:          # the container may not ship hypothesis
+    HAVE_HYPOTHESIS = False
+
+from repro.kernels import neighbor, ops
+from repro.sim import ensemble as ens
+from repro.sim import scenarios
+
+
+def _cloud(n, seed, spread=1.0):
+    rng = np.random.default_rng(seed)
+    # lognormal radii: dense core + sparse halo, the geometry that breaks
+    # naive (bounding-sphere) window tests
+    r = rng.lognormal(mean=0.0, sigma=spread, size=n)
+    u = rng.standard_normal((n, 3))
+    u /= np.linalg.norm(u, axis=1, keepdims=True)
+    return jnp.asarray(u * r[:, None])
+
+
+# ------------------------------------------------------------ ORB ordering
+def _check_kd_perm(n, n_active, seed):
+    n_active = min(n_active, n)
+    pos = _cloud(n, seed)
+    valid = jnp.arange(n) < n_active
+    perm = np.asarray(neighbor.kd_perm(pos, valid, leaf=8))
+    assert sorted(perm.tolist()) == list(range(n))
+    # invalid rows stay a right-aligned suffix in original relative order
+    np.testing.assert_array_equal(perm[n_active:], np.arange(n_active, n))
+    # valid rows land in the prefix (no padding row interleaves real rows)
+    assert set(perm[:n_active].tolist()) == set(range(n_active))
+
+
+@pytest.mark.parametrize("n,n_active,seed",
+                         [(8, 8, 0), (33, 20, 1), (96, 96, 2),
+                          (100, 37, 3), (200, 111, 4)])
+def test_kd_perm_is_permutation_with_padding_suffix(n, n_active, seed):
+    _check_kd_perm(n, n_active, seed)
+
+
+def test_kd_perm_sort_shrinks_windows():
+    """The point of the ORB ordering: windows over sorted index blocks are
+    much smaller than over arrival-order blocks (which each span the whole
+    cloud and select every source block)."""
+    n, bi = 512, 32
+    pos = _cloud(n, seed=3)
+    valid = jnp.ones(n, bool)
+
+    def mean_window(p):
+        _, win_cnt = neighbor.build_windows(p, valid, block_i=bi,
+                                            block_j=bi, radius=0.25)
+        return float(np.asarray(win_cnt).mean())
+
+    perm = neighbor.kd_perm(pos, valid, leaf=bi)
+    unsorted, srt = mean_window(pos), mean_window(pos[perm])
+    assert srt < 0.5 * unsorted, (srt, unsorted)
+
+
+# ------------------------------------------------- window coverage (tentpole)
+def _check_coverage(n, n_active, seed, radius, sort):
+    """No valid pair within the neighbor radius may miss its window —
+    sorted or not (the sort only changes how TIGHT windows are, never
+    whether they cover)."""
+    n_active = min(n_active, n)
+    bi = bj = 8
+    pos = _cloud(n, seed)
+    valid = jnp.arange(n) < n_active
+    if sort:
+        perm = neighbor.kd_perm(pos, valid, leaf=bi)
+        pos = pos[perm]
+    win_idx, win_cnt = neighbor.build_windows(
+        pos, valid, block_i=bi, block_j=bj, radius=radius)
+    win_idx, win_cnt = np.asarray(win_idx), np.asarray(win_cnt)
+    p = np.asarray(pos)[:n_active]
+    d = np.linalg.norm(p[:, None] - p[None, :], axis=-1)
+    ti, sj = np.nonzero(d <= radius)
+    for i, j in zip(ti.tolist(), sj.tolist()):
+        tb, sb = i // bi, j // bj
+        assert sb in win_idx[tb, : win_cnt[tb]], (
+            f"pair ({i},{j}) d={d[i, j]:.4f} <= {radius}: source block "
+            f"{sb} missing from target block {tb}'s window")
+
+
+@pytest.mark.parametrize("n,n_active,seed,radius,sort", [
+    (16, 16, 0, 0.25, True), (64, 64, 1, 0.5, True),
+    (64, 40, 2, 1.0, True), (160, 160, 3, 0.1, True),
+    (96, 96, 4, 0.5, False), (100, 61, 5, 2.0, False),
+    (64, 9, 6, 0.01, True),
+])
+def test_no_pair_inside_radius_is_dropped(n, n_active, seed, radius, sort):
+    _check_coverage(n, n_active, seed, radius, sort)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(**COMMON)
+    @given(n=st.integers(8, 200), n_active=st.integers(4, 200),
+           seed=st.integers(0, 10_000))
+    def test_kd_perm_property(n, n_active, seed):
+        _check_kd_perm(n, n_active, seed)
+
+    @settings(**COMMON)
+    @given(n=st.integers(16, 160), n_active=st.integers(8, 160),
+           seed=st.integers(0, 10_000),
+           radius=st.floats(0.01, 2.0), sort=st.booleans())
+    def test_no_pair_dropped_property(n, n_active, seed, radius, sort):
+        _check_coverage(n, n_active, seed, radius, sort)
+
+
+def test_empty_blocks_never_selected_and_select_nothing():
+    n, bi, bj = 64, 8, 8
+    pos = _cloud(n, seed=7)
+    valid = jnp.arange(n) < 20          # blocks 3..7 are all-padding
+    win_idx, win_cnt = neighbor.build_windows(
+        pos, valid, block_i=bi, block_j=bj, radius=1e9)
+    win_idx, win_cnt = np.asarray(win_idx), np.asarray(win_cnt)
+    # empty target blocks select nothing (they must not widen the bucket)
+    assert (win_cnt[3:] == 0).all()
+    # occupied targets select only occupied sources, even at huge radius
+    for tb in range(3):
+        assert set(win_idx[tb, : win_cnt[tb]].tolist()) <= {0, 1, 2}
+
+
+# --------------------------------------------- capacity: never underestimate
+def test_source_caps_last_bucket_is_full_extent():
+    plan = ops.CapacityPlan(96, 96, 8, 8, sources="neighbor")
+    caps = plan.source_caps
+    assert caps[-1] == 96          # overflow bucket == exact full window
+    assert all(c % 8 == 0 for c in caps)
+    # bucket never underestimates: selected cap >= requested rows
+    for rows in range(0, 97, 8):
+        assert caps[int(plan.source_bucket(rows))] >= rows
+
+
+def test_overflow_falls_back_to_full_window_exactly():
+    """radius=inf forces every window to the full source extent: the engine
+    must count overflow fallbacks AND reproduce the all-pairs trajectory
+    (fallback is the exact computation, never a truncation)."""
+    state = scenarios.make("binary_plummer", 64, seed=1)
+    kw = dict(t_end=0.03125, dt_max=1.0 / 64, n_levels=3, eta=0.02,
+              impl="fp64", block_i=16, block_j=16)
+    sorted_state = ens.spatial_sort_state(state, leaf=16)
+    full, cf = ens.evolve_ensemble_block([sorted_state], **kw)
+    nbr, cn = ens.evolve_ensemble_block(
+        [state], sources="neighbor", neighbor_radius=1e9,
+        refresh_levels=0, **kw)
+    assert int(cn.nbr.n_overflow[0]) > 0
+    assert int(cn.n_events[0]) == int(cf.n_events[0])
+    np.testing.assert_allclose(np.asarray(nbr.pos[0]),
+                               np.asarray(full.pos[0]), rtol=0, atol=1e-12)
+    np.testing.assert_allclose(np.asarray(nbr.vel[0]),
+                               np.asarray(full.vel[0]), rtol=0, atol=1e-12)
+
+
+# ------------------------------------------------- split vs all-pairs physics
+def test_neighbor_split_matches_all_pairs():
+    """Finite radius: the regular+irregular split stays within the far-field
+    prediction tier of the all-pairs trajectory, and conserves energy at the
+    same order.  Compared in the engine's sorted row order."""
+    state = scenarios.make("binary_plummer", 64, seed=1)
+    kw = dict(t_end=0.0625, dt_max=1.0 / 64, n_levels=4, eta=0.02,
+              impl="fp64", block_i=16, block_j=16)
+    sorted_state = ens.spatial_sort_state(state, leaf=16)
+    full, _ = ens.evolve_ensemble_block([sorted_state], **kw)
+    nbr, carry = ens.evolve_ensemble_block(
+        [state], sources="neighbor", neighbor_radius=0.5,
+        refresh_levels=2, **kw)
+    assert int(carry.nbr.n_refresh[0]) > 0
+    np.testing.assert_allclose(np.asarray(nbr.pos[0]),
+                               np.asarray(full.pos[0]), rtol=0, atol=5e-7)
+    np.testing.assert_allclose(np.asarray(nbr.vel[0]),
+                               np.asarray(full.vel[0]), rtol=0, atol=5e-5)
+
+    def energy(s):
+        ke = 0.5 * jnp.sum(s.mass[0] * jnp.sum(s.vel[0] ** 2, axis=1))
+        return float(ke + 0.5 * jnp.sum(s.mass[0] * s.pot[0]))
+
+    e_full, e_nbr = energy(full), energy(nbr)
+    assert abs((e_nbr - e_full) / e_full) < 1e-6
+
+
+def test_full_sources_ignore_neighbor_knobs():
+    """sources='full' is the historical path: the neighbor knobs must not
+    leak into it (bit-identical trajectories for any radius)."""
+    state = scenarios.make("plummer", 32, seed=0)
+    kw = dict(t_end=0.03125, dt_max=1.0 / 64, n_levels=3, eta=0.02,
+              impl="fp64", block_i=16, block_j=16, sources="full")
+    a, ca = ens.evolve_ensemble_block([state], neighbor_radius=0.1, **kw)
+    b, cb = ens.evolve_ensemble_block([state], neighbor_radius=7.0, **kw)
+    np.testing.assert_array_equal(np.asarray(a.pos), np.asarray(b.pos))
+    assert ca.nbr is None and cb.nbr is None
+
+
+# ---------------------------------------------------------- config plumbing
+def test_sim_config_neighbor_validation():
+    from repro.sim import api
+    good = api.SimConfig(stepper="block", sources="neighbor", n=32,
+                         t_end=0.01)
+    assert api.validate_config(good) == "block"
+    with pytest.raises(ValueError, match="sources"):
+        api.validate_config(api.SimConfig(sources="nope"))
+    with pytest.raises(ValueError, match="block"):
+        api.validate_config(api.SimConfig(sources="neighbor"))  # adaptive
+    with pytest.raises(ValueError, match="compaction"):
+        api.validate_config(api.SimConfig(
+            stepper="block", sources="neighbor", compaction="gather"))
+    with pytest.raises(ValueError, match="strategy"):
+        api.validate_config(api.SimConfig(
+            stepper="block", sources="neighbor", strategy="ring"))
+    meta = good.meta()
+    assert meta["sources"] == "neighbor"
+    assert meta["neighbor_radius"] == good.neighbor_radius
+    assert meta["refresh_levels"] == good.refresh_levels
+
+
+def test_api_run_reports_neighbor_telemetry():
+    from repro.sim import api
+    report = api.run(api.SimConfig(
+        scenario="plummer", n=64, stepper="block", sources="neighbor",
+        neighbor_radius=0.5, t_end=0.0625, dtype="fp32",
+        block_i=16, block_j=16, n_levels=4, diag_every=8))
+    assert report["de_rel"] < 1e-3
+    assert report["neighbor_refreshes"] > 0
+    assert "neighbor_overflows" in report
+    counters = report["metrics"]["counters"]
+    assert counters["sim.neighbor_refreshes"]["value"] > 0
+    occ = report["metrics"]["histograms"]["sim.neighbor_occupancy"]
+    assert 0.0 <= occ["min"] and occ["max"] <= 1.0
+    assert report["runs"][0]["neighbor_refreshes"] > 0
+
+
+def test_serve_neighbor_pod_round_trip(tmp_path):
+    """A neighbor-sources block pod admits, advances, suspends and resumes
+    bit-identically (the NeighborCarry template must round-trip)."""
+    from repro.serve.sim_engine import ServerConfig, SimRequest, SimServer
+    from repro.sim.scenarios import ScenarioSpec
+    cfg = ServerConfig(slots_per_pod=2, n_max=128, chunk_events=8,
+                       dtype="fp32", eta=0.02, sources="neighbor",
+                       neighbor_radius=0.5, block_i=16, block_j=16)
+    srv = SimServer(cfg)
+    req = SimRequest(spec=ScenarioSpec.parse("plummer:64", seed=0),
+                     stepper="block", t_end=0.0625)
+    srv.submit(req)
+    srv.step()
+    pod = next(iter(srv.pods.values()))
+    assert pod.carry is not None and pod.carry.nbr is not None
+    srv.suspend(str(tmp_path))
+    srv2 = SimServer.resume(str(tmp_path))
+    pod2 = next(iter(srv2.pods.values()))
+    assert pod2.carry.nbr is not None
+    np.testing.assert_array_equal(np.asarray(pod2.carry.nbr.win_cnt),
+                                  np.asarray(pod.carry.nbr.win_cnt))
+    srv.step()
+    srv2.step()
+    p1 = next(iter(srv.pods.values())).batched.pos
+    p2 = next(iter(srv2.pods.values())).batched.pos
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_server_config_rejects_neighbor_with_gather():
+    from repro.serve.sim_engine import ServerConfig
+    with pytest.raises(ValueError, match="compaction"):
+        ServerConfig(sources="neighbor", compaction="gather").validate()
+
+
+def test_spatial_sort_leaf_divides_blocks():
+    """The entry points sort with leaf = gcd(block_i, block_j), so every
+    kernel block of the sorted rows is a whole number of ORB cells."""
+    assert math.gcd(16, 64) == 16
+    state = scenarios.make("plummer", 96, seed=0)
+    srt = ens.spatial_sort_state(state, leaf=8)
+    # same multiset of rows
+    np.testing.assert_allclose(
+        np.asarray(jnp.sort(srt.mass)), np.asarray(jnp.sort(state.mass)),
+        rtol=0, atol=0)
+    assert float(jnp.abs(jnp.sort(srt.pos[:, 0])
+                         - jnp.sort(state.pos[:, 0])).max()) == 0.0

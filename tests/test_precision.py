@@ -216,6 +216,27 @@ def test_capacity_plan_dtype_survives_shard_and_restrict():
     assert plan.restrict(1).dtype == "mixed"
 
 
+def test_capacity_plan_neighbor_source_window_byte_costs():
+    """dtype x sources: the gathered neighbor window adds its own staging
+    traffic to the tile byte model (the window rows move twice: gather into
+    the contiguous buffer, then stream into the kernel), so a neighbor tile
+    costs strictly more I/O than a full tile of the same dtype and never
+    fits MORE tiles in a vmem budget."""
+    vmem = 1 << 20
+    for d in ops.DTYPES:
+        full = ops.CapacityPlan(256, 256, 64, 64, dtype=d)
+        nbr = ops.CapacityPlan(256, 256, 64, 64, dtype=d,
+                               sources="neighbor")
+        assert nbr.tile_io_bytes > full.tile_io_bytes
+        assert nbr.tile_vmem_bytes > full.tile_vmem_bytes
+        assert nbr.tiles_per_vmem(vmem) <= full.tiles_per_vmem(vmem)
+        # the extra traffic scales with the element width, exactly
+        assert (nbr.tile_io_bytes - full.tile_io_bytes) \
+            == 2 * 8 * nbr.block_j * nbr.io_bytes_per_element
+    with pytest.raises(ValueError):
+        ops.CapacityPlan(256, 256, 64, 64, sources="windowed")
+
+
 # --------------------------------------------------------------------------
 # hermite.block_level_dt: dtype pinned to dt_max, not the x64 flag
 # --------------------------------------------------------------------------
