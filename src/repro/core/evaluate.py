@@ -35,6 +35,27 @@ from repro.kernels import nbody_force, ops
 COMPACTIONS = ("none", "gather")
 
 
+def shared_cap_index(plan: ops.CapacityPlan, bounds) -> jax.Array:
+    """Unbatched capacity-bucket index shared by a group of members.
+
+    ``lax.switch`` must see an *unbatched* operand under ``jax.vmap`` to
+    stay a real branch (a batched index degrades to an execute-all-branches
+    select), so every caller that dispatches one switch for many members —
+    the ensemble engine's bucket groups, the fused ``(batch, dev)``
+    evaluator's per-shard switch — shares the max of the members'
+    active-count ``bounds`` (any shape; flattened).  Sound because a shared
+    cap bounds every member's own count: gathered window rows past a
+    member's active set are mask-zeroed by the kernels, so the scattered
+    result is bit-for-bit the per-member bucket's — only the launch grid
+    widens.  The bound is clamped to the plan's widest bucket, so an
+    over-wide analytic bound (e.g. ``hermite.block_level_occupancy`` over
+    rows that include padding) lands on the full-window bucket instead of
+    out of range.
+    """
+    bound = jnp.max(jnp.asarray(bounds, jnp.int32).reshape(-1))
+    return plan.bucket(jnp.minimum(bound, plan.caps[-1]))
+
+
 def _rect_passes(*, eps, impl, block_i, block_j, precision, dtype):
     """The two Hermite passes in rectangular (targets x sources) form with
     the activity mask applied — the only layer that differs between the

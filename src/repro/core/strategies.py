@@ -72,10 +72,18 @@ def _smap(mesh, in_specs, out_specs, impl: str = "xla"):
 
 from repro.core.hermite import Evaluation, Evaluator
 from repro.kernels import nbody_force, ops
+from repro.obs import metrics as obs_metrics
 
 STRATEGIES = ("replicated", "two_level", "mesh_sharded", "ring")
 #: compaction modes of the strategy block evaluators (mirrors core.evaluate)
 COMPACTIONS = ("none", "gather")
+#: ring source-shift schedules: "overlap" is the double-buffered default
+#: (prefetch the next source window before the local kernels, exactly p-1
+#: ppermute rounds per pass); "sync" is the pre-overlap baseline the bench
+#: measures against (shift after compute inside a fori_loop, p rounds per
+#: pass — the p-th round's result is discarded, the dead collective the
+#: overlap schedule eliminates)
+RING_MODES = ("overlap", "sync")
 
 
 def make_batch_mesh(
@@ -90,6 +98,31 @@ def make_batch_mesh(
     """
     devs = np.asarray(list(devices) if devices is not None else jax.devices())
     return Mesh(devs.reshape(devs.size), (axis_name,))
+
+
+def make_fused_mesh(
+    devices: Optional[Sequence[jax.Device]] = None,
+    *,
+    mesh_shape: Sequence[int],
+    axis_names: Sequence[str] = ("batch", "dev"),
+) -> Mesh:
+    """2-D ``(batch, dev)`` mesh fusing ensemble and domain parallelism.
+
+    ``mesh_shape`` is ``(B_shards, P_shards)``: the batch axis of stacked
+    runs is sharded ``B_shards``-way and each run's particle domain
+    ``P_shards``-way, so one ``shard_map`` drives B members x P domain
+    shards at once (:func:`make_fused_block_evaluator`).  The device count
+    must equal ``B_shards * P_shards`` exactly — a silent remainder would
+    drop devices from the fused launch.
+    """
+    devs = np.asarray(list(devices) if devices is not None else jax.devices())
+    bdev, p = (int(x) for x in mesh_shape)
+    if bdev < 1 or p < 1:
+        raise ValueError(f"mesh_shape extents must be >= 1; got {mesh_shape}")
+    if bdev * p != devs.size:
+        raise ValueError(
+            f"mesh_shape {bdev}x{p} needs {bdev * p} devices; got {devs.size}")
+    return Mesh(devs.reshape(bdev, p), tuple(axis_names))
 
 
 def _round_up(n: int, m: int) -> int:
@@ -124,6 +157,7 @@ def make_strategy_evaluator(
     block_i: int = nbody_force.DEFAULT_BLOCK_I,
     block_j: int = nbody_force.DEFAULT_BLOCK_J,
     dtype: str = "fp32",
+    ring_mode: str = "overlap",
 ) -> Evaluator:
     """Build an ``Evaluator`` that distributes the evaluation over devices.
 
@@ -134,9 +168,18 @@ def make_strategy_evaluator(
     ``dtype`` is the kernel precision axis (``"fp32"`` or ``"mixed"``);
     the strategies keep fp32 state and collectives either way — only the
     per-pair arithmetic inside each shard's launches narrows.
+
+    ``ring_mode`` selects the ring strategy's source-shift schedule
+    (:data:`RING_MODES`): the double-buffered ``"overlap"`` default issues
+    exactly ``p - 1`` prefetch-first ``ppermute`` rounds per pass, the
+    ``"sync"`` baseline keeps the legacy shift-after-compute loop with its
+    dead ``p``-th round.  Both are bit-for-bit identical in output.
     """
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; one of {STRATEGIES}")
+    if ring_mode not in RING_MODES:
+        raise ValueError(
+            f"ring_mode must be one of {RING_MODES}; got {ring_mode!r}")
     devs = np.asarray(devices if devices is not None else jax.devices())
     p = devs.size
     kw = _force_kw(impl, block_i, block_j, eps, dtype)
@@ -152,7 +195,7 @@ def make_strategy_evaluator(
         return _replicated(mesh, order, kw)
     if strategy == "mesh_sharded":
         return _mesh_sharded(mesh, order, kw)
-    return _ring(mesh, order, kw)
+    return _ring(mesh, order, kw, ring_mode)
 
 
 def _wrap(mesh, p, order, eval_padded):
@@ -263,14 +306,72 @@ def _mesh_sharded(mesh: Mesh, order: int, kw) -> Evaluator:
 # --------------------------------------------------------------------------
 # Strategy 4 — ring (beyond-paper systolic pipeline)
 # --------------------------------------------------------------------------
-def _ring(mesh: Mesh, order: int, kw) -> Evaluator:
+def _ring_shift(axis_name: str, ring):
+    """One systolic shift *round*: every source-window array hops one
+    device along the ring.  Counted into the ``ring.shifts_issued`` metric
+    at trace time (``rounds`` carries a fori_loop body's trip count, so the
+    counter always reflects the rounds the traced program executes) — the
+    collective-count assertion of the overlap tests pins the schedule
+    through this counter."""
+
+    def shift(arrays, rounds: int = 1):
+        obs_metrics.registry().counter(
+            "ring.shifts_issued", unit="rounds",
+            help="source-shift ppermute rounds per traced ring pass",
+        ).inc(rounds)
+        with jax.named_scope("collective.ppermute"):
+            return tuple(jax.lax.ppermute(a, axis_name, ring)
+                         for a in arrays)
+
+    return shift
+
+
+def _ring_sweep(p, shift, ring_mode, init, src, compute):
+    """Accumulate ``compute(src_k)`` over the ``p`` ring positions of the
+    source window ``src`` (a tuple of arrays that hops one device per
+    round); returns the accumulated output tuple.
+
+    ``overlap`` (default): Python-unrolled double buffer — round ``k+1``'s
+    source window is put in flight *before* round ``k``'s local kernels, so
+    on hardware with async collectives the hop hides behind the local
+    interaction block, and the final round issues no shift at all: exactly
+    ``p - 1`` rounds per pass.  The accumulation order is untouched, so the
+    result is bit-for-bit the synchronous schedule's.
+
+    ``sync``: the pre-overlap baseline — a ``fori_loop`` whose body shifts
+    after computing, every one of ``p`` iterations, so the last round's
+    shifted window is computed and discarded (the dead collective round the
+    overlap schedule eliminates).  Kept only as the measured baseline of
+    the ``ring_overlap`` bench.
+    """
+    if ring_mode == "sync":
+
+        def body(_, carry):
+            acc, win = carry
+            out = compute(win)
+            acc = tuple(x + o for x, o in zip(acc, out))
+            # body traces once but runs p rounds — count the trip count
+            return (acc, shift(win, rounds=p))
+
+        acc, _ = jax.lax.fori_loop(0, p, body, (init, src))
+        return acc
+
+    acc, win = init, src
+    for k in range(p):
+        # prefetch: next window in flight before this round's kernels
+        nxt = shift(win) if k + 1 < p else None
+        out = compute(win)
+        acc = tuple(x + o for x, o in zip(acc, out))
+        if nxt is not None:
+            win = nxt
+    return acc
+
+
+def _ring(mesh: Mesh, order: int, kw, ring_mode: str = "overlap") -> Evaluator:
     axes = mesh.axis_names
     p = mesh.size
-    perm = [(i, (i + 1) % p) for i in range(p)]
-
-    def shift(x):
-        with jax.named_scope("collective.ppermute"):
-            return jax.lax.ppermute(x, axes[0], perm)
+    ring = [(i, (i + 1) % p) for i in range(p)]
+    shift = _ring_shift(axes[0], ring)
 
     @jax.jit
     @_smap(mesh, (P(axes), P(axes), P(axes)),
@@ -279,25 +380,21 @@ def _ring(mesh: Mesh, order: int, kw) -> Evaluator:
         zeros3 = jnp.zeros_like(pos)
         zeros1 = jnp.zeros_like(mass)
 
-        def body_aj(_, carry):
-            acc, jerk, pot, sp, sv, sm = carry
-            a, j, pt = ops.acc_jerk_pot_rect(pos, vel, sp, sv, sm, **kw)
-            # the shift of the next source shard overlaps with the local
-            # (N/P)^2 interaction block on hardware (async collective)
-            return (acc + a, jerk + j, pot + pt, shift(sp), shift(sv), shift(sm))
+        def aj(win):
+            sp, sv, sm = win
+            return ops.acc_jerk_pot_rect(pos, vel, sp, sv, sm, **kw)
 
-        acc, jerk, pot, *_ = jax.lax.fori_loop(
-            0, p, body_aj, (zeros3, zeros3, zeros1, pos, vel, mass)
-        )
+        acc, jerk, pot = _ring_sweep(p, shift, ring_mode,
+                                     (zeros3, zeros3, zeros1),
+                                     (pos, vel, mass), aj)
         if order >= 6:
-            def body_s(_, carry):
-                snp, sp, sv, sa, sm = carry
-                s = ops.snap_rect(pos, vel, acc, sp, sv, sa, sm, **kw)
-                return (snp + s, shift(sp), shift(sv), shift(sa), shift(sm))
 
-            snp, *_ = jax.lax.fori_loop(
-                0, p, body_s, (zeros3, pos, vel, acc, mass)
-            )
+            def sn(win):
+                sp, sv, sa, sm = win
+                return (ops.snap_rect(pos, vel, acc, sp, sv, sa, sm, **kw),)
+
+            (snp,) = _ring_sweep(p, shift, ring_mode, (zeros3,),
+                                 (pos, vel, acc, mass), sn)
         else:
             snp = zeros3
         return acc, jerk, snp, pot
@@ -528,6 +625,7 @@ def make_strategy_block_evaluator(
     compaction: str = "none",
     dtype: str = "fp32",
     sources: str = "full",
+    ring_mode: str = "overlap",
 ):
     """Distributed active-target evaluator for the block-timestep scheme.
 
@@ -571,6 +669,9 @@ def make_strategy_block_evaluator(
             "sources='neighbor' runs on the vmapped ensemble block engine "
             "(strategy='single'); the sharded strategies evaluate full "
             "sources only")
+    if ring_mode not in RING_MODES:
+        raise ValueError(
+            f"ring_mode must be one of {RING_MODES}; got {ring_mode!r}")
     devs = np.asarray(devices if devices is not None else jax.devices())
     p = devs.size
     kw = _force_kw(impl, block_i, block_j, eps, dtype)
@@ -587,7 +688,7 @@ def make_strategy_block_evaluator(
         return _replicated_block(mesh, order, kw, compaction, n_passes)
     if strategy == "mesh_sharded":
         return _mesh_sharded_block(mesh, order, kw, compaction, n_passes)
-    return _ring_block(mesh, order, kw, compaction, n_passes)
+    return _ring_block(mesh, order, kw, compaction, n_passes, ring_mode)
 
 
 def _gathered_block(mesh, order, kw, compaction, n_passes, gather):
@@ -676,19 +777,19 @@ def _mesh_sharded_block(mesh, order, kw, compaction, n_passes):
     return _wrap_block(mesh.size, eval_padded)
 
 
-def _ring_block(mesh, order, kw, compaction, n_passes):
+def _ring_block(mesh, order, kw, compaction, n_passes,
+                ring_mode: str = "overlap"):
     """Systolic ring with shard-local compaction: the compacted local target
     block meets every streamed source shard, so the switch sits *inside* the
     loop body (pure local work per branch) while the ``ppermute`` shifts stay
     outside it — every shard runs the same collective schedule whatever
-    bucket it took."""
+    bucket it took.  The shift schedule itself is :func:`_ring_sweep`'s:
+    double-buffered prefetch (``p - 1`` rounds) by default, the legacy
+    synchronous loop as the bench baseline."""
     axes = mesh.axis_names
     p = mesh.size
     ring = [(i, (i + 1) % p) for i in range(p)]
-
-    def shift(x):
-        with jax.named_scope("collective.ppermute"):
-            return jax.lax.ppermute(x, axes[0], ring)
+    shift = _ring_shift(axes[0], ring)
 
     @jax.jit
     @_smap(mesh, (P(axes),) * 6,
@@ -718,17 +819,12 @@ def _ring_block(mesh, order, kw, compaction, n_passes):
                 return ops.acc_jerk_pot_rect(p_c, v_c, sp, sv, sm,
                                              mask_t=m_c, **kw)
 
-            def body_aj(_, carry):
-                acc, jerk, pot, sp, sv, sm = carry
-                a, j, pt = _window_switch(cap_idx, plan.caps, launch1,
-                                          window, (sp, sv, sm))
-                return (acc + a, jerk + j, pot + pt,
-                        shift(sp), shift(sv), shift(sm))
-
             zw3 = jnp.zeros((w, 3), jnp.float32)
-            a_w, j_w, pt_w, *_ = jax.lax.fori_loop(
-                0, p, body_aj,
-                (zw3, zw3, jnp.zeros((w,), jnp.float32), pos, vel, mass))
+            zw1 = jnp.zeros((w,), jnp.float32)
+            a_w, j_w, pt_w = _ring_sweep(
+                p, shift, ring_mode, (zw3, zw3, zw1), (pos, vel, mass),
+                lambda src: _window_switch(cap_idx, plan.caps, launch1,
+                                           window, src))
             acc, jerk, pot = ops.scatter_outputs(perm, cap_max, n_local,
                                                  a_w, j_w, pt_w)
 
@@ -743,15 +839,10 @@ def _ring_block(mesh, order, kw, compaction, n_passes):
                     return ops.snap_rect(p_c, v_c, a_c, sp, sv, sa, sm,
                                          mask_t=m_c, **kw)
 
-                def body_s(_, carry):
-                    snp, sp, sv, sa, sm = carry
-                    s = _window_switch(cap_idx, plan.caps, launch2,
-                                       snap_window, (sp, sv, sa, sm))
-                    return (snp + s,
-                            shift(sp), shift(sv), shift(sa), shift(sm))
-
-                s_w, *_ = jax.lax.fori_loop(
-                    0, p, body_s, (zw3, pos, vel, acc_s, mass))
+                (s_w,) = _ring_sweep(
+                    p, shift, ring_mode, (zw3,), (pos, vel, acc_s, mass),
+                    lambda src: (_window_switch(cap_idx, plan.caps, launch2,
+                                                snap_window, src),))
                 (snp,) = ops.scatter_outputs(perm, cap_max, n_local, s_w)
             else:
                 snp = zeros3
@@ -759,28 +850,182 @@ def _ring_block(mesh, order, kw, compaction, n_passes):
 
         tiles = jnp.full((1,), plan.dense_tiles, jnp.int32)
 
-        def body_aj(_, carry):
-            acc, jerk, pot, sp, sv, sm = carry
-            a, j, pt = ops.acc_jerk_pot_rect(pos, vel, sp, sv, sm,
-                                             mask_t=mask, **kw)
-            return (acc + a, jerk + j, pot + pt,
-                    shift(sp), shift(sv), shift(sm))
+        def aj(src):
+            sp, sv, sm = src
+            return ops.acc_jerk_pot_rect(pos, vel, sp, sv, sm,
+                                         mask_t=mask, **kw)
 
-        acc, jerk, pot, *_ = jax.lax.fori_loop(
-            0, p, body_aj, (zeros3, zeros3, zeros1, pos, vel, mass))
+        acc, jerk, pot = _ring_sweep(p, shift, ring_mode,
+                                     (zeros3, zeros3, zeros1),
+                                     (pos, vel, mass), aj)
         if order >= 6:
             acc_s = jnp.where(mask[:, None], acc, ap)
 
-            def body_s(_, carry):
-                snp, sp, sv, sa, sm = carry
-                s = ops.snap_rect(pos, vel, acc, sp, sv, sa, sm,
-                                  mask_t=mask, **kw)
-                return (snp + s, shift(sp), shift(sv), shift(sa), shift(sm))
+            def sn(src):
+                sp, sv, sa, sm = src
+                return (ops.snap_rect(pos, vel, acc, sp, sv, sa, sm,
+                                      mask_t=mask, **kw),)
 
-            snp, *_ = jax.lax.fori_loop(
-                0, p, body_s, (zeros3, pos, vel, acc_s, mass))
+            (snp,) = _ring_sweep(p, shift, ring_mode, (zeros3,),
+                                 (pos, vel, acc_s, mass), sn)
         else:
             snp = zeros3
         return acc, jerk, snp, pot, tiles
 
     return _wrap_block(mesh.size, eval_padded)
+
+
+# --------------------------------------------------------------------------
+# fused (batch, dev) block evaluator: B ensemble members x P domain shards
+# --------------------------------------------------------------------------
+def _wrap_fused_block(bdev, p, eval_padded):
+    """Pad each member's N to a shard multiple, evaluate, slice back.
+
+    The *batch* axis is the engine's to pad (``sim.ensemble._pad_batch``
+    repeats the first run) — a non-multiple batch here is a caller bug, not
+    something to paper over with silently duplicated physics."""
+
+    def evaluate(pos, vel, acc_pred, mass, mask_t, n_bound=None):
+        b, n = pos.shape[0], pos.shape[1]
+        if b % bdev:
+            raise ValueError(
+                f"batch size {b} not divisible by the mesh's batch extent "
+                f"{bdev}; pad the batch first (sim.ensemble._pad_batch)")
+        f32 = jnp.float32
+        dn = _round_up(n, p) - n
+        pp = jnp.pad(jnp.asarray(pos, f32), ((0, 0), (0, dn), (0, 0)))
+        vp = jnp.pad(jnp.asarray(vel, f32), ((0, 0), (0, dn), (0, 0)))
+        app = jnp.pad(jnp.asarray(acc_pred, f32), ((0, 0), (0, dn), (0, 0)))
+        mp = jnp.pad(jnp.asarray(mass, f32), ((0, 0), (0, dn)))
+        mk = jnp.pad(jnp.asarray(mask_t, bool), ((0, 0), (0, dn)))
+        if n_bound is None:
+            bound = jnp.sum(mk.reshape(b, p, -1), axis=2).astype(jnp.int32)
+        else:
+            bound = jnp.asarray(n_bound, jnp.int32).reshape(b, p)
+        acc, jerk, snp, pot, tiles = eval_padded(pp, vp, app, mp, mk, bound)
+        return (Evaluation(acc[:, :n], jerk[:, :n], snp[:, :n], pot[:, :n]),
+                tiles)
+
+    return evaluate
+
+
+def _fused_block(mesh, order, kw, compaction, n_passes):
+    """One shard_map over the fused mesh: each device holds ``B/bdev``
+    members x ``N/p`` target rows and vmaps the per-shard two-pass block
+    evaluation (:func:`_shard_pass1` / :func:`_shard_pass2`) over its local
+    members.  Sources bind with dev-replicated specs (mesh_sharded style:
+    the same arrays bound twice, GSPMD inserts the along-``dev`` gathers,
+    never across ``batch`` — members stay independent).  The capacity
+    switch is shared across a shard's local members via
+    :func:`repro.core.evaluate.shared_cap_index`, keeping it a real branch
+    under the member vmap."""
+    from repro.core.evaluate import shared_cap_index
+
+    bdev, p = mesh.devices.shape
+    tsh3, tsh2 = P("batch", "dev", None), P("batch", "dev")
+    ssh3, ssh2 = P("batch", None, None), P("batch", None)
+
+    def vperm(mask):
+        return jax.vmap(lambda mk: jnp.argsort(~mk, stable=True))(mask)
+
+    @_smap(mesh, (tsh3, tsh3, tsh3, tsh2, tsh2, ssh3, ssh3, ssh2),
+           (tsh3, tsh3, tsh2, tsh3, tsh2), kw["impl"])
+    def pass1(pos, vel, ap, mask, bound, gp, gv, gm):
+        b_loc = pos.shape[0]
+        plan = _shard_plan(pos.shape[1], gp.shape[1], kw, n_passes)
+        if compaction == "gather":
+            cap_idx = shared_cap_index(plan, bound)
+            acc, jerk, pot, acc_s = jax.vmap(
+                lambda po, ve, a, mk, pe, sp, sv, sm: _shard_pass1(
+                    po, ve, a, mk, pe, cap_idx, plan, kw, (sp, sv, sm),
+                    order)
+            )(pos, vel, ap, mask, vperm(mask), gp, gv, gm)
+            tiles = jnp.broadcast_to(
+                jnp.reshape(plan.tiles(cap_idx), (1, 1)), (b_loc, 1))
+        else:
+            acc, jerk, pot, acc_s = jax.vmap(
+                lambda po, ve, a, mk, sp, sv, sm: _dense_pass1(
+                    po, ve, a, mk, kw, (sp, sv, sm), order)
+            )(pos, vel, ap, mask, gp, gv, gm)
+            tiles = jnp.full((b_loc, 1), plan.dense_tiles, jnp.int32)
+        return acc, jerk, pot, acc_s, tiles
+
+    @_smap(mesh, (tsh3, tsh3, tsh3, tsh2, tsh2, ssh3, ssh3, ssh3, ssh2),
+           tsh3, kw["impl"])
+    def pass2(pos, vel, acc, mask, bound, gp, gv, ga, gm):
+        plan = _shard_plan(pos.shape[1], gp.shape[1], kw, n_passes)
+        if compaction == "gather":
+            # same shared bucket as pass 1: neither masks nor bounds moved
+            cap_idx = shared_cap_index(plan, bound)
+            return jax.vmap(
+                lambda po, ve, a, mk, pe, sp, sv, sa, sm: _shard_pass2(
+                    po, ve, a, mk, pe, cap_idx, plan, kw, (sp, sv, sm), sa)
+            )(pos, vel, acc, mask, vperm(mask), gp, gv, ga, gm)
+        return jax.vmap(
+            lambda po, ve, a, mk, sp, sv, sa, sm: ops.snap_rect(
+                po, ve, a, sp, sv, sa, sm, mask_t=mk, **kw)
+        )(pos, vel, acc, mask, gp, gv, ga, gm)
+
+    @jax.jit
+    def eval_padded(pos, vel, ap, mass, mask, bound):
+        acc, jerk, pot, acc_s, tiles = pass1(pos, vel, ap, mask, bound,
+                                             pos, vel, mass)
+        if order >= 6:
+            snp = pass2(pos, vel, acc, mask, bound, pos, vel, acc_s, mass)
+        else:
+            snp = jnp.zeros_like(acc)
+        return acc, jerk, snp, pot, tiles
+
+    return _wrap_fused_block(bdev, p, eval_padded)
+
+
+def make_fused_block_evaluator(
+    mesh_shape: Sequence[int],
+    *,
+    devices: Optional[Sequence[jax.Device]] = None,
+    eps: float = 1e-7,
+    order: int = 6,
+    impl: str = "xla",
+    block_i: int = nbody_force.DEFAULT_BLOCK_I,
+    block_j: int = nbody_force.DEFAULT_BLOCK_J,
+    compaction: str = "none",
+    dtype: str = "fp32",
+):
+    """Batched active-target evaluator over a fused ``(batch, dev)`` mesh.
+
+    One ``shard_map`` runs ``B`` ensemble members x ``P`` domain shards at
+    once (``mesh_shape = (B_shards, P_shards)``; see :func:`make_fused_mesh`)
+    — the 2-D composition of the ensemble engine's batch sharding with the
+    ``mesh_sharded`` strategy's domain decomposition, which is what lets a
+    serving pod hold several large-N members on one device group.
+
+    Signature of the returned callable::
+
+        evaluate(pos, vel, acc_pred, mass, mask_t, n_bound=None) \
+            -> (Evaluation, tiles)
+
+    All target operands carry a leading ``(B,)`` batch axis; ``n_bound``,
+    when given, is a ``(B, P)`` host-side upper bound on each member's
+    per-shard active-target count (the analytic
+    ``hermite.block_level_occupancy`` bound — host-side tile scheduling,
+    no runtime gather feeds the bucket switch), and ``None`` falls back to
+    the measured per-member per-shard mask sum.  ``tiles`` is the ``(B, P)``
+    matrix of kernel grid tiles each member enqueued on each domain shard
+    (both Hermite passes).
+
+    Bit-for-bit: each target row is a row-local reduction over the full
+    source set in source order, whatever shard or member-vmap lane it
+    occupies, so the result equals both the 1-D batch-sharded ensemble
+    evaluation and the 1-D ``mesh_sharded`` strategy evaluation of the
+    same member (the fused golden pins all three).  ``compaction="gather"``
+    shares one capacity bucket across a shard's local members
+    (:func:`repro.core.evaluate.shared_cap_index`) — identical physics,
+    the launch grid just follows the widest local member.
+    """
+    if compaction not in COMPACTIONS:
+        raise ValueError(
+            f"compaction must be one of {COMPACTIONS}; got {compaction!r}")
+    mesh = make_fused_mesh(devices, mesh_shape=mesh_shape)
+    kw = _force_kw(impl, block_i, block_j, eps, dtype)
+    n_passes = 2 if order >= 6 else 1
+    return _fused_block(mesh, order, kw, compaction, n_passes)

@@ -346,9 +346,18 @@ class CapacityPlan:
         ``n_active``): each group dispatches over its own shorter schedule,
         so a quiescent small member never lowers — let alone launches — the
         widest member's buckets.
+
+        ``ceiling`` must lie in ``(0, caps[-1]]`` — the same range
+        :meth:`admission_cap` enforces.  A ceiling above the top bucket is a
+        caller error (the member could exceed every bucket this plan can
+        launch), not a request for the full schedule.
         """
-        idx = bisect.bisect_left(self.caps, int(ceiling))
-        idx = min(idx, len(self.caps) - 1)
+        ceiling = int(ceiling)
+        if not 0 < ceiling <= self.caps[-1]:
+            raise ValueError(
+                f"ceiling={ceiling} outside this plan's capacity range "
+                f"(0, {self.caps[-1]}]")
+        idx = bisect.bisect_left(self.caps, ceiling)
         return dataclasses.replace(self, caps=self.caps[: idx + 1])
 
     def admission_cap(self, n_active: int) -> int:

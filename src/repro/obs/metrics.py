@@ -24,6 +24,13 @@ Metric taxonomy (names are ``layer.what``; units ride in the snapshot):
 * ``sim.pad_waste``          — padded-slot fraction of the batch;
 * ``sim.shard_imbalance``    — max/mean per-shard launched tiles;
 * ``sim.bucket_hits``        — capacity-bucket switch hit distribution;
+* ``ring.shifts_issued``     — ring ``ppermute`` rounds *traced* per pass
+  (counted at trace time: the overlapped sweep unrolls ``p - 1`` real
+  shifts, the sync baseline traces one body looped ``p`` times at runtime
+  — see ``core.strategies._ring_sweep``);
+* ``ring.overlap_frac``      — measured wall-clock fraction the overlapped
+  ring saves over the sync baseline, ``1 - wall_overlap / wall_sync``
+  (gauge, set by ``benchmarks/bench_ci.py``'s ``ring_overlap`` probe);
 * ``serve.queue_depth``      — requests waiting for a slot (gauge);
 * ``serve.slot_occupancy``   — live-slot fraction across pods (gauge);
 * ``serve.admission_latency_s`` — submit -> admit wait (histogram);

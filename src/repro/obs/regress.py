@@ -6,7 +6,8 @@ the file from an anecdote into a trajectory.  This module is the gate over
 it: the newest record is compared against the most recent *comparable*
 earlier record (or an explicit ``--baseline`` file), and CI fails when any
 tracked lower-is-better metric — wall per event, launched tiles, modeled
-EDP, the neighbor-scheme wall and |dE/E|, serving seconds-per-request /
+EDP, the neighbor-scheme wall and |dE/E|, the overlapped ring's wall per
+evaluation and ppermute rounds, serving seconds-per-request /
 p99 turnaround — regresses more than
 :data:`DEFAULT_THRESHOLD` (20%).
 
@@ -186,6 +187,14 @@ def tracked_metrics(record: Dict[str, Any]) -> Dict[str, float]:
         put(f"{base}/wall_per_event_neighbor_s",
             row.get("wall_per_event_neighbor_s"))
         put(f"{base}/de_rel_neighbor", row.get("de_rel_neighbor"))
+    for row in record.get("ring_overlap") or ():
+        # rows key by forced-host device count; the shift-round count is
+        # exact (trace-time counter), so reintroducing the dead ppermute
+        # (p-1 -> p rounds per pass) is a +33%-at-p=4 gated regression
+        base = f"ring_overlap/dev{row.get('devices')}"
+        put(f"{base}/wall_per_eval_overlap_s",
+            row.get("wall_per_eval_overlap_s"))
+        put(f"{base}/shift_rounds_overlap", row.get("shift_rounds_overlap"))
     for row in record.get("serve_throughput") or ():
         # only the server row gates: the one-process-per-request baseline
         # is informational (its wall is dominated by interpreter startup)

@@ -69,6 +69,8 @@ class SimConfig:
     block_j: Optional[int] = None    #   stepper; None => kernel defaults)
     sources: str = "full"            # "full" | "neighbor" (Ahmad-Cohen
     #   near/far split; block stepper only — see docs/ensembles.md)
+    mesh: Optional[Tuple[int, int]] = None  # fused (batch, domain) device
+    #   grid (block stepper; product must equal devices — --mesh BxP)
     neighbor_radius: float = 0.25    # AC window radius (simulation length)
     refresh_levels: int = 2          # far-field refresh: levels below macro
     eta: float = 0.02
@@ -154,6 +156,33 @@ class SimConfig:
         if self.refresh_levels < 0:
             raise ValueError(
                 f"refresh_levels={self.refresh_levels} must be >= 0")
+        if self.mesh is not None:
+            if stepper != "block":
+                raise ValueError(
+                    "mesh=(B, P) fuses batch and domain sharding of the "
+                    f"block engine; stepper={stepper!r} has no domain-"
+                    "sharded force pass to fuse")
+            if len(self.mesh) != 2 or any(int(e) < 1 for e in self.mesh):
+                raise ValueError(
+                    f"mesh={self.mesh!r} must be two positive extents "
+                    "(B_shards, P_shards)")
+            if self.mesh[0] * self.mesh[1] != self.devices:
+                raise ValueError(
+                    f"mesh={tuple(self.mesh)} covers "
+                    f"{self.mesh[0] * self.mesh[1]} devices; --devices says "
+                    f"{self.devices} (the fused grid must tile the device "
+                    "list exactly)")
+            if self.strategy != "single":
+                raise ValueError(
+                    "mesh=(B, P) supplies the domain sharding itself; "
+                    f"strategy={self.strategy!r} would shard the same axis "
+                    "twice")
+            if self.bucket_mode != "member":
+                raise ValueError(
+                    "the fused mesh engine sizes one capacity bucket per "
+                    f"(batch, domain) shard; bucket_mode="
+                    f"{self.bucket_mode!r} selects the vmapped engine's "
+                    "dispatch and would be silently ignored")
         if self.n_levels is None and stepper != "block":
             raise ValueError(
                 "n_levels=None (--levels auto) sizes the block hierarchy; "
@@ -176,6 +205,8 @@ class SimConfig:
             if self.compaction == "gather":
                 meta["bucket_mode"] = self.bucket_mode
             meta["sources"] = self.sources
+            if self.mesh is not None:
+                meta["mesh"] = list(self.mesh)
             if self.sources == "neighbor":
                 meta["neighbor_radius"] = self.neighbor_radius
                 meta["refresh_levels"] = self.refresh_levels
@@ -633,6 +664,11 @@ class EnsembleRunner(Runner):
         na = jnp.asarray(n_active, jnp.int32)
         h.kw = dict(n_active=na, order=cfg.order, eps=cfg.eps, impl=impl,
                     devices=devices, dtype=cfg.dtype)
+        if cfg.mesh is not None:
+            # validated block-only, so the lockstep entry points (which
+            # take no mesh) never see the key
+            h.kw["mesh"] = tuple(int(e) for e in cfg.mesh)
+            h.kw["devices"] = _device_list(cfg)
         batched = ens.ensemble_initialize(batched, **h.kw)
         jax.block_until_ready(batched.pos)
         h.batched = batched
@@ -774,25 +810,33 @@ class EnsembleRunner(Runner):
         # particle) is the largest active set any tick of the block
         # schedule can see, so per member and event the launch can
         # never exceed the tiles of occ[0]'s capacity bucket
-        occ0 = np.asarray(jax.vmap(
-            lambda lv, m: hermite.block_level_occupancy(
-                lv, n_levels=h.n_levels, mask=m))(h.carry.levels,
-                                                  jnp.asarray(h.mask)))[:, 0]
+        # the full-N tile bound doesn't transfer to the fused mesh, whose
+        # launches are sized by P shard-local plans (the engine already
+        # schedules from the analytic per-shard bound there)
+        if cfg.mesh is None:
+            occ0 = np.asarray(jax.vmap(
+                lambda lv, m: hermite.block_level_occupancy(
+                    lv, n_levels=h.n_levels, mask=m))(
+                        h.carry.levels, jnp.asarray(h.mask)))[:, 0]
+            for i in range(h.b):
+                per_event = (int(h.plan.tiles(h.plan.bucket(int(occ0[i]))))
+                             if cfg.compaction == "gather"
+                             else h.plan.dense_tiles)
+                h.bound_total += ev_d[i] * per_event
+            reg.gauge("sim.tiles_occupancy_bound", unit="tiles",
+                      help="analytic bound; launched <= bound").set(
+                h.bound_total)
         for i in range(h.b):
-            per_event = (int(h.plan.tiles(h.plan.bucket(int(occ0[i]))))
-                         if cfg.compaction == "gather"
-                         else h.plan.dense_tiles)
-            h.bound_total += ev_d[i] * per_event
             if ev_d[i] > 0 and h.n_active[i] > 0:
                 reg.histogram(
                     "sim.active_fraction", unit="fraction",
                     help="per-chunk mean active-target fraction"
                 ).observe(pairs_d[i]
                           / (ev_d[i] * float(h.n_active[i]) ** 2))
-        reg.gauge("sim.tiles_occupancy_bound", unit="tiles",
-                  help="analytic bound; launched <= bound").set(
-            h.bound_total)
-        if cfg.compaction == "gather":
+        # the fused mesh engine's capacity switch lives inside the shards
+        # (one shared bucket per (batch, domain) shard) — there is no
+        # batch-level hit distribution to report
+        if cfg.compaction == "gather" and cfg.mesh is None:
             reg.gauge(
                 "sim.bucket_hits", unit="hits",
                 help="capacity-bucket switch hit counts (full "

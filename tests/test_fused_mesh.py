@@ -1,0 +1,166 @@
+"""Fused (batch, dev) mesh: one shard_map over B members x P domain shards.
+
+The fused block engine lays the device list out as a 2-D
+``Mesh(("batch", "dev"))`` and advances every ensemble member's domain
+shards in a single collective program, with the capacity-bucket switch
+sized host-side from the analytic occupancy bound.  Because the kernels
+never see the layout (``pallas_interpret``'s j-block sweep is
+launch-extent-independent and the shard boundaries fall on block
+boundaries), the fused run must be *bit-identical* to both 1-D layouts it
+fuses.  Locked here against the committed golden
+``tests/golden/plummer_block_fused_2x2.json`` (forced 4-device host mesh,
+subprocess):
+
+* replaying the golden recipe reproduces pos/vel, the per-member event
+  counts (level-schedule fingerprint) and the per-member tile totals
+  (host-side analytic bucket-sizing fingerprint);
+* fused ``mesh=(2, 2)`` == the 1-D batch-sharded ensemble run, bitwise;
+* each fused member row == a solo 1-D ``mesh_sharded`` strategy run of
+  the same member, bitwise;
+* a ``sources="neighbor"`` pod under ``ServerConfig.mesh=(2, 2)`` admits
+  two large-N members and reaches steady state with ZERO recompiles
+  after warmup.
+
+Plus fast in-process checks of the ``SimConfig.mesh`` validation surface.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.sim import api
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+GOLDEN = os.path.join(HERE, "golden", "plummer_block_fused_2x2.json")
+
+_SCRIPT = r"""
+import json
+import os
+import sys
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax
+jax.config.update("jax_enable_x64", True)
+import numpy as np
+from repro.serve import ServerConfig, SimRequest, SimServer
+from repro.sim import ensemble as ens
+from repro.sim import scenarios
+from repro.sim.scenarios import ScenarioSpec
+
+assert len(jax.devices()) == 4
+with open(sys.argv[1]) as f:
+    doc = json.load(f)
+m = doc["meta"]
+kw = dict(t_end=m["t_end"], dt_max=m["dt_max"], n_levels=m["n_levels"],
+          eta=m["eta"], order=m["order"], eps=m["eps"], impl=m["impl"],
+          compaction=m["compaction"])
+states = [scenarios.make(m["scenario"], m["n"], seed=m["seed"] + i)
+          for i in range(m["ensemble"])]
+
+# ---- golden replay: the committed fixture reproduces exactly -----------
+fused, carry = ens.evolve_ensemble_block(
+    states, mesh=tuple(m["mesh"]), devices=jax.devices()[:m["devices"]],
+    **kw)
+assert [int(e) for e in np.asarray(carry.n_events)] == doc["n_events"]
+assert [float(t) for t in np.asarray(carry.n_tiles)] == doc["n_tiles"]
+np.testing.assert_allclose(np.asarray(fused.pos), np.asarray(doc["pos"]),
+                           rtol=0, atol=1e-12)
+np.testing.assert_allclose(np.asarray(fused.vel), np.asarray(doc["vel"]),
+                           rtol=0, atol=1e-12)
+print("GOLDEN-FUSED: OK")
+
+# ---- fused == 1-D batch-sharded, bitwise -------------------------------
+batch1d, c1d = ens.evolve_ensemble_block(
+    states, devices=jax.devices()[:m["ensemble"]], **kw)
+for leaf in ("pos", "vel", "acc", "pot"):
+    assert np.array_equal(np.asarray(getattr(fused, leaf)),
+                          np.asarray(getattr(batch1d, leaf))), leaf
+assert np.asarray(carry.n_events).tolist() \
+    == np.asarray(c1d.n_events).tolist()
+print("FUSED-VS-BATCH: OK")
+
+# ---- each fused member row == a solo 1-D mesh_sharded strategy run -----
+p_dom = m["mesh"][1]
+for i, st in enumerate(states):
+    solo, cs = ens.evolve_strategy_block(
+        st, strategy="mesh_sharded", devices=p_dom, **kw)
+    for leaf in ("pos", "vel"):
+        assert np.array_equal(np.asarray(getattr(fused, leaf))[i],
+                              np.asarray(getattr(solo, leaf))), (i, leaf)
+    assert int(np.asarray(carry.n_events)[i]) == int(cs.n_events), i
+print("FUSED-VS-STRATEGY: OK")
+
+# ---- serve: two large-N neighbor members, one fused pod, 0 recompiles --
+cfg = ServerConfig(slots_per_pod=2, n_max=256, chunk_events=8, impl="xla",
+                   dt_max=0.0625, n_levels=4, devices=4, mesh=(2, 2),
+                   sources="neighbor", neighbor_radius=0.5)
+server = SimServer(cfg)
+spent = server.warmup([SimRequest(spec=ScenarioSpec.parse("plummer:256"),
+                                  stepper="block", t_end=0.0625)])
+assert spent > 0
+baseline = server.cache_misses()
+for seed in (1, 2):
+    server.submit(SimRequest(
+        spec=ScenarioSpec.parse("plummer:256", seed=seed),
+        stepper="block", t_end=0.0625))
+reports = server.run_until_drained()
+assert len(reports) == 2, [r["request_id"] for r in reports]
+assert server.cache_misses() == baseline, \
+    (server.cache_misses(), baseline)
+print("SERVE-MESH: OK")
+print("FUSED-MESH: OK")
+"""
+
+
+@pytest.mark.slow
+def test_fused_mesh_4dev_golden_and_layout_identity():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(HERE, "..", "src")
+    res = subprocess.run([sys.executable, "-c", _SCRIPT, GOLDEN], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    for tag in ("GOLDEN-FUSED", "FUSED-VS-BATCH", "FUSED-VS-STRATEGY",
+                "SERVE-MESH", "FUSED-MESH"):
+        assert f"{tag}: OK" in res.stdout
+
+
+# --------------------------------------------------------------------------
+# SimConfig.mesh validation surface (fast, in-process)
+# --------------------------------------------------------------------------
+def _cfg(**kw):
+    base = dict(scenario="plummer", n=32, t_end=0.02, stepper="block",
+                dt=None, dt_max=0.0625, n_levels=2, impl="xla", ensemble=2,
+                devices=4, mesh=(2, 2), validate_ic=False)
+    base.update(kw)
+    return api.SimConfig(**base)
+
+
+def test_mesh_config_valid():
+    assert api.resolve_kind(_cfg()) == "ensemble"
+    assert _cfg().meta()["mesh"] == [2, 2]
+
+
+def test_mesh_requires_block_stepper():
+    with pytest.raises(ValueError, match="no domain-sharded force pass"):
+        api.resolve_kind(_cfg(stepper="adaptive", dt_max=None,
+                              n_levels=None))
+
+
+def test_mesh_must_tile_devices():
+    with pytest.raises(ValueError, match="tile the device list exactly"):
+        api.resolve_kind(_cfg(devices=3))
+    with pytest.raises(ValueError, match="two positive extents"):
+        api.resolve_kind(_cfg(mesh=(4,)))
+
+
+def test_mesh_excludes_strategy_sharding():
+    with pytest.raises(ValueError, match="shard the same axis twice"):
+        api.resolve_kind(_cfg(strategy="mesh_sharded", ensemble=1))
+
+
+def test_mesh_requires_member_buckets():
+    with pytest.raises(ValueError, match="bucket"):
+        api.resolve_kind(_cfg(bucket_mode="shared", compaction="gather"))

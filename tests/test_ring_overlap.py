@@ -1,0 +1,143 @@
+"""Ring overlap schedule: p-1 prefetched shifts, bit-identical results.
+
+The ring strategy's historical (``sync``) sweep shifted the source window
+*after* each local kernel, all ``p`` rounds — so the last round's shifted
+window arrived only to be discarded (a dead ``ppermute`` per pass).  The
+``overlap`` schedule (the default) unrolls the sweep and puts round
+``k+1``'s window in flight *before* round ``k``'s kernels: exactly
+``p - 1`` shifts per pass, and on hardware with async collectives the hop
+hides behind the local interaction block.
+
+Locked here (forced 2-device mesh, subprocess):
+
+* **Collective count**: the ``ring.shifts_issued`` counter (incremented at
+  trace time, fori_loop trip counts included) pins exactly ``2 * (p - 1)``
+  shift rounds per traced overlap evaluation (acc + snap passes) vs
+  ``2 * p`` for the sync baseline — for every kernel x dtype, and for the
+  block evaluator under both compactions.
+* **Bitwise**: overlap == sync on every output leaf (the accumulation
+  order is untouched; only the shift timing moves), for every kernel x
+  dtype, both compactions, and the analytic ``n_bound`` path.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core import strategies
+
+_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+import numpy as np
+from repro.core import hermite
+from repro.core.strategies import (make_strategy_evaluator,
+                                   make_strategy_block_evaluator)
+from repro.obs import metrics as obs_metrics
+from repro.sim import scenarios
+
+P_DEV = 2
+assert len(jax.devices()) == P_DEV
+state = scenarios.make("plummer", n=64, seed=3)
+
+
+def shifts(reg):
+    m = reg._metrics.get("ring.shifts_issued")
+    return 0.0 if m is None else float(m.value)
+
+
+# ---- lockstep evaluator: every kernel x dtype --------------------------
+for impl in ("xla", "pallas_interpret"):
+    for dtype in ("fp32", "mixed"):
+        outs, counts = {}, {}
+        for mode in ("overlap", "sync"):
+            reg = obs_metrics.MetricsRegistry()
+            with obs_metrics.use(reg):
+                ev = make_strategy_evaluator(
+                    "ring", devices=jax.devices(), impl=impl, dtype=dtype,
+                    ring_mode=mode)
+                outs[mode] = hermite.initialize(state, ev)
+                jax.block_until_ready(outs[mode].pos)
+            counts[mode] = shifts(reg)
+        tag = (impl, dtype)
+        # exactly p-1 shift rounds per traced pass (2 passes: acc + snap);
+        # the sync baseline pays p, the last one computed-and-discarded
+        assert counts["overlap"] == 2 * (P_DEV - 1), (tag, counts)
+        assert counts["sync"] == 2 * P_DEV, (tag, counts)
+        for leaf in ("pos", "vel", "acc", "jerk", "snap", "crackle", "pot"):
+            a = np.asarray(getattr(outs["overlap"], leaf))
+            b = np.asarray(getattr(outs["sync"], leaf))
+            assert np.array_equal(a, b), (tag, leaf)
+        print(f"lockstep {impl}/{dtype}: OK shifts {counts}")
+
+# ---- block evaluator: both compactions + the analytic-bound path -------
+mask = np.zeros(64, bool)
+mask[:24] = True
+ap = jnp.zeros_like(state.pos)
+for compaction in ("none", "gather"):
+    outs, counts = {}, {}
+    for mode in ("overlap", "sync"):
+        reg = obs_metrics.MetricsRegistry()
+        with obs_metrics.use(reg):
+            bev = make_strategy_block_evaluator(
+                "ring", devices=jax.devices(), impl="xla", block_i=8,
+                block_j=8, compaction=compaction, ring_mode=mode)
+            ev, tiles = bev(state.pos, state.vel, ap, state.mass,
+                            jnp.asarray(mask))
+            jax.block_until_ready(ev.acc)
+        outs[mode] = (ev, np.asarray(tiles))
+        counts[mode] = shifts(reg)
+    assert counts["overlap"] == 2 * (P_DEV - 1), (compaction, counts)
+    assert counts["sync"] == 2 * P_DEV, (compaction, counts)
+    for leaf in ("acc", "jerk", "snap", "pot"):
+        a = np.asarray(getattr(outs["overlap"][0], leaf))
+        b = np.asarray(getattr(outs["sync"][0], leaf))
+        assert np.array_equal(a, b), (compaction, leaf)
+    assert np.array_equal(outs["overlap"][1], outs["sync"][1])
+    print(f"block {compaction}: OK shifts {counts}")
+
+# host-side analytic bound == measured path, bit for bit (the bound is
+# exact for the block schedule, so bucket, tiles and physics all agree)
+bev = make_strategy_block_evaluator(
+    "ring", devices=jax.devices(), impl="xla", block_i=8, block_j=8,
+    compaction="gather")
+ev_m, t_m = bev(state.pos, state.vel, ap, state.mass, jnp.asarray(mask))
+ev_b, t_b = bev(state.pos, state.vel, ap, state.mass, jnp.asarray(mask),
+                jnp.asarray([24, 0], jnp.int32))
+for leaf in ("acc", "jerk", "snap", "pot"):
+    assert np.array_equal(np.asarray(getattr(ev_m, leaf)),
+                          np.asarray(getattr(ev_b, leaf))), leaf
+assert np.array_equal(np.asarray(t_m), np.asarray(t_b))
+print("bound-path: OK")
+print("RING-OVERLAP: OK")
+"""
+
+
+@pytest.mark.slow
+def test_ring_overlap_2dev_counts_and_bitwise():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    res = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert res.returncode == 0, res.stdout + "\n" + res.stderr
+    for impl in ("xla", "pallas_interpret"):
+        for dtype in ("fp32", "mixed"):
+            assert f"lockstep {impl}/{dtype}: OK" in res.stdout
+    assert "block none: OK" in res.stdout
+    assert "block gather: OK" in res.stdout
+    assert "bound-path: OK" in res.stdout
+    assert "RING-OVERLAP: OK" in res.stdout
+
+
+def test_ring_mode_validation():
+    with pytest.raises(ValueError, match="ring_mode"):
+        strategies.make_strategy_evaluator("ring", ring_mode="eager")
+    with pytest.raises(ValueError, match="ring_mode"):
+        strategies.make_strategy_block_evaluator("ring", ring_mode="eager")
+    assert strategies.RING_MODES == ("overlap", "sync")

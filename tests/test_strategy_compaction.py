@@ -95,6 +95,36 @@ for strategy in STRATEGIES:
                                    rtol=0, atol=1e-5)
         print(f"{strategy}/{impl}: OK tiles {tn.sum():.0f} -> {tg.sum():.0f}")
 
+# --sources neighbor rides the vmapped batch engine: the same member
+# duplicated across the 2-device batch axis must match its 1-device
+# evolution bit-for-bit (sharding the batch never touches per-member
+# math), march in lockstep, rebuild windows on the same schedule, and
+# stay within the far-field prediction tier of the all-pairs trajectory
+nkw = dict(t_end=m["t_end"], dt_max=m["dt_max"], n_levels=m["n_levels"],
+           eta=m["eta"], order=m["order"], eps=m["eps"],
+           block_i=8, block_j=8)
+srt = ens.spatial_sort_state(state, leaf=8)
+for impl in sys.argv[3].split(","):
+    two, cn2 = ens.evolve_ensemble_block(
+        [state, state], impl=impl, sources="neighbor",
+        neighbor_radius=0.5, devices=jax.devices()[:2], **nkw)
+    one, cn1 = ens.evolve_ensemble_block(
+        [state, state], impl=impl, sources="neighbor",
+        neighbor_radius=0.5, devices=jax.devices()[:1], **nkw)
+    for leaf in ("pos", "vel"):
+        assert np.array_equal(np.asarray(getattr(two, leaf)),
+                              np.asarray(getattr(one, leaf))), (impl, leaf)
+    assert np.array_equal(np.asarray(two.pos[0]), np.asarray(two.pos[1]))
+    assert np.asarray(cn2.nbr.n_refresh).tolist() \
+        == np.asarray(cn1.nbr.n_refresh).tolist()
+    assert int(cn2.nbr.n_refresh[0]) > 0
+    full, _ = ens.evolve_ensemble_block([srt], impl=impl, **nkw)
+    np.testing.assert_allclose(np.asarray(two.pos[0]),
+                               np.asarray(full.pos[0]), rtol=0, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(two.vel[0]),
+                               np.asarray(full.vel[0]), rtol=0, atol=1e-4)
+    print(f"neighbor/{impl}: OK refreshes {int(cn2.nbr.n_refresh[0])}")
+
 # the committed 2-device fixture replays exactly (same code path + version)
 m2 = doc2["meta"]
 state2 = scenarios.make(m2["scenario"], m2["n"], seed=m2["seed"])
@@ -130,6 +160,7 @@ def test_strategy_compaction_differential_2dev_xla():
     out = _run_differential("xla")
     for strategy in ("replicated", "two_level", "mesh_sharded", "ring"):
         assert f"{strategy}/xla: OK" in out
+    assert "neighbor/xla: OK" in out
     assert "GOLDEN-2DEV: OK" in out
     assert "DIFFERENTIAL: OK" in out
 
@@ -139,6 +170,7 @@ def test_strategy_compaction_differential_2dev_pallas():
     out = _run_differential("pallas_interpret")
     for strategy in ("replicated", "two_level", "mesh_sharded", "ring"):
         assert f"{strategy}/pallas_interpret: OK" in out
+    assert "neighbor/pallas_interpret: OK" in out
     assert "DIFFERENTIAL: OK" in out
 
 
@@ -274,7 +306,16 @@ def test_capacity_plan_shard_restrict_units():
     assert local.n_sources == 256                     # sources stay full
     small = plan.restrict(64)
     assert small.caps == (32, 64)
-    assert plan.restrict(1000).caps == plan.caps      # clamped to the last
+    # exact bucket boundaries select their own bucket as the ceiling
+    assert plan.restrict(256).caps == plan.caps
+    assert plan.restrict(32).caps == (32,)
+    assert plan.restrict(33).caps == (32, 64)
+    # a ceiling above the top bucket is a caller error, not a request for
+    # the full schedule: that member could exceed every launchable bucket
+    with pytest.raises(ValueError, match="capacity range"):
+        plan.restrict(1000)
+    with pytest.raises(ValueError, match="capacity range"):
+        plan.restrict(0)
     with pytest.raises(ValueError, match="shards"):
         plan.shard(3)
     # ring-style plan: per-pass launch per streamed shard
